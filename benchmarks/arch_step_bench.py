@@ -1,0 +1,32 @@
+"""Per-architecture DFL round / decode step wall time on the reduced
+(smoke) configs — CPU-scale sanity numbers for the framework overheads."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core import DFLConfig, init_state, make_gossip, make_train_round
+from repro.data.synthetic import make_model_batch
+from repro.models import build_model
+
+from benchmarks.common import emit, time_fn
+
+
+def run(archs=None):
+    archs = archs or ARCH_IDS
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        m, K, B, S = 4, 2, 2, 32
+        dfl = DFLConfig(algorithm="dfedadmm", m=m, K=K, topology="ring")
+        spec = make_gossip("ring", m)
+        round_fn = jax.jit(make_train_round(model.loss, dfl, spec=spec))
+        state = init_state(params, dfl)
+        batch = jax.tree.map(jnp.asarray,
+                             make_model_batch(cfg, B, S, lead=(m, K)))
+        w = jnp.asarray(spec.matrix, jnp.float32)
+        us = time_fn(lambda s, b, w_: round_fn(s, b, w_)[0], state, batch, w,
+                     warmup=1, iters=3)
+        tokens = m * K * B * S
+        emit(f"arch_step/dfl_round/{arch}", us,
+             f"tok_per_s={tokens / (us / 1e6):.0f}")

@@ -1,0 +1,136 @@
+"""Shared harness for the benchmark suite.
+
+Output contract (benchmarks/run.py): one CSV line per measurement,
+``name,us_per_call,derived`` where ``derived`` is the benchmark-specific
+quality metric (accuracy, rounds-to-target, psi, bytes, ...).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    ROWS.append((name, us_per_call, str(derived)))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# The paper's experimental substrate (synthetic; see DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def mlp_init(dim, n_classes, hidden=48, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": jnp.asarray(rng.normal(size=(dim, hidden)) / np.sqrt(dim),
+                          jnp.float32),
+        "b1": jnp.zeros(hidden),
+        "w2": jnp.asarray(rng.normal(size=(hidden, n_classes)) /
+                          np.sqrt(hidden), jnp.float32),
+        "b2": jnp.zeros(n_classes),
+    }
+
+
+def mlp_logits(params, x):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def ce_loss(params, batch, rng):
+    logits = mlp_logits(params, batch["x"])
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, batch["y"][..., None], -1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+@functools.lru_cache(maxsize=4)
+def fl_task(noise: float = 1.0, seed: int = 0):
+    from repro.data.synthetic import SyntheticClassification
+    return SyntheticClassification(n_classes=10, dim=24, n_train=8000,
+                                   n_test=2000, noise=noise, seed=seed)
+
+
+def accuracy(params, task) -> float:
+    logits = mlp_logits(params, jnp.asarray(task.x_test))
+    return float(np.mean(np.argmax(np.asarray(logits), -1) == task.y_test))
+
+
+def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
+            lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5):
+    """Run a DFL algorithm on the synthetic federated task; returns
+    (final_acc, history, us_per_round)."""
+    from repro.core import DFLConfig, mean_params, simulate
+    task = fl_task()
+    parts = task.partition(m, alpha, seed=seed)
+    sampler0 = task.client_sampler(parts, batch=32, K=K, seed=seed)
+
+    def sampler(t):
+        b = sampler0(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    cfg = DFLConfig(algorithm=algo, m=m, K=K, topology=topology, lr=lr,
+                    lam=lam, rho=rho, degree=min(10, m - 1))
+    params = mlp_init(task.dim, task.n_classes, seed=seed)
+
+    def eval_fn(p):
+        return {"acc": accuracy(p, task)}
+
+    t0 = time.perf_counter()
+    state, hist = simulate(ce_loss, eval_fn, params, cfg, sampler,
+                           rounds=rounds, seed=seed, eval_every=eval_every)
+    dt = time.perf_counter() - t0
+    final_acc = accuracy(mean_params(state.params), task)
+    return final_acc, hist, dt / rounds * 1e6
+
+
+def run_cfl(algo: str, *, rounds: int, alpha, m=16, K=5, lr=0.1, seed=0):
+    from repro.core import CFLConfig, simulate_cfl
+    task = fl_task()
+    parts = task.partition(m, alpha, seed=seed)
+    sampler0 = task.client_sampler(parts, batch=32, K=K, seed=seed)
+
+    def sampler(t, ids):
+        b = sampler0(t)
+        return {"x": jnp.asarray(b["x"][ids]), "y": jnp.asarray(b["y"][ids])}
+
+    cfg = CFLConfig(algorithm=algo, m=m, participation=0.25, K=K, lr=lr)
+    params = mlp_init(task.dim, task.n_classes, seed=seed)
+    t0 = time.perf_counter()
+    state, hist = simulate_cfl(ce_loss, None, params, cfg, sampler,
+                               rounds=rounds, seed=seed)
+    dt = time.perf_counter() - t0
+    return accuracy(state.global_params, task), hist, dt / rounds * 1e6
+
+
+def rounds_to_accuracy(algo, target, *, alpha, max_rounds, kind="dfl", **kw):
+    """Paper Tables 3-5 metric: rounds until test accuracy >= target."""
+    task = fl_task()
+    if kind == "dfl":
+        _, hist, _ = run_dfl(algo, rounds=max_rounds, alpha=alpha,
+                             eval_every=2, **kw)
+        ev = hist["eval"]
+    else:
+        acc, hist, _ = run_cfl(algo, rounds=max_rounds, alpha=alpha, **kw)
+        return max_rounds  # cfl history has no per-round acc; unused path
+    for r, a in zip(ev["round"], ev["acc"]):
+        if a >= target:
+            return r + 1
+    return f">{max_rounds}"

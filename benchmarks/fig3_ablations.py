@@ -1,0 +1,19 @@
+"""Paper Fig. 3 ablations: local steps K, penalty lambda, clients m,
+perturbation radius rho."""
+from benchmarks.common import emit, run_dfl
+
+
+def run(rounds: int = 25):
+    for K in (1, 2, 5, 10):
+        acc, _, us = run_dfl("dfedadmm", rounds=rounds, alpha=0.3, K=K)
+        emit(f"fig3/K={K}", us, f"acc={acc:.4f}")
+    for lam in (0.05, 0.1, 0.2, 0.5):
+        acc, _, us = run_dfl("dfedadmm", rounds=rounds, alpha=0.3, lam=lam)
+        emit(f"fig3/lambda={lam}", us, f"acc={acc:.4f}")
+    for m in (8, 16, 32):
+        acc, _, us = run_dfl("dfedadmm", rounds=rounds, alpha=0.3, m=m)
+        emit(f"fig3/m={m}", us, f"acc={acc:.4f}")
+    for rho in (0.01, 0.05, 0.1, 0.2):
+        acc, _, us = run_dfl("dfedadmm_sam", rounds=rounds, alpha=0.3,
+                             rho=rho)
+        emit(f"fig3/rho={rho}", us, f"acc={acc:.4f}")

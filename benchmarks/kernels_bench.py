@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: fused Pallas ops (interpret mode on CPU — a
+correctness-speed proxy, not TPU wall time) vs the jnp reference, plus
+the arch-scale DFL round step cost on smoke configs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n in (1 << 16, 1 << 20):
+        x, g, d, a = (jnp.asarray(rng.normal(size=n), jnp.float32)
+                      for _ in range(4))
+        f_ref = jax.jit(lambda x, g, d, a: ref.admm_update(
+            x, g, d, a, lr=0.1, lam=0.2))
+        us = time_fn(f_ref, x, g, d, a)
+        emit(f"kernel/admm_update/jnp/n={n}", us, "oracle")
+        f_k = jax.jit(lambda x, g, d, a: ops.admm_update(
+            x, g, d, a, lr=0.1, lam=0.2))
+        us_k = time_fn(f_k, x, g, d, a)
+        err = float(jnp.max(jnp.abs(f_k(x, g, d, a) - f_ref(x, g, d, a))))
+        emit(f"kernel/admm_update/pallas-interpret/n={n}", us_k,
+             f"max_err={err:.2e}")
+
+    m = 16
+    w = jnp.asarray(rng.random((m, m)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(m, 1 << 16)), jnp.float32)
+    f_ref = jax.jit(lambda w, z: ref.gossip_matmul(w, z))
+    emit("kernel/gossip_matmul/jnp/n=65536", time_fn(f_ref, w, z), "oracle")
+    f_k = jax.jit(lambda w, z: ops.gossip_mix_leaf(w, z))
+    err = float(jnp.max(jnp.abs(f_k(w, z) - f_ref(w, z))))
+    emit("kernel/gossip_matmul/pallas-interpret/n=65536",
+         time_fn(f_k, w, z), f"max_err={err:.2e}")
+
+    # fused selective scan (small shape — interpret mode is a Python loop)
+    b, s, d_, n_ = 1, 64, 128, 16
+    x = jnp.asarray(rng.normal(size=(b, s, d_)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, d_))) * 0.1, jnp.float32)
+    a_log = jnp.asarray(rng.normal(size=(d_, n_)) * 0.2, jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, n_)) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, n_)) * 0.5, jnp.float32)
+    dsk = jnp.asarray(rng.normal(size=(d_,)), jnp.float32)
+    h0 = jnp.zeros((b, d_, n_), jnp.float32)
+    f_ref = jax.jit(lambda *a: ref.selective_scan(*a)[0])
+    emit(f"kernel/selective_scan/jnp/s={s}",
+         time_fn(f_ref, x, dt, a_log, bm, cm, dsk, h0), "oracle")
+    f_k = jax.jit(lambda *a: ops.selective_scan(*a)[0])
+    err = float(jnp.max(jnp.abs(f_k(x, dt, a_log, bm, cm, dsk, h0)
+                                - f_ref(x, dt, a_log, bm, cm, dsk, h0))))
+    emit(f"kernel/selective_scan/pallas-interpret/s={s}",
+         time_fn(f_k, x, dt, a_log, bm, cm, dsk, h0), f"max_err={err:.2e}")

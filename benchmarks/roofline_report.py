@@ -1,0 +1,66 @@
+"""Roofline report: aggregates the dry-run artifacts
+(experiments/artifacts/*.json) into the per-(arch x shape x mesh) table of
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def _fmt_t(rec):
+    r = rec["roofline"]
+    return (f"dom={r['dominant']};t_c={r['t_compute_s']:.3e}s;"
+            f"t_m={r['t_memory_s']:.3e}s;t_x={r['t_collective_s']:.3e}s;"
+            f"useful={r['useful_flops_ratio']:.3f}")
+
+
+def run(variant: str | None = None):
+    from repro.launch.dryrun_lib import load_records
+    records = load_records()
+    if not records:
+        emit("roofline/no-artifacts", 0.0,
+             "run `python -m repro.launch.dryrun --all --both-meshes` first")
+        return []
+    rows = []
+    for rec in records:
+        if variant and rec.get("variant") != variant:
+            continue
+        name = (f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}/"
+                f"{rec.get('variant', 'baseline')}")
+        if rec["status"] != "ok":
+            emit(name, 0.0, f"skipped:{rec['reason'][:60]}")
+            continue
+        dom_t = max(rec["roofline"]["t_compute_s"],
+                    rec["roofline"]["t_memory_s"],
+                    rec["roofline"]["t_collective_s"])
+        emit(name, dom_t * 1e6, _fmt_t(rec))
+        rows.append(rec)
+    return rows
+
+
+def markdown_table(records=None) -> str:
+    """Render the §Roofline markdown table from artifacts."""
+    from repro.launch.dryrun_lib import load_records
+    records = records or load_records()
+    lines = [
+        "| arch | shape | mesh | variant | t_comp (s) | t_mem (s) | "
+        "t_coll (s) | dominant | useful FLOPs | args/dev (GB) | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        if rec["status"] != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"{rec.get('variant','-')} | - | - | - | SKIP | - | - | - |")
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]
+        arg_gb = (m.get("argument_bytes") or 0) / 1e9
+        tmp_gb = (m.get("temp_bytes") or 0) / 1e9
+        fits = "yes" if (arg_gb + tmp_gb) < 16.0 else f"NO ({arg_gb+tmp_gb:.0f}GB)"
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{rec.get('variant','-')} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.3f} | "
+            f"{arg_gb:.2f} | {fits} |")
+    return "\n".join(lines)

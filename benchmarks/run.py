@@ -1,0 +1,53 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
+``--quick`` shrinks round counts for CI; default sizes reproduce the
+paper's qualitative orderings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
+          "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", action="append", choices=SUITES)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    suites = args.suite or list(SUITES)
+
+    print("name,us_per_call,derived")
+    if "table1" in suites:
+        from benchmarks import table1_accuracy
+        table1_accuracy.run(rounds=15 if args.quick else 40)
+    if "table2" in suites:
+        from benchmarks import table2_topology
+        table2_topology.run(rounds=12 if args.quick else 30)
+    if "table345" in suites:
+        from benchmarks import table345_convergence
+        table345_convergence.run(max_rounds=16 if args.quick else 40,
+                                 target=0.6 if args.quick else 0.7)
+    if "fig3" in suites:
+        from benchmarks import fig3_ablations
+        fig3_ablations.run(rounds=10 if args.quick else 25)
+    if "kernels" in suites:
+        from benchmarks import kernels_bench
+        kernels_bench.run()
+    if "arch_step" in suites:
+        from benchmarks import arch_step_bench
+        archs = ("llama3-8b", "mixtral-8x7b", "falcon-mamba-7b",
+                 "zamba2-1.2b") if args.quick else None
+        arch_step_bench.run(archs)
+    if "roofline" in suites:
+        from benchmarks import roofline_report
+        roofline_report.run()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Paper Table 1: top-1 accuracy across IID / Dir(0.6) / Dir(0.3) for all
+DFL + CFL methods (synthetic federated task — offline stand-in for
+MNIST/CIFAR; see DESIGN.md §2)."""
+from benchmarks.common import emit, run_cfl, run_dfl
+
+DFL_ALGOS = ("dpsgd", "dfedavg", "dfedavgm", "dfedsam", "dfedadmm",
+             "dfedadmm_sam")
+CFL_ALGOS = ("fedavg", "fedsam", "fedpd")
+PARTITIONS = (("iid", None), ("dir0.6", 0.6), ("dir0.3", 0.3),
+              ("dir0.1", 0.1))
+
+
+def run(rounds: int = 40, m: int = 16):
+    results = {}
+    for pname, alpha in PARTITIONS:
+        for algo in DFL_ALGOS:
+            kw = {"lam": 1.0} if "admm" in algo else {}
+            acc, _, us = run_dfl(algo, rounds=rounds, alpha=alpha, m=m, **kw)
+            emit(f"table1/{pname}/{algo}", us, f"acc={acc:.4f}")
+            results[(pname, algo)] = acc
+        for algo in CFL_ALGOS:
+            acc, _, us = run_cfl(algo, rounds=rounds, alpha=alpha, m=m)
+            emit(f"table1/{pname}/{algo}", us, f"acc={acc:.4f}")
+            results[(pname, algo)] = acc
+    return results

@@ -1,0 +1,25 @@
+"""Paper Table 2 / Fig. 2: accuracy per deterministic topology (Ring,
+Grid, Exp, Full) for the decentralized methods, plus measured spectral
+gaps (Definition 1)."""
+from repro.core import make_gossip
+
+from benchmarks.common import emit, run_dfl
+
+TOPOLOGIES = ("ring", "grid", "exp", "full")
+ALGOS = ("dpsgd", "dfedavg", "dfedavgm", "dfedsam", "dfedadmm",
+         "dfedadmm_sam")
+
+
+def run(rounds: int = 30, m: int = 16):
+    for topo in TOPOLOGIES:
+        psi = make_gossip(topo, m).psi
+        emit(f"table2/psi/{topo}", 0.0, f"psi={psi:.4f}")
+    results = {}
+    for topo in TOPOLOGIES:
+        for algo in ALGOS:
+            kw = {"lam": 1.0} if "admm" in algo else {}
+            acc, _, us = run_dfl(algo, rounds=rounds, alpha=0.1,
+                                 topology=topo, m=m, **kw)
+            emit(f"table2/{topo}/{algo}", us, f"acc={acc:.4f}")
+            results[(topo, algo)] = acc
+    return results

@@ -1,0 +1,27 @@
+"""Paper Tables 3-5: rounds needed to reach a target accuracy (the
+convergence-speed comparison)."""
+from benchmarks.common import emit, fl_task, run_dfl
+
+ALGOS = ("dpsgd", "dfedavg", "dfedavgm", "dfedsam", "dfedadmm",
+         "dfedadmm_sam")
+
+
+def run(max_rounds: int = 40, target: float = 0.70, m: int = 16):
+    results = {}
+    for alpha_name, alpha in (("dir0.1", 0.1), ("dir0.3", 0.3),
+                              ("iid", None)):
+        for algo in ALGOS:
+            kw = {"lam": 1.0, "topology": "ring"} if "admm" in algo else \
+                {"topology": "ring"}
+            _, hist, us = run_dfl(algo, rounds=max_rounds, alpha=alpha, m=m,
+                                  eval_every=2, **kw)
+            ev = hist["eval"]
+            rounds_needed = f">{max_rounds}"
+            for r, a in zip(ev["round"], ev["acc"]):
+                if a >= target:
+                    rounds_needed = r + 1
+                    break
+            emit(f"table345/{alpha_name}/acc@{target}/{algo}", us,
+                 f"rounds={rounds_needed}")
+            results[(alpha_name, algo)] = rounds_needed
+    return results

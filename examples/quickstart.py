@@ -1,0 +1,65 @@
+"""Quickstart: DFedADMM vs DFedAvg on a heterogeneous federated task.
+
+Runs in ~1 minute on CPU:
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DFLConfig, make_gossip, mean_params, simulate
+from repro.data.synthetic import SyntheticClassification
+
+
+def mlp_init(dim, n_classes, hidden=48, seed=0):
+    r = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(r.normal(size=(dim, hidden)) / dim ** 0.5,
+                              jnp.float32),
+            "b1": jnp.zeros(hidden),
+            "w2": jnp.asarray(r.normal(size=(hidden, n_classes)) /
+                              hidden ** 0.5, jnp.float32),
+            "b2": jnp.zeros(n_classes)}
+
+
+def logits_fn(p, x):
+    return jnp.tanh(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def loss_fn(p, batch, rng):
+    lg = logits_fn(p, batch["x"])
+    return jnp.mean(jax.nn.logsumexp(lg, -1) -
+                    jnp.take_along_axis(lg, batch["y"][..., None], -1)[..., 0])
+
+
+def main():
+    m, K, rounds = 16, 5, 20
+    task = SyntheticClassification(n_classes=10, dim=24, n_train=8000,
+                                   n_test=2000, noise=1.0)
+    parts = task.partition(m, alpha=0.1)         # strongly non-IID
+    sampler0 = task.client_sampler(parts, batch=32, K=K)
+
+    def sampler(t):
+        b = sampler0(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    def eval_fn(p):
+        pred = np.argmax(np.asarray(logits_fn(p, jnp.asarray(task.x_test))),
+                         -1)
+        return {"acc": float(np.mean(pred == task.y_test))}
+
+    params = mlp_init(task.dim, task.n_classes)
+    print(f"== {m} clients, Dirichlet(0.1), ring topology, K={K} ==")
+    for algo in ("dfedavg", "dfedadmm", "dfedadmm_sam"):
+        cfg = DFLConfig(algorithm=algo, m=m, K=K, topology="ring", lam=1.0)
+        state, hist = simulate(loss_fn, eval_fn, params, cfg, sampler,
+                               rounds=rounds, eval_every=10)
+        acc = eval_fn(mean_params(state.params))["acc"]
+        print(f"{algo:14s} final acc={acc:.3f} "
+              f"consensus^2={hist['consensus_sq'][-1]:.4f} "
+              f"loss={hist['loss'][-1]:.3f}")
+    print("\nUnder strong heterogeneity the dual-corrected local steps lift "
+          "accuracy and speed up convergence (paper Tables 1 & 3-5).")
+
+
+if __name__ == "__main__":
+    main()

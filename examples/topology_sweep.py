@@ -1,0 +1,46 @@
+"""Reproduce the paper's topology study (Table 2 / Fig. 2): accuracy of
+DFedADMM under Ring / Grid / Exp / Full topologies, with the measured
+spectral gap 1-psi for each.
+
+    PYTHONPATH=src python examples/topology_sweep.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DFLConfig, make_gossip, mean_params, simulate
+from repro.data.synthetic import SyntheticClassification
+
+from quickstart import loss_fn, logits_fn, mlp_init
+
+
+def main():
+    m, rounds = 16, 25
+    task = SyntheticClassification(n_classes=10, dim=24, n_train=8000,
+                                   n_test=2000, noise=1.0)
+    parts = task.partition(m, alpha=0.3)
+    sampler0 = task.client_sampler(parts, batch=32, K=5)
+
+    def sampler(t):
+        b = sampler0(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    params = mlp_init(task.dim, task.n_classes)
+    print(f"{'topology':10s} {'psi':>8s} {'1-psi':>8s} {'acc':>7s}")
+    for topo in ("ring", "grid", "exp", "full"):
+        spec = make_gossip(topo, m)
+        cfg = DFLConfig(algorithm="dfedadmm", m=m, K=5, topology=topo,
+                        lam=0.2)
+        state, _ = simulate(loss_fn, None, params, cfg, sampler,
+                            rounds=rounds)
+        pred = np.argmax(np.asarray(
+            logits_fn(mean_params(state.params), jnp.asarray(task.x_test))),
+            -1)
+        acc = float(np.mean(pred == task.y_test))
+        print(f"{topo:10s} {spec.psi:8.4f} {spec.spectral_gap:8.4f} "
+              f"{acc:7.3f}")
+    print("\nBetter-connected topologies (larger spectral gap) converge to "
+          "higher accuracy — Corollary 1.")
+
+
+if __name__ == "__main__":
+    main()

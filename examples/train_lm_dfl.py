@@ -1,0 +1,74 @@
+"""End-to-end driver: decentralized federated training of a transformer
+LM with DFedADMM-SAM over heterogeneous synthetic token streams.
+
+Presets:
+  tiny  (default) — 2L/128d  ~1.9M params, 60 rounds, minutes on CPU.
+  100m            — 12L/768d ~100M params; run on a real mesh (the paper's
+                    technique is round-identical, only the substrate grows).
+
+    PYTHONPATH=src python examples/train_lm_dfl.py --preset tiny
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DFLConfig, mean_params, simulate
+from repro.data.synthetic import make_dfl_lm_sampler, make_model_batch
+from repro.models import build_model
+
+PRESETS = {
+    "tiny": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+                 d_ff=256, vocab_size=256, rounds=60, m=8, K=2, batch=8,
+                 seq=64),
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 d_ff=2048, vocab_size=32000, rounds=300, m=16, K=5,
+                 batch=16, seq=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--algorithm", default="dfedadmm_sam")
+    ap.add_argument("--rounds", type=int, default=0)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    rounds = args.rounds or p["rounds"]
+
+    cfg = ModelConfig(name=f"lm-{args.preset}", arch_type="dense",
+                      num_layers=p["num_layers"], d_model=p["d_model"],
+                      num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+                      d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+                      rope_theta=1e4, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[lm-dfl] {cfg.name}: {model.param_count(params):,} params, "
+          f"m={p['m']} K={p['K']} algo={args.algorithm}")
+
+    dfl = DFLConfig(algorithm=args.algorithm, m=p["m"], K=p["K"], lr=0.05,
+                    lam=0.5, rho=0.05, topology="ring")
+    sampler = make_dfl_lm_sampler(cfg, p["m"], p["K"], p["batch"], p["seq"])
+    eval_batch = jax.tree.map(jnp.asarray,
+                              make_model_batch(cfg, p["batch"], p["seq"],
+                                               seed=777))
+
+    def eval_fn(pm):
+        return {"eval_loss": float(model.loss(pm, eval_batch, None))}
+
+    t0 = time.time()
+    state, hist = simulate(model.loss, eval_fn, params, dfl, sampler,
+                           rounds=rounds, eval_every=max(rounds // 6, 1),
+                           verbose=True)
+    print(f"[lm-dfl] {rounds} rounds in {time.time()-t0:.0f}s; "
+          f"loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}; "
+          f"consensus^2 {hist['consensus_sq'][-1]:.5f}")
+    assert hist["loss"][-1] < hist["loss"][0], "LM did not learn"
+
+
+if __name__ == "__main__":
+    main()

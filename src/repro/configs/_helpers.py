@@ -1,0 +1,40 @@
+"""Shared helpers for per-architecture config modules."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+def reduce_for_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts,
+    small vocab — runs a forward/train step on CPU in seconds."""
+    heads = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    kv = max(1, min(cfg.num_kv_heads, heads)) if heads else 0
+    if heads and cfg.num_kv_heads and cfg.num_heads // cfg.num_kv_heads > 1:
+        kv = max(1, heads // max(1, cfg.num_heads // cfg.num_kv_heads))
+    upd = dict(
+        num_layers=2,
+        d_model=min(cfg.d_model, 256),
+        num_heads=heads,
+        num_kv_heads=kv,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 1024),
+        head_dim=min(cfg.resolved_head_dim, 64) if heads else 0,
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2)
+        if cfg.experts_per_token else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=min(cfg.ssm_head_dim, 16),
+        ssm_chunk=16,
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
+        prefix_tokens=min(cfg.prefix_tokens, 8) if cfg.prefix_tokens else 0,
+        hybrid_attn_every=min(cfg.hybrid_attn_every, 1)
+        if cfg.hybrid_attn_every else 0,
+        dtype="float32",
+        loss_chunk=0,
+    )
+    if cfg.local_global_ratio:
+        upd["num_layers"] = cfg.local_global_ratio + 1  # one full pattern
+    upd.update(overrides)
+    return dataclasses.replace(cfg, **upd)

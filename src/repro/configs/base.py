@@ -1,0 +1,162 @@
+"""Config system: model architecture + parallelism + DFL hyperparameters.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG`` (the full published size) and ``smoke_config()`` (a reduced
+2-layer variant for CPU tests).  ``repro.configs.registry`` resolves
+``--arch <id>`` strings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str               # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int = 0           # 0 for attention-free archs
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    source: str = ""             # citation bracket from the assignment
+
+    # attention flavour
+    rope_theta: float = 500000.0
+    sliding_window: int = 0      # 0 -> full attention
+    local_global_ratio: int = 0  # gemma3: N local layers per 1 global
+    prefix_tokens: int = 0       # VLM: bidirectional prefix length (patches)
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+    moe_group_size: int = 4096   # GShard token-group size (0 -> one group)
+    expert_sharding: str = "tensor"   # "tensor" (shard d_ff) | "expert" (shard E)
+
+    # SSM
+    ssm_variant: str = ""        # "mamba1" | "mamba2"
+    ssm_kernel: bool = False     # route mamba1 prefill through the fused
+                                 # Pallas selective-scan (serving path;
+                                 # no VJP — training uses chunked_ssm)
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    ssm_head_dim: int = 64       # mamba2
+    ssm_chunk: int = 128         # chunked selective-scan length
+
+    # hybrid (zamba2-style): shared attention block every N ssm layers
+    hybrid_attn_every: int = 0
+
+    # modality frontend stub ("" | "audio" | "vision")
+    frontend: str = ""
+
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    loss_chunk: int = 0          # 0 -> full-logit CE; >0 -> chunked CE
+
+    def __post_init__(self):
+        if self.arch_type not in ("dense", "moe", "ssm", "hybrid", "vlm", "audio"):
+            raise ValueError(f"bad arch_type {self.arch_type!r}")
+        if self.arch_type in ("dense", "moe", "vlm", "audio") and self.num_heads <= 0:
+            raise ValueError(f"{self.name}: attention archs need num_heads")
+        if self.arch_type == "moe" and self.num_experts <= 0:
+            raise ValueError(f"{self.name}: moe needs experts")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return math.ceil(self.d_model / 16)
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.arch_type in ("dense", "moe", "vlm", "audio", "hybrid")
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (per DESIGN.md §5)."""
+        return (self.arch_type in ("ssm", "hybrid")
+                or self.sliding_window > 0 or self.local_global_ratio > 0)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used by config sanity tests)."""
+        d, v, L = self.d_model, self.vocab_size, self.num_layers
+        total = v * d                      # embed
+        if not self.tie_embeddings:
+            total += d * v                 # lm_head
+        hd = self.resolved_head_dim
+        per_layer = 0
+        if self.arch_type in ("dense", "moe", "vlm", "audio"):
+            qkv = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+            per_layer += qkv + self.num_heads * hd * d + 2 * d   # attn + norms
+            if self.arch_type == "moe":
+                per_layer += d * self.num_experts                # router
+                per_layer += self.num_experts * 3 * d * self.d_ff
+            else:
+                per_layer += 3 * d * self.d_ff
+        elif self.arch_type == "ssm":
+            di, st, dr = self.d_inner, self.ssm_state, self.dt_rank
+            per_layer += d * 2 * di + self.d_conv * di + di       # in_proj+conv
+            per_layer += di * (dr + 2 * st) + dr * di + di        # x_proj,dt
+            per_layer += di * st + di + di * d + d                # A,D,out,norm
+        elif self.arch_type == "hybrid":
+            di, st = self.d_inner, self.ssm_state
+            nh = self.ssm_heads
+            per_layer += d * (2 * di + 2 * st + nh) + self.d_conv * di + di
+            per_layer += 2 * nh + di * d + d + di                 # A,D,out,norms
+        total += L * per_layer
+        if self.arch_type == "hybrid" and self.hybrid_attn_every:
+            qkv = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+            total += qkv + self.num_heads * hd * d + 3 * d * self.d_ff + 2 * d
+        if self.arch_type == "audio":
+            total -= v * d  # no input embedding table (frame embeds from stub)
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6·N_active·D)."""
+        if self.arch_type != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        dense = self.param_count() - L * self.num_experts * 3 * d * self.d_ff
+        return dense + L * self.experts_per_token * 3 * d * self.d_ff
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How a config maps onto the production mesh."""
+    client_axis: str = "data"    # DFL client axis: "data" (m=16) or "pod" (m=2)
+    batch_axes: tuple = ("pod",)  # per-client batch data-parallel axes
+    tensor_axis: str = "model"
+    fsdp_axis: str = ""          # optional param sharding axis within client
+    dfl_m: int = 16
+    dfl_k: int = 2               # inner steps lowered in the dry-run
+    microbatches: int = 1        # grad-accum splits per inner step
+    mixing: str = "dense"
+    topology: str = "ring"
+    remat: bool = False          # activation checkpointing per layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchBundle:
+    model: ModelConfig
+    parallel: ParallelConfig = ParallelConfig()
+    extra: dict[str, Any] = dataclasses.field(default_factory=dict)

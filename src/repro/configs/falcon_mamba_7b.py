@@ -1,0 +1,14 @@
+"""falcon-mamba-7b — attention-free Mamba-1 [arXiv:2410.05355]."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="falcon-mamba-7b", arch_type="ssm", num_layers=64, d_model=4096,
+    d_ff=0, vocab_size=65024, ssm_variant="mamba1", ssm_state=16,
+    expand=2, d_conv=4, ssm_chunk=256, source="arXiv:2410.05355",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

@@ -1,0 +1,16 @@
+"""gemma3-12b — 5:1 local:global attention, 256k vocab, head_dim 256
+[hf:google/gemma-3-1b-pt family]."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="gemma3-12b", arch_type="dense", num_layers=48, d_model=3840,
+    num_heads=16, num_kv_heads=8, d_ff=15360, vocab_size=262144,
+    head_dim=256, rope_theta=1e6, sliding_window=1024, local_global_ratio=5,
+    source="hf:google/gemma-3-1b-pt",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

@@ -1,0 +1,18 @@
+"""llama3-405b — 126-layer dense GQA flagship [arXiv:2407.21783].
+
+At m=16 DFL replicas this cannot fit one v5e pod (see EXPERIMENTS.md
+§Roofline); the multi-pod client_axis="pod" + FSDP variant is the
+deployable configuration (§Perf)."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="llama3-405b", arch_type="dense", num_layers=126, d_model=16384,
+    num_heads=128, num_kv_heads=8, d_ff=53248, vocab_size=128256,
+    head_dim=128, rope_theta=5e5, source="arXiv:2407.21783",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig(remat=True))
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

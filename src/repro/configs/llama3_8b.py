@@ -1,0 +1,14 @@
+"""llama3-8b — dense GQA, 128k vocab [arXiv:2407.21783]."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="llama3-8b", arch_type="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=128256,
+    head_dim=128, rope_theta=5e5, source="arXiv:2407.21783",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

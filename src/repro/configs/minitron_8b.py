@@ -1,0 +1,14 @@
+"""minitron-8b — width-pruned Nemotron-4 15B [arXiv:2407.14679]."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="minitron-8b", arch_type="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, d_ff=16384, vocab_size=256000,
+    head_dim=128, rope_theta=1e4, source="arXiv:2407.14679",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

@@ -1,0 +1,17 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088].  Experts use per-expert tensor parallelism."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="mixtral-8x7b", arch_type="moe", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=32000,
+    head_dim=128, rope_theta=1e6, sliding_window=4096,
+    num_experts=8, experts_per_token=2, expert_sharding="tensor",
+    source="arXiv:2401.04088",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

@@ -1,0 +1,16 @@
+"""musicgen-large — decoder-only LM over EnCodec audio tokens
+[arXiv:2306.05284].  The EnCodec/conv frontend is a stub: ``input_specs``
+supplies precomputed frame embeddings (B, S, d_model)."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="musicgen-large", arch_type="audio", num_layers=48, d_model=2048,
+    num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=2048,
+    rope_theta=1e4, frontend="audio", source="arXiv:2306.05284",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

@@ -1,0 +1,19 @@
+"""paligemma-3b — SigLIP + Gemma VLM [arXiv:2407.07726].
+
+The SigLIP vision tower + projector is a stub per the assignment:
+``input_specs`` supplies 256 precomputed patch embeddings (B, 256,
+d_model) which attend bidirectionally (prefix-LM mask)."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="paligemma-3b", arch_type="vlm", num_layers=18, d_model=2048,
+    num_heads=8, num_kv_heads=1, d_ff=16384, vocab_size=257216,
+    head_dim=256, rope_theta=1e4, prefix_tokens=256, frontend="vision",
+    source="arXiv:2407.07726",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

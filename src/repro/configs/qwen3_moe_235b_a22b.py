@@ -1,0 +1,17 @@
+"""qwen3-moe-235b-a22b — 128-expert top-8 MoE [hf:Qwen/Qwen3-30B-A3B
+family].  Experts sharded over the ``model`` axis (8 experts/device);
+d_ff=1536 stays unsharded."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="qwen3-moe-235b-a22b", arch_type="moe", num_layers=94, d_model=4096,
+    num_heads=64, num_kv_heads=4, d_ff=1536, vocab_size=151936,
+    head_dim=128, rope_theta=1e6, num_experts=128, experts_per_token=8,
+    expert_sharding="expert", source="hf:Qwen/Qwen3-30B-A3B",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig(remat=True))
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

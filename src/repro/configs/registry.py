@@ -1,0 +1,43 @@
+"""--arch <id> resolution for launchers, tests and benchmarks."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchBundle, ModelConfig
+
+ARCH_IDS = (
+    "minitron-8b", "musicgen-large", "llama3-8b", "falcon-mamba-7b",
+    "mixtral-8x7b", "llama3-405b", "gemma3-12b", "zamba2-1.2b",
+    "paligemma-3b", "qwen3-moe-235b-a22b",
+)
+
+_MODULES = {
+    "minitron-8b": "minitron_8b",
+    "musicgen-large": "musicgen_large",
+    "llama3-8b": "llama3_8b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama3-405b": "llama3_405b",
+    "gemma3-12b": "gemma3_12b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "paligemma-3b": "paligemma_3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_bundle(arch_id: str) -> ArchBundle:
+    return _module(arch_id).CONFIG
+
+
+def get_model_config(arch_id: str) -> ModelConfig:
+    return get_bundle(arch_id).model
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()

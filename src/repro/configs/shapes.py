@@ -1,0 +1,97 @@
+"""The four assigned input shapes and ``input_specs`` builders.
+
+Decode shapes lower ``serve_step`` (one token + KV/SSM cache); training
+shapes lower the DFL ``train_round`` (the paper's technique).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_batch_specs(cfg: ModelConfig, batch: int, seq: int, *,
+                       lead: tuple = ()) -> dict:
+    """ShapeDtypeStruct stand-ins for one model batch (weak-type correct)."""
+    specs: dict = {}
+    emb_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.arch_type == "audio":
+        specs["embeds"] = _sds(lead + (batch, seq, cfg.d_model), emb_dtype)
+        specs["labels"] = _sds(lead + (batch, seq), jnp.int32)
+        return specs
+    ntok = seq - cfg.prefix_tokens
+    specs["tokens"] = _sds(lead + (batch, ntok), jnp.int32)
+    specs["labels"] = _sds(lead + (batch, ntok), jnp.int32)
+    if cfg.arch_type == "vlm":
+        specs["embeds"] = _sds(lead + (batch, cfg.prefix_tokens, cfg.d_model),
+                               emb_dtype)
+    return specs
+
+
+def train_input_specs(cfg: ModelConfig, par: ParallelConfig,
+                      shape: InputShape) -> dict:
+    """DFL training batch: leaves (m, K, b_local, ...)."""
+    m, K = par.dfl_m, par.dfl_k
+    if shape.global_batch % m:
+        raise ValueError(f"global_batch {shape.global_batch} not divisible "
+                         f"by m={m}")
+    b_local = shape.global_batch // m
+    return _token_batch_specs(cfg, b_local, shape.seq_len, lead=(m, K))
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    return _token_batch_specs(cfg, shape.global_batch, shape.seq_len)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """One new token + a cache covering ``seq_len`` positions."""
+    b = shape.global_batch
+    emb_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.arch_type == "audio":
+        token = _sds((b, 1, cfg.d_model), emb_dtype)
+    else:
+        token = _sds((b,), jnp.int32)
+    cache = model_lib.cache_shapes(cfg, b, shape.seq_len)
+    return {"token": token, "cache": cache}
+
+
+def input_specs(cfg: ModelConfig, par: ParallelConfig, shape_name: str) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, par, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason) — long_500k is skipped for pure full-attention archs
+    per DESIGN.md §5."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention architecture: no sub-quadratic "
+                       "variant published; skipped per spec")
+    return True, ""

@@ -1,0 +1,17 @@
+"""zamba2-1.2b — Mamba-2 backbone with a shared attention block applied
+every 6 layers [arXiv:2411.15242]."""
+from repro.configs._helpers import reduce_for_smoke
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="zamba2-1.2b", arch_type="hybrid", num_layers=38, d_model=2048,
+    num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=32000,
+    rope_theta=1e4, ssm_variant="mamba2", ssm_state=64, ssm_head_dim=64,
+    expand=2, d_conv=4, ssm_chunk=256, hybrid_attn_every=6,
+    source="arXiv:2411.15242",
+)
+CONFIG = ArchBundle(model=MODEL, parallel=ParallelConfig())
+
+
+def smoke_config() -> ModelConfig:
+    return reduce_for_smoke(MODEL)

@@ -1,0 +1,15 @@
+"""Core library: the paper's contribution (DFedADMM / DFedADMM-SAM) plus
+the gossip substrate and every baseline the paper compares against."""
+from repro.core.admm import (ADMMHParams, client_round, dual_update, gamma,
+                             gamma_k, lemma2_delta, lemma3_dual, local_step,
+                             message)
+from repro.core.dfl import (ALGORITHMS, DFLConfig, DFLState, consensus_distance,
+                            init_state, make_train_round, mean_params, simulate)
+from repro.core.gossip import (GossipSpec, TOPOLOGIES, adjacency, make_gossip,
+                               metropolis_weights, spectral_psi,
+                               time_varying_specs, uniform_weights,
+                               validate_gossip_matrix)
+from repro.core.mixing import mix, mix_dense, mix_ppermute, mix_ppermute_local
+from repro.core.sam import global_norm, perturb, sam_grad_fn, sam_value_and_grad
+from repro.core.baselines import (CFLConfig, CFLState, init_cfl_state,
+                                  make_cfl_round, simulate_cfl)

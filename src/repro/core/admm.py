@@ -1,0 +1,156 @@
+"""DFedADMM primal/dual updates (Algorithm 1 of the paper).
+
+Everything operates on parameter *pytrees* so the same code drives the
+paper's MLP/CNN backbones and the assigned LLM-class architectures.
+
+Notation (paper -> code):
+  x_i^t        anchor      post-gossip round-start model of client i
+  x_{i,k}^t    params      inner-iterate during the K local steps
+  g_hat_i^t    dual        the dual variable ("local gradient controller")
+  lambda       lam         ADMM penalty parameter
+  eta_l        lr          local learning rate
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMHParams:
+    lam: float = 0.1        # penalty parameter lambda (paper default 0.1)
+    lr: float = 0.1         # local learning rate eta_l
+    rho: float = 0.0        # SAM radius (0 -> plain DFedADMM)
+    use_kernel: bool = False  # route the fused update through the Pallas kernel
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def local_step(params: PyTree, grads: PyTree, dual: PyTree, anchor: PyTree,
+               *, lr: float, lam: float, use_kernel: bool = False) -> PyTree:
+    """One inner iterate (Alg. 1 line 13 / Eq. 6):
+
+        x_{k+1} = x_k - lr * ( g - dual + (x_k - anchor)/lam )
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return jax.tree.map(
+            lambda x, g, d, a: kops.admm_update(x, g, d, a, lr=lr, lam=lam),
+            params, grads, dual, anchor)
+    inv_lam = 1.0 / lam
+
+    def leaf(x, g, d, a):
+        # f32 math, param dtype out (lr may be a traced f32 scalar; do not
+        # let it promote bf16 state).
+        xf = x.astype(jnp.float32)
+        upd = (g.astype(jnp.float32) - d.astype(jnp.float32)
+               + inv_lam * (xf - a.astype(jnp.float32)))
+        return (xf - lr * upd).astype(x.dtype)
+
+    return jax.tree.map(leaf, params, grads, dual, anchor)
+
+
+def dual_update(dual: PyTree, params_k: PyTree, anchor: PyTree, *, lam: float
+                ) -> PyTree:
+    """Alg. 1 line 16:  g_hat^t = g_hat^{t-1} - (x_K - anchor)/lam."""
+    inv_lam = 1.0 / lam
+    return jax.tree.map(lambda d, xk, a: d - inv_lam * (xk - a),
+                        dual, params_k, anchor)
+
+
+def message(params_k: PyTree, dual_prev: PyTree, *, lam: float) -> PyTree:
+    """Alg. 1 line 17:  z = x_K - lam * g_hat^{t-1}  (uses the OLD dual)."""
+    return jax.tree.map(lambda xk, d: xk - lam * d, params_k, dual_prev)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form helpers (Appendix Lemmas 2 & 3) — used by tests to pin the
+# implementation to the paper's math.
+# ---------------------------------------------------------------------------
+
+def gamma(lr: float, lam: float, K: int) -> float:
+    """gamma = 1 - (1 - lr/lam)^K."""
+    return 1.0 - (1.0 - lr / lam) ** K
+
+
+def gamma_k(lr: float, lam: float, K: int) -> jnp.ndarray:
+    """gamma_k = (lr/lam) (1 - lr/lam)^{K-1-k}, k = 0..K-1.  Sums to gamma."""
+    r = lr / lam
+    ks = jnp.arange(K)
+    return r * (1.0 - r) ** (K - 1 - ks)
+
+
+def lemma2_delta(grads_seq: PyTree, dual_prev: PyTree, *, lr: float,
+                 lam: float, K: int) -> PyTree:
+    """Closed form of x_K - anchor given the recorded inner gradients.
+
+    grads_seq: pytree whose leaves have a leading axis of length K holding
+    the stochastic gradients g_{i,k} actually used at each inner step.
+
+        x_K - anchor = -lam * sum_k gamma_k g_k + gamma * lam * dual_prev
+    """
+    gk = gamma_k(lr, lam, K)
+    g = gamma(lr, lam, K)
+
+    def leaf(gs, d):
+        shaped = gk.reshape((K,) + (1,) * (gs.ndim - 1)).astype(gs.dtype)
+        return -lam * jnp.sum(shaped * gs, axis=0) + g * lam * d
+
+    return jax.tree.map(leaf, grads_seq, dual_prev)
+
+
+def lemma3_dual(grads_seq: PyTree, dual_prev: PyTree, *, lr: float,
+                lam: float, K: int) -> PyTree:
+    """Closed form of the new dual (Lemma 3):
+
+        g_hat^t = (1-gamma) g_hat^{t-1} + sum_k gamma_k g_k
+    """
+    gk = gamma_k(lr, lam, K)
+    g = gamma(lr, lam, K)
+
+    def leaf(gs, d):
+        shaped = gk.reshape((K,) + (1,) * (gs.ndim - 1)).astype(gs.dtype)
+        return (1.0 - g) * d + jnp.sum(shaped * gs, axis=0)
+
+    return jax.tree.map(leaf, grads_seq, dual_prev)
+
+
+# ---------------------------------------------------------------------------
+# A full client-local round (K steps + dual + message), independent of how
+# clients are laid out (vmap simulation or mesh-sharded).
+# ---------------------------------------------------------------------------
+
+def client_round(loss_grad_fn: Callable[[PyTree, Any, jax.Array], PyTree],
+                 anchor: PyTree, dual: PyTree, batches: Any, rng: jax.Array,
+                 hp: ADMMHParams, K: int,
+                 record_grads: bool = False):
+    """Run Alg. 1 lines 3-17 for one client.
+
+    loss_grad_fn(params, batch, rng) -> grads pytree (already SAM-perturbed
+    when hp.rho > 0; see core/sam.py).
+    batches: pytree with leading axis K (one minibatch per inner step).
+    Returns (params_K, new_dual, z, grads_seq|None).
+    """
+
+    def body(carry, inp):
+        params, rng_ = carry
+        batch, k = inp
+        rng_, sub = jax.random.split(rng_)
+        grads = loss_grad_fn(params, batch, sub)
+        new_params = local_step(params, grads, dual, anchor,
+                                lr=hp.lr, lam=hp.lam, use_kernel=hp.use_kernel)
+        out = grads if record_grads else None
+        return (new_params, rng_), out
+
+    ks = jnp.arange(K)
+    (params_K, _), grads_seq = jax.lax.scan(body, (anchor, rng), (batches, ks))
+    new_dual = dual_update(dual, params_K, anchor, lam=hp.lam)
+    z = message(params_K, dual, lam=hp.lam)
+    return params_K, new_dual, z, grads_seq

@@ -1,0 +1,146 @@
+"""Centralized-FL baselines the paper compares against: FedAvg, FedSAM,
+and FedPD (the ADMM ancestor, Eqs. 3-5).
+
+Decentralized baselines (D-PSGD, DFedAvg, DFedAvgM, DFedSAM) live in
+``core/dfl.py`` since they share the gossip round structure.
+
+These are intentionally simple single-device simulators (vmap over the
+sampled cohort); they exist for the faithful-reproduction experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm, sam
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CFLConfig:
+    algorithm: str = "fedavg"     # fedavg | fedsam | fedpd
+    m: int = 100                  # total clients
+    participation: float = 0.1    # cohort fraction per round
+    K: int = 5
+    lr: float = 0.1
+    lr_decay: float = 0.998
+    global_lr: float = 1.0
+    rho: float = 0.1              # fedsam
+    lam: float = 0.1              # fedpd
+    weight_decay: float = 5e-4
+
+    @property
+    def cohort(self) -> int:
+        return max(1, int(round(self.m * self.participation)))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CFLState:
+    global_params: PyTree
+    dual: PyTree                  # (m, ...) — fedpd only (zeros otherwise)
+    rng: jax.Array
+    round: jax.Array
+
+
+def init_cfl_state(params: PyTree, cfg: CFLConfig, seed: int = 0) -> CFLState:
+    dual = jax.tree.map(
+        lambda x: jnp.zeros((cfg.m,) + x.shape, x.dtype), params)
+    return CFLState(global_params=params, dual=dual,
+                    rng=jax.random.PRNGKey(seed),
+                    round=jnp.zeros((), jnp.int32))
+
+
+def make_cfl_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
+                   cfg: CFLConfig):
+    """Build ``round_fn(state, cohort_ids, batches) -> (state, metrics)``.
+
+    ``cohort_ids``: (cohort,) int32 client indices sampled by the caller.
+    ``batches`` leaves: (cohort, K, ...).
+    """
+    rho = cfg.rho if cfg.algorithm == "fedsam" else 0.0
+    loss_and_grad = sam.sam_value_and_grad(loss_fn, rho)
+    use_wd = cfg.algorithm in ("fedavg", "fedsam")
+
+    def client_update(x0, dual_i, batches_k, rng, lr_t):
+        if cfg.algorithm == "fedpd":
+            def body(carry, batch):
+                params, rng_ = carry
+                rng_, sub = jax.random.split(rng_)
+                l, g = loss_and_grad(params, batch, sub)
+                params = admm.local_step(params, g, dual_i, x0,
+                                         lr=lr_t, lam=cfg.lam)
+                return (params, rng_), l
+
+            (xk, _), losses = jax.lax.scan(body, (x0, rng), batches_k)
+            new_dual = admm.dual_update(dual_i, xk, x0, lam=cfg.lam)
+            # FedPD Eq. 5 server message: x_i - lam * g_hat_i^{t+1}
+            msg = jax.tree.map(lambda p, d: p - cfg.lam * d, xk, new_dual)
+            return msg, new_dual, jnp.mean(losses)
+
+        def body(carry, batch):
+            params, rng_ = carry
+            rng_, sub = jax.random.split(rng_)
+            l, g = loss_and_grad(params, batch, sub)
+            if use_wd and cfg.weight_decay:
+                g = jax.tree.map(lambda gi, p: gi + cfg.weight_decay * p,
+                                 g, params)
+            params = jax.tree.map(lambda p, gi: p - lr_t * gi, params, g)
+            return (params, rng_), l
+
+        (xk, _), losses = jax.lax.scan(body, (x0, rng), batches_k)
+        return xk, dual_i, jnp.mean(losses)
+
+    def round_fn(state: CFLState, cohort_ids: jax.Array, batches: PyTree):
+        lr_t = cfg.lr * (cfg.lr_decay ** state.round.astype(jnp.float32))
+        rng, *subs = jax.random.split(state.rng, cfg.cohort + 1)
+        subs = jnp.stack(subs)
+        cohort_dual = jax.tree.map(lambda d: d[cohort_ids], state.dual)
+
+        msgs, new_duals, losses = jax.vmap(
+            client_update, in_axes=(None, 0, 0, 0, None)
+        )(state.global_params, cohort_dual, batches, subs, lr_t)
+
+        mean_msg = jax.tree.map(lambda z: jnp.mean(z, axis=0), msgs)
+        if cfg.algorithm == "fedpd":
+            new_global = mean_msg
+        else:
+            # server step: x0 + global_lr * (mean(x_i) - x0)
+            new_global = jax.tree.map(
+                lambda x0, z: x0 + cfg.global_lr * (z - x0),
+                state.global_params, mean_msg)
+
+        dual = jax.tree.map(lambda d, nd: d.at[cohort_ids].set(nd),
+                            state.dual, new_duals)
+        new_state = CFLState(global_params=new_global, dual=dual, rng=rng,
+                             round=state.round + 1)
+        return new_state, {"loss": jnp.mean(losses), "lr": lr_t}
+
+    return round_fn
+
+
+def simulate_cfl(loss_fn, eval_fn, params: PyTree, cfg: CFLConfig,
+                 sample_batches: Callable[[int, Any], PyTree], rounds: int,
+                 seed: int = 0, eval_every: int = 10):
+    """sample_batches(t, cohort_ids) -> leaves (cohort, K, ...)."""
+    import numpy as np
+    round_fn = jax.jit(make_cfl_round(loss_fn, cfg))
+    state = init_cfl_state(params, cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    history: dict[str, list] = {"round": [], "loss": [], "eval": {}}
+    for t in range(rounds):
+        ids = rng.choice(cfg.m, size=cfg.cohort, replace=False)
+        batches = sample_batches(t, ids)
+        state, metrics = round_fn(state, jnp.asarray(ids), batches)
+        history["round"].append(t)
+        history["loss"].append(float(metrics["loss"]))
+        if eval_fn is not None and ((t + 1) % eval_every == 0 or t == rounds - 1):
+            ev = eval_fn(state.global_params)
+            history["eval"].setdefault("round", []).append(t)
+            for k, v in ev.items():
+                history["eval"].setdefault(k, []).append(float(v))
+    return state, history

@@ -1,0 +1,243 @@
+"""Gossip/mixing matrices for decentralized federated learning.
+
+Implements the communication topologies of the paper (Figure 1):
+Ring, Grid (2-D torus), Exponential, Fully-connected, and the
+"Random" time-varying topology used in Sec. 5.2 / 5.4, plus the
+Definition-1 properties (symmetry, double stochasticity, null-space,
+spectral bounds) and the spectral gap ``1 - psi``.
+
+All matrices are plain ``numpy`` float64 on the host — they are tiny
+(m x m) and are consumed either by the dense-mixing einsum or to derive
+the neighbor lists for the ``ppermute`` mixing path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+TOPOLOGIES = ("ring", "grid", "exp", "full", "random")
+
+
+def _check_m(m: int) -> None:
+    if m < 2:
+        raise ValueError(f"gossip needs at least 2 clients, got m={m}")
+
+
+# ---------------------------------------------------------------------------
+# Adjacency construction (excluding self loops)
+# ---------------------------------------------------------------------------
+
+def ring_adjacency(m: int) -> np.ndarray:
+    """Each client talks to its two ring neighbours (1 for m==2)."""
+    _check_m(m)
+    adj = np.zeros((m, m), dtype=bool)
+    for i in range(m):
+        adj[i, (i + 1) % m] = True
+        adj[i, (i - 1) % m] = True
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def grid_adjacency(m: int) -> np.ndarray:
+    """2-D torus grid.  Requires m = r*c with r,c >= 2 (near-square)."""
+    _check_m(m)
+    r = int(np.floor(np.sqrt(m)))
+    while m % r != 0:
+        r -= 1
+    c = m // r
+    if r == 1:  # degenerate grid -> ring
+        return ring_adjacency(m)
+    adj = np.zeros((m, m), dtype=bool)
+
+    def nid(i: int, j: int) -> int:
+        return (i % r) * c + (j % c)
+
+    for i in range(r):
+        for j in range(c):
+            u = nid(i, j)
+            for v in (nid(i + 1, j), nid(i - 1, j), nid(i, j + 1), nid(i, j - 1)):
+                if v != u:
+                    adj[u, v] = True
+                    adj[v, u] = True
+    return adj
+
+
+def exp_adjacency(m: int) -> np.ndarray:
+    """Exponential graph: i connects to i +/- 2^k (mod m)."""
+    _check_m(m)
+    adj = np.zeros((m, m), dtype=bool)
+    for i in range(m):
+        k = 0
+        while (1 << k) < m:
+            j = (i + (1 << k)) % m
+            if j != i:
+                adj[i, j] = True
+                adj[j, i] = True
+            k += 1
+    return adj
+
+
+def full_adjacency(m: int) -> np.ndarray:
+    _check_m(m)
+    adj = np.ones((m, m), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def random_adjacency(m: int, degree: int, seed: int) -> np.ndarray:
+    """Random symmetric graph where each node has ~``degree`` neighbours.
+
+    Used for the paper's time-varying "Random" topology (Sec. 5.4: each
+    client communicates with 10 randomly selected neighbours each round).
+    A fresh ``seed`` per round gives the time-varying behaviour.  The
+    graph is made connected by overlaying a ring.
+    """
+    _check_m(m)
+    degree = min(degree, m - 1)
+    rng = np.random.default_rng(seed)
+    adj = ring_adjacency(m)  # connectivity backbone
+    for i in range(m):
+        extra = max(degree - int(adj[i].sum()), 0)
+        if extra <= 0:
+            continue
+        candidates = np.flatnonzero(~adj[i])
+        candidates = candidates[candidates != i]
+        if candidates.size == 0:
+            continue
+        pick = rng.choice(candidates, size=min(extra, candidates.size), replace=False)
+        adj[i, pick] = True
+        adj[pick, i] = True
+    return adj
+
+
+def adjacency(topology: str, m: int, *, degree: int = 10, seed: int = 0) -> np.ndarray:
+    if topology == "ring":
+        return ring_adjacency(m)
+    if topology == "grid":
+        return grid_adjacency(m)
+    if topology == "exp":
+        return exp_adjacency(m)
+    if topology == "full":
+        return full_adjacency(m)
+    if topology == "random":
+        return random_adjacency(m, degree, seed)
+    raise ValueError(f"unknown topology {topology!r}; expected one of {TOPOLOGIES}")
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights: symmetric, doubly stochastic, and
+    satisfying Definition 1 for any connected undirected graph."""
+    m = adj.shape[0]
+    deg = adj.sum(axis=1)
+    w = np.zeros((m, m), dtype=np.float64)
+    for i in range(m):
+        for j in np.flatnonzero(adj[i]):
+            w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def uniform_weights(adj: np.ndarray) -> np.ndarray:
+    """w_ij = 1/(deg_max+1) for neighbours, rest on the diagonal."""
+    m = adj.shape[0]
+    deg_max = int(adj.sum(axis=1).max())
+    w = adj.astype(np.float64) / (deg_max + 1)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipSpec:
+    """A concrete gossip matrix plus its derived quantities."""
+
+    topology: str
+    matrix: np.ndarray          # (m, m) float64
+    psi: float                  # max(|lambda_2|, |lambda_m|)
+
+    @property
+    def m(self) -> int:
+        return self.matrix.shape[0]
+
+    @property
+    def spectral_gap(self) -> float:
+        return 1.0 - self.psi
+
+    def neighbor_offsets(self) -> list[int]:
+        """Ring-relative offsets j-i (mod m) with nonzero weight, excluding 0.
+
+        Only meaningful for shift-invariant (circulant) topologies —
+        ring/exp/full — where every client has the same offset pattern.
+        Used by the collective_permute mixing path.
+        """
+        m = self.m
+        offsets: set[int] = set()
+        for i in range(m):
+            for j in np.flatnonzero(self.matrix[i] > 0):
+                if j != i:
+                    offsets.add((j - i) % m)
+        return sorted(offsets)
+
+    def is_circulant(self) -> bool:
+        m = self.m
+        row0 = self.matrix[0]
+        for i in range(1, m):
+            if not np.allclose(np.roll(row0, i), self.matrix[i]):
+                return False
+        return True
+
+
+def spectral_psi(w: np.ndarray) -> float:
+    eig = np.linalg.eigvalsh((w + w.T) / 2.0)
+    eig = np.sort(np.abs(eig))[::-1]
+    # largest eigenvalue is 1 (within fp error); psi is the second largest
+    return float(eig[1]) if eig.size > 1 else 0.0
+
+
+def make_gossip(topology: str, m: int, *, weights: str = "metropolis",
+                degree: int = 10, seed: int = 0) -> GossipSpec:
+    adj = adjacency(topology, m, degree=degree, seed=seed)
+    if weights == "metropolis":
+        w = metropolis_weights(adj)
+    elif weights == "uniform":
+        w = uniform_weights(adj)
+    else:
+        raise ValueError(f"unknown weight scheme {weights!r}")
+    validate_gossip_matrix(w)
+    return GossipSpec(topology=topology, matrix=w, psi=spectral_psi(w))
+
+
+def validate_gossip_matrix(w: np.ndarray, atol: float = 1e-9) -> None:
+    """Assert the Definition-1 properties of the paper."""
+    m = w.shape[0]
+    if w.shape != (m, m):
+        raise ValueError("gossip matrix must be square")
+    if np.any(w < -atol) or np.any(w > 1 + atol):
+        raise ValueError("gossip weights must lie in [0, 1]")
+    if not np.allclose(w, w.T, atol=atol):
+        raise ValueError("gossip matrix must be symmetric")
+    if not np.allclose(w.sum(axis=1), 1.0, atol=1e-7):
+        raise ValueError("gossip matrix must be row-stochastic")
+    eig = np.linalg.eigvalsh((w + w.T) / 2.0)
+    if eig.min() <= -1 - atol or eig.max() > 1 + 1e-7:
+        raise ValueError("gossip spectrum must satisfy I >= W > -I")
+    # null{I-W} = span{1}: eigenvalue 1 must be simple for connected graphs
+    ones = np.ones(m) / np.sqrt(m)
+    if not np.allclose(w @ ones, ones, atol=1e-7):
+        raise ValueError("1 must be an eigenvector of W")
+
+
+def time_varying_specs(topology: str, m: int, rounds: int, *, degree: int = 10,
+                       base_seed: int = 0, weights: str = "metropolis"
+                       ) -> Sequence[GossipSpec]:
+    """One GossipSpec per round.  Only 'random' actually varies in time."""
+    if topology != "random":
+        spec = make_gossip(topology, m, weights=weights)
+        return [spec] * rounds
+    return [make_gossip("random", m, weights=weights, degree=degree,
+                        seed=base_seed + t) for t in range(rounds)]

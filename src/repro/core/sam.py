@@ -1,0 +1,69 @@
+"""Sharpness-Aware Minimization (Foret et al. 2020) as used by
+DFedADMM-SAM / DFedSAM / FedSAM (Alg. 1 lines 10-13).
+
+The perturbation uses the *global* l2 norm across the whole client
+parameter vector:  x_breve = x + rho * g1 / ||g1||.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def perturb(params: PyTree, grads: PyTree, rho: float,
+            eps: float = 1e-12, use_kernel: bool = False) -> PyTree:
+    """x + rho * g / ||g||  (global norm)."""
+    norm = global_norm(grads)
+    scale = rho / (norm + eps)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return jax.tree.map(lambda x, g: kops.sam_scale(x, g, scale), params, grads)
+    return jax.tree.map(
+        lambda x, g: (x.astype(jnp.float32)
+                      + scale * g.astype(jnp.float32)).astype(x.dtype),
+        params, grads)
+
+
+def sam_value_and_grad(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
+                       rho: float, use_kernel: bool = False
+                       ) -> Callable[[PyTree, Any, jax.Array], tuple]:
+    """Wrap a loss into a (loss, grad) oracle with SAM perturbation.
+
+    rho == 0 reduces exactly to a plain gradient oracle (paper Remark:
+    "by setting rho = 0, we obtain ... DFedADMM").  The reported loss is
+    always the loss at the *unperturbed* point.
+    """
+    vg = jax.value_and_grad(loss_fn)
+
+    if rho == 0.0:
+        def plain(params, batch, rng):
+            return vg(params, batch, rng)
+        return plain
+
+    grad = jax.grad(loss_fn)
+
+    def sam(params, batch, rng):
+        l, g1 = vg(params, batch, rng)             # line 10
+        x_breve = perturb(params, g1, rho, use_kernel=use_kernel)  # line 11
+        return l, grad(x_breve, batch, rng)        # line 12 (same minibatch)
+
+    return sam
+
+
+def sam_grad_fn(loss_fn, rho: float, use_kernel: bool = False):
+    """Gradient-only variant of :func:`sam_value_and_grad`."""
+    vg = sam_value_and_grad(loss_fn, rho, use_kernel=use_kernel)
+
+    def g(params, batch, rng):
+        return vg(params, batch, rng)[1]
+
+    return g

@@ -1,0 +1,4 @@
+from repro.data.federated import (dirichlet_partition, iid_partition,
+                                  partition_stats)
+from repro.data.synthetic import (SyntheticClassification, SyntheticLM,
+                                  make_dfl_lm_sampler, make_model_batch)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's elementwise hot spots.
+
+Each kernel module pairs with ``ref.py`` (pure-jnp oracle) and is
+validated in interpret mode on CPU; ``ops.py`` holds the jit'd public
+wrappers used by ``core/admm.py`` / ``core/sam.py`` behind
+``DFLConfig.use_kernel``.
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,41 @@
+"""Gossip mixing matmul (Alg. 1 line 19): X' = W @ Z with W (m, m) tiny
+and Z (m, N) the flattened client-stacked parameters.
+
+The contraction dimension (m <= 32) is far below the 128x128 MXU tile, so
+the useful blocking is over the huge N axis: W stays resident in VMEM for
+the whole grid while Z streams through in (m, 512) column tiles — one
+HBM read of Z and one write of X' total, W read once.
+
+W is padded to (8k, 8k) sublane multiples by the ops wrapper; f32
+accumulate regardless of the Z dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL_TILE = 512
+
+
+def _kernel(w_ref, z_ref, y_ref):
+    w = w_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    y_ref[...] = jnp.dot(w, z, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype)
+
+
+def gossip_matmul_2d(w, z, *, interpret: bool = True,
+                     col_tile: int = COL_TILE):
+    """w: (m, m) f32; z: (m, N) -> (m, N), N a multiple of 128."""
+    m, n = z.shape
+    grid = (pl.cdiv(n, col_tile),)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, m), lambda j: (0, 0)),
+                  pl.BlockSpec((m, col_tile), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((m, col_tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(z.shape, z.dtype),
+        interpret=interpret,
+    )(w, z)

@@ -1,0 +1,160 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary leaf shapes by flattening + padding to (rows, 128),
+dispatch to the kernel (interpret=True on CPU — the container has no TPU;
+on TPU backends interpret is switched off automatically), and restore the
+original shape.  Scalars (lr, 1/lam, SAM scale) ride in as (1, k) f32
+arrays so they may be traced values.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import admm_update as _admm
+from repro.kernels import gossip_matmul as _gossip
+from repro.kernels import sam_scale as _sam
+from repro.kernels import selective_scan as _sscan
+
+LANE = 128
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_planes(x, row_tile):
+    """Flatten to (R, 128) with R a multiple of row_tile; returns
+    (planes, orig_size)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    per_tile = row_tile * LANE
+    padded = ((n + per_tile - 1) // per_tile) * per_tile
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, LANE), n
+
+
+def _from_planes(planes, n, shape, dtype):
+    return planes.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _admm_core(x, g, d, a, lr, lam, interpret):
+    row_tile = _admm.ROW_TILE
+    xp, n = _to_planes(x, row_tile)
+    gp, _ = _to_planes(g.astype(x.dtype), row_tile)
+    dp, _ = _to_planes(d.astype(x.dtype), row_tile)
+    ap, _ = _to_planes(a.astype(x.dtype), row_tile)
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         1.0 / jnp.asarray(lam, jnp.float32)]).reshape(1, 2)
+    yp = _admm.admm_update_2d(xp, gp, dp, ap, scalars, interpret=interpret)
+    return _from_planes(yp, n, x.shape, x.dtype)
+
+
+def _admm_fwd(x, g, d, a, lr, lam, interpret):
+    return _admm_core(x, g, d, a, lr, lam, interpret), (x, g, d, a, lr, lam)
+
+
+def _admm_bwd(interpret, res, ct):
+    # y = x - lr*(g - d + (x - a)/lam): linear in every operand.
+    x, g, d, a, lr, lam = res
+    ctf = ct.astype(jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    upd = (g - d).astype(jnp.float32) + (x - a).astype(jnp.float32) / lam
+    dx = (ctf * (1.0 - lr / lam)).astype(x.dtype)
+    dg = (-ctf * lr).astype(g.dtype)
+    dd = (ctf * lr).astype(d.dtype)
+    da = (ctf * lr / lam).astype(a.dtype)
+    dlr = -jnp.sum(ctf * upd)
+    dlam = jnp.sum(ctf * lr * (x - a).astype(jnp.float32)) / (lam * lam)
+    return dx, dg, dd, da, dlr, dlam
+
+
+_admm_core.defvjp(_admm_fwd, _admm_bwd)
+
+
+def admm_update(x, g, d, a, *, lr, lam, interpret: bool | None = None):
+    """Fused Eq. 6 update for ONE leaf; same shape/dtype as x.
+    Differentiable (custom VJP; the op is linear in all operands)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _admm_core(x, g, d, a, jnp.asarray(lr, jnp.float32),
+                      jnp.asarray(lam, jnp.float32), interpret)
+
+
+def global_sumsq(tree, *, interpret: bool | None = None):
+    """Sum of squares over a whole pytree via the block-reduce kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(tree):
+        planes, n = _to_planes(leaf, _sam.ROW_TILE)
+        partials = _sam.block_sumsq_2d(planes, interpret=interpret)
+        total = total + jnp.sum(partials)
+        # padding contributes zeros; nothing to subtract
+    return total
+
+
+def sam_scale(x, g, scale, *, interpret: bool | None = None):
+    """y = x + scale * g for one leaf (scale traced scalar)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    xp, n = _to_planes(x, _sam.ROW_TILE)
+    gp, _ = _to_planes(g.astype(x.dtype), _sam.ROW_TILE)
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    yp = _sam.scale_add_2d(xp, gp, s, interpret=interpret)
+    return _from_planes(yp, n, x.shape, x.dtype)
+
+
+def gossip_mix_leaf(w, z, *, interpret: bool | None = None):
+    """z: (m, ...) one stacked leaf; returns W @ z over the client axis."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m = z.shape[0]
+    flat = z.reshape(m, -1)
+    n = flat.shape[1]
+    pad = (-n) % _gossip.COL_TILE
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = _gossip.gossip_matmul_2d(jnp.asarray(w, jnp.float32), flat,
+                                   interpret=interpret)
+    return out[:, :n].reshape(z.shape).astype(z.dtype)
+
+
+def gossip_mix(w, tree, *, interpret: bool | None = None):
+    return jax.tree.map(
+        functools.partial(gossip_mix_leaf, w, interpret=interpret), tree)
+
+
+def selective_scan(x, dt, a_log, b, c, dskip, h0=None, *,
+                   interpret: bool | None = None):
+    """Fused Mamba-1 selective scan (forward / serving path).
+
+    x/dt (B,S,D); a_log (D,N); b/c (B,S,N); dskip (D,);
+    h0 (B,D,N) f32 or None.  Pads D to the channel tile and S to the
+    sequence chunk, dispatches the Pallas kernel, and un-pads.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    B, S, D = x.shape
+    N = a_log.shape[1]
+    tile_d = min(_sscan.TILE_D, D) if D % _sscan.TILE_D else _sscan.TILE_D
+    pad_d = (-D) % tile_d
+    chunk = min(_sscan.CHUNK_S, S)
+    pad_s = (-S) % chunk
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    if pad_d or pad_s:
+        pd, ps = (0, pad_d), (0, pad_s)
+        x = jnp.pad(x, ((0, 0), ps, pd))
+        dt = jnp.pad(dt, ((0, 0), ps, pd))
+        a_log = jnp.pad(a_log, (pd, (0, 0)))
+        b = jnp.pad(b, ((0, 0), ps, (0, 0)))
+        c = jnp.pad(c, ((0, 0), ps, (0, 0)))
+        dskip = jnp.pad(dskip, pd)
+        h0 = jnp.pad(h0, ((0, 0), pd, (0, 0)))
+
+    y, h_last = _sscan.selective_scan_3d(x, dt, a_log, b, c, dskip, h0,
+                                         interpret=interpret, tile_d=tile_d,
+                                         seq_chunk=chunk)
+    return y[:, :S, :D], h_last[:, :D, :]

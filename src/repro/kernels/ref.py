@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def admm_update(x, g, d, a, *, lr, lam):
+    return x - lr * (g - d + (x - a) / lam)
+
+
+def sumsq(x):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def scale_add(x, g, scale):
+    return x + (scale * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def gossip_matmul(w, z):
+    return jnp.einsum("ij,jn->in", w.astype(jnp.float32),
+                      z.astype(jnp.float32)).astype(z.dtype)
+
+
+def selective_scan(x, dt, a_log, b, c, dskip, h0):
+    """Mamba-1 recurrence oracle via lax.scan over time.
+
+    x/dt (B,S,D); a_log (D,N); b/c (B,S,N); dskip (D,); h0 (B,D,N) f32.
+    Returns (y (B,S,D) x.dtype, h_last (B,D,N) f32).
+    """
+    import jax
+
+    a_neg = -jnp.exp(a_log.astype(jnp.float32))             # (D,N)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                           # (B,D)/(B,N)
+        a_t = jnp.exp(dt_t[..., None] * a_neg[None])        # (B,D,N)
+        h = a_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t) + dskip.astype(jnp.float32) * x_t
+        return h, y_t
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_last

@@ -1,0 +1,60 @@
+"""SAM perturbation kernels (Alg. 1 lines 10-11).
+
+Two phases over flattened (rows, 128) parameter planes:
+  1. ``block_sumsq``  — per-tile partial sum of squares (f32 accumulate),
+     reduced on-host to the client-global ||g||^2.
+  2. ``scale_add``    — y = x + scale * g with the broadcast scalar
+     scale = rho / (||g|| + eps).
+
+Tiles are (512, 128): a single f32 input buffer is 256 KiB; the partial
+output is one f32 per tile (SMEM-sized).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+ROW_TILE = 512
+
+
+def _sumsq_kernel(x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(x * x)
+
+
+def block_sumsq_2d(x, *, interpret: bool = True, row_tile: int = ROW_TILE):
+    """x: (R, 128) -> (num_tiles, 1) f32 partial sums of squares."""
+    rows = x.shape[0]
+    grid = (pl.cdiv(rows, row_tile),)
+    return pl.pallas_call(
+        _sumsq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _scale_kernel(scale_ref, x_ref, g_ref, y_ref):
+    scale = scale_ref[0, 0]
+    y_ref[...] = x_ref[...] + (scale * g_ref[...].astype(jnp.float32)
+                               ).astype(x_ref.dtype)
+
+
+def scale_add_2d(x, g, scale, *, interpret: bool = True,
+                 row_tile: int = ROW_TILE):
+    """y = x + scale * g.  x/g: (R,128); scale: (1,1) f32."""
+    rows = x.shape[0]
+    grid = (pl.cdiv(rows, row_tile),)
+    spec = pl.BlockSpec((row_tile, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(scale, x, g)

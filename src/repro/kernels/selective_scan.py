@@ -1,0 +1,126 @@
+"""Fused Mamba-1 selective scan as a Pallas TPU kernel.
+
+The recurrence per (channel d, state n):
+
+    a_t = exp(dt_t[d] * A[d, n])
+    h_t = a_t * h_{t-1} + (dt_t[d] * x_t[d]) * B_t[n]
+    y_t[d] = sum_n h_t[d, n] * C_t[n]  +  D[d] * x_t[d]
+
+The naive jnp formulation materializes a/b/h at (B, S, D, N) f32 in HBM
+— the §Roofline-measured memory hog of SSM training/prefill (the CUDA
+fused selective-scan exists for exactly this reason).  TPU adaptation:
+
+  * grid over (batch, channel-tiles); TIME LOOPS INSIDE the kernel with
+    the running state h (tile_d, N) resident in VMEM for the whole
+    sequence — h never touches HBM except the final value;
+  * HBM traffic is the roofline floor: read x/dt (S, tile_d), B/C
+    (S, N), A (tile_d, N) once; write y (S, tile_d) once;
+  * the (tile_d, N) update is a VPU-shaped elementwise block; the
+    y-reduction over N is a tiny contraction done as a broadcast
+    multiply + lane reduction (N = 16 for falcon-mamba — far below MXU
+    size, so the VPU path is the right one).
+
+VMEM budget at defaults (tile_d=128, S-chunked streaming of x/dt/y in
+(CHUNK_S, tile_d) blocks, N=16):
+  x/dt/y chunks 3 x (512, 128) f32 = 768 KiB, B/C (512, 16-pad-128) f32,
+  A/h (128, 128-pad) f32 — ~2 MiB, comfortably inside ~16 MiB v5e VMEM.
+
+Forward/inference kernel (prefill + scoring).  Training keeps the
+`chunked_ssm` jnp form (XLA handles its backward); the kernel carries no
+custom VJP by design — it is the serving-path hot-spot fix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 128
+CHUNK_S = 512
+
+
+def _kernel(x_ref, dt_ref, a_log_ref, b_ref, c_ref, dskip_ref, h0_ref,
+            y_ref, hout_ref, *, seq_chunk: int):
+    """One (batch b, channel-tile i) grid cell; loops time inside.
+
+    Block shapes (leading batch block of 1 squeezed by indexing):
+      x_ref/dt_ref/y_ref : (1, S, tile_d)
+      b_ref/c_ref        : (1, S, N)
+      a_log_ref          : (tile_d, N)
+      dskip_ref          : (1, tile_d)
+      h0_ref/hout_ref    : (1, tile_d, N)
+    """
+    s_total = x_ref.shape[1]
+    a_neg = -jnp.exp(a_log_ref[...].astype(jnp.float32))   # (tile_d, N)
+    dskip = dskip_ref[0, :].astype(jnp.float32)            # (tile_d,)
+
+    def chunk_body(ci, h):
+        start = ci * seq_chunk
+        xc = x_ref[0, pl.dslice(start, seq_chunk), :].astype(jnp.float32)
+        dtc = dt_ref[0, pl.dslice(start, seq_chunk), :].astype(jnp.float32)
+        bc = b_ref[0, pl.dslice(start, seq_chunk), :].astype(jnp.float32)
+        cc = c_ref[0, pl.dslice(start, seq_chunk), :].astype(jnp.float32)
+
+        def step(t, carry):
+            h_, yc = carry
+            a_t = jnp.exp(dtc[t][:, None] * a_neg)          # (tile_d, N)
+            bx = (dtc[t] * xc[t])[:, None] * bc[t][None, :]  # (tile_d, N)
+            h_ = a_t * h_ + bx
+            y_t = jnp.sum(h_ * cc[t][None, :], axis=1) + dskip * xc[t]
+            yc = jax.lax.dynamic_update_index_in_dim(yc, y_t, t, 0)
+            return h_, yc
+
+        yc0 = jnp.zeros((seq_chunk, xc.shape[1]), jnp.float32)
+        h, yc = jax.lax.fori_loop(0, seq_chunk, step, (h, yc0))
+        y_ref[0, pl.dslice(start, seq_chunk), :] = yc.astype(y_ref.dtype)
+        return h
+
+    h = h0_ref[0, ...].astype(jnp.float32)
+    n_chunks = s_total // seq_chunk
+    h = jax.lax.fori_loop(0, n_chunks, chunk_body, h)
+    hout_ref[0, ...] = h.astype(hout_ref.dtype)
+
+
+def selective_scan_3d(x, dt, a_log, b, c, dskip, h0, *,
+                      interpret: bool = True, tile_d: int = TILE_D,
+                      seq_chunk: int = CHUNK_S):
+    """x/dt: (B, S, D); a_log: (D, N); b/c: (B, S, N); dskip: (D,);
+    h0: (B, D, N) f32.  Returns (y (B, S, D) x.dtype, h_last (B, D, N) f32).
+
+    Requires D % tile_d == 0 and S % seq_chunk == 0 (ops wrapper pads).
+    """
+    B, S, D = x.shape
+    N = a_log.shape[1]
+    grid = (B, D // tile_d)
+
+    kern = functools.partial(_kernel, seq_chunk=min(seq_chunk, S))
+    if S % min(seq_chunk, S):
+        raise ValueError(f"S={S} must be a multiple of seq_chunk={seq_chunk}")
+
+    sd_spec = pl.BlockSpec((1, S, tile_d), lambda bi, di: (bi, 0, di))
+    sn_spec = pl.BlockSpec((1, S, N), lambda bi, di: (bi, 0, 0))
+    y, h_last = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            sd_spec,                                             # x
+            sd_spec,                                             # dt
+            pl.BlockSpec((tile_d, N), lambda bi, di: (di, 0)),   # a_log
+            sn_spec,                                             # b
+            sn_spec,                                             # c
+            pl.BlockSpec((1, tile_d), lambda bi, di: (0, di)),   # dskip
+            pl.BlockSpec((1, tile_d, N), lambda bi, di: (bi, di, 0)),  # h0
+        ],
+        out_specs=[
+            sd_spec,
+            pl.BlockSpec((1, tile_d, N), lambda bi, di: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), x.dtype),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a_log, b, c, dskip.reshape(1, -1), h0)
+    return y, h_last

@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run entry point.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multi-pod] [--variant ppermute] [--all]
+
+The two env lines above MUST stay first: jax locks the device count on
+first init, and the production meshes need 512 placeholder host devices.
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    from repro.configs import ARCH_IDS
+    from repro.configs.shapes import SHAPES
+    from repro.launch.dryrun_lib import DryrunVariant, dryrun_one
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), action="append")
+    ap.add_argument("--shape", choices=list(SHAPES), action="append")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every arch x shape on the selected mesh(es)")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mixing", default="dense",
+                    choices=("dense", "ppermute"))
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--client-axis", default="")
+    ap.add_argument("--fsdp-axis", default="")
+    ap.add_argument("--dfl-m", type=int, default=0)
+    ap.add_argument("--dfl-k", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--loss-chunk", type=int, default=-1)
+    ap.add_argument("--remat", action="store_true", default=None)
+    ap.add_argument("--flash-decode", action="store_true")
+    ap.add_argument("--kv-shard", default="", choices=("", "hd", "heads", "seq"))
+    ap.add_argument("--metrics", default="full", choices=("full", "light"))
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or (list(ARCH_IDS) if args.all else [])
+    shapes = args.shape or (list(SHAPES) if args.all else [])
+    if not archs or not shapes:
+        ap.error("pass --arch/--shape or --all")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    variant = DryrunVariant(
+        name=args.variant, mixing=args.mixing, topology=args.topology,
+        client_axis=args.client_axis, fsdp_axis=args.fsdp_axis,
+        dfl_m=args.dfl_m, dfl_k=args.dfl_k, microbatches=args.microbatches,
+        loss_chunk=args.loss_chunk, remat=args.remat,
+        flash_decode=args.flash_decode, kv_shard=args.kv_shard,
+        metrics=args.metrics)
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    dryrun_one(arch, shape, multi_pod=multi_pod,
+                               variant=variant, save=not args.no_save)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures += 1
+                    print(f"[dryrun] FAIL {arch} x {shape} "
+                          f"(multi_pod={multi_pod}): {type(e).__name__}: {e}",
+                          file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,526 @@
+"""Multi-pod dry-run machinery (import-safe: no env mutation here).
+
+For every (architecture x input shape x mesh) combination we build the
+step function with its shardings, ``.lower().compile()`` it AOT against
+ShapeDtypeStruct stand-ins (no allocation), and extract:
+
+  * memory_analysis()  — per-device bytes (proves fit / measures overflow)
+  * cost_analysis()    — HLO FLOPs + bytes accessed (roofline terms 1-2)
+  * the collective schedule parsed from the optimized HLO (term 3)
+
+Variants (the §Perf levers) are expressed as ``DryrunVariant`` overrides.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_bundle, input_specs, shape_applicable
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.shapes import SHAPES
+from repro.core import DFLConfig, make_gossip, make_train_round
+from repro.core.dfl import DFLState
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+from repro.sharding import partition
+
+PyTree = Any
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "artifacts")
+
+
+@dataclasses.dataclass(frozen=True)
+class DryrunVariant:
+    """A named configuration point for the §Perf hillclimb."""
+    name: str = "baseline"
+    mixing: str = "dense"            # dense | ppermute
+    topology: str = "ring"
+    client_axis: str = ""            # "" -> bundle default
+    fsdp_axis: str = ""
+    dfl_m: int = 0                   # 0 -> bundle default
+    dfl_k: int = 0
+    microbatches: int = 0            # 0 -> bundle default
+    loss_chunk: int = -1             # -1 -> config default
+    remat: bool | None = None
+    flash_decode: bool = False       # shard_map flash decode (long ctx)
+    kv_shard: str = ""               # "" | "hd" | "heads" | "seq" (decode cache)
+    metrics: str = "full"            # "full" | "light" (see core.dfl)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+def resolve(arch_id: str, variant: DryrunVariant,
+            multi_pod: bool) -> tuple[ModelConfig, ParallelConfig]:
+    bundle = get_bundle(arch_id)
+    cfg, par = bundle.model, bundle.parallel
+    upd: dict = {}
+    if variant.client_axis:
+        upd["client_axis"] = variant.client_axis
+        if variant.client_axis == "pod":
+            # clients = pods (giant-model layout): per-client batch is
+            # data-parallel over the freed "data" axis instead.
+            upd["batch_axes"] = ("data",)
+    if variant.fsdp_axis:
+        upd["fsdp_axis"] = variant.fsdp_axis
+    if variant.dfl_m:
+        upd["dfl_m"] = variant.dfl_m
+    if variant.dfl_k:
+        upd["dfl_k"] = variant.dfl_k
+    if variant.microbatches:
+        upd["microbatches"] = variant.microbatches
+    if variant.remat is not None:
+        upd["remat"] = variant.remat
+    upd["mixing"] = variant.mixing
+    upd["topology"] = variant.topology
+    par = dataclasses.replace(par, **upd)
+    if variant.loss_chunk >= 0:
+        cfg = dataclasses.replace(cfg, loss_chunk=variant.loss_chunk)
+    if not multi_pod:
+        # no pod axis on the single-pod mesh
+        if par.client_axis == "pod":
+            raise ValueError("client_axis='pod' requires the multi-pod mesh")
+        par = dataclasses.replace(
+            par, batch_axes=tuple(a for a in par.batch_axes if a != "pod"))
+    return cfg, par
+
+
+# ---------------------------------------------------------------------------
+# Step builders (lowered, never executed at production size)
+# ---------------------------------------------------------------------------
+
+def _stack_client(tree: PyTree, m: int) -> PyTree:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((m,) + tuple(x.shape), x.dtype), tree)
+
+
+def build_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
+                     shape_name: str, metrics: str = "full"):
+    """DFL train round (the paper's technique) ready to lower."""
+    m = par.dfl_m
+    spec = make_gossip(par.topology, m)
+    dfl_cfg = DFLConfig(algorithm="dfedadmm", m=m, K=par.dfl_k,
+                        topology=par.topology, mixing=par.mixing,
+                        microbatches=par.microbatches)
+
+    def loss_fn(params, batch, rng):
+        return model_lib.loss_fn(params, cfg, batch, rng, remat=par.remat)
+
+    param_sh = model_lib.param_shapes(cfg)
+    pspecs = partition.param_specs(param_sh, cfg, par, stacked_client=True)
+    round_fn = make_train_round(
+        loss_fn, dfl_cfg, spec=spec, mesh=mesh,
+        client_axis=par.client_axis, param_inner_specs=pspecs,
+        metrics=metrics)
+
+    state_sds = DFLState(
+        params=_stack_client(param_sh, m),
+        dual=_stack_client(param_sh, m),
+        momentum=_stack_client(param_sh, m),
+        rng=jax.ShapeDtypeStruct((m, 2), jnp.uint32),
+        round=jax.ShapeDtypeStruct((), jnp.int32))
+    batch_sds = input_specs(cfg, par, shape_name)
+    w_sds = jax.ShapeDtypeStruct((m, m), jnp.float32)
+
+    state_specs = partition.dfl_state_specs(param_sh, cfg, par)
+    batch_specs = partition.train_batch_specs(batch_sds, par)
+    in_shardings = (partition.to_shardings(state_specs, mesh),
+                    partition.to_shardings(batch_specs, mesh),
+                    NamedSharding(mesh, P()))
+    out_shardings = (partition.to_shardings(state_specs, mesh), None)
+    jitted = jax.jit(round_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings)
+    return jitted, (state_sds, batch_sds, w_sds)
+
+
+def build_prefill_step(cfg: ModelConfig, par: ParallelConfig, mesh,
+                       shape_name: str, multi_pod: bool):
+    shape = SHAPES[shape_name]
+
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, cfg, batch, shape.seq_len)
+
+    param_sh = model_lib.param_shapes(cfg)
+    pspecs = partition.param_specs(param_sh, cfg, par)
+    batch_sds = input_specs(cfg, par, shape_name)
+    bspecs = partition.prefill_batch_specs(batch_sds, par, multi_pod)
+    in_shardings = (partition.to_shardings(pspecs, mesh),
+                    partition.to_shardings(bspecs, mesh))
+    jitted = jax.jit(prefill_step, in_shardings=in_shardings)
+    return jitted, (param_sh, batch_sds)
+
+
+def build_decode_step(cfg: ModelConfig, par: ParallelConfig, mesh,
+                      shape_name: str, multi_pod: bool,
+                      flash_decode: bool = False, kv_shard: str = ""):
+    shape = SHAPES[shape_name]
+    long_ctx = shape_name == "long_500k"
+    flash_axis = "data" if (flash_decode and long_ctx) else None
+
+    def serve_step(params, cache, token):
+        return model_lib.decode_step(params, cfg, cache, token, mesh=mesh,
+                                     flash_axis=flash_axis)
+
+    param_sh = model_lib.param_shapes(cfg)
+    pspecs = partition.param_specs(param_sh, cfg, par)
+    io_sds = input_specs(cfg, par, shape_name)
+    io_specs = partition.decode_specs(io_sds, cfg, par, multi_pod,
+                                      long_context=long_ctx,
+                                      kv_shard=kv_shard)
+    in_shardings = (partition.to_shardings(pspecs, mesh),
+                    partition.to_shardings(io_specs["cache"], mesh),
+                    partition.to_shardings(io_specs["token"], mesh))
+    out_shardings = (None, partition.to_shardings(io_specs["cache"], mesh))
+    jitted = jax.jit(serve_step, in_shardings=in_shardings,
+                     out_shardings=out_shardings)
+    return jitted, (param_sh, io_sds["cache"], io_sds["token"])
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# link-traffic multiplier applied to the RESULT bytes of each collective
+# (ring-algorithm per-device traffic; documented in EXPERIMENTS.md §Roofline)
+_LINK_FACTOR = {
+    "all-gather": 1.0,        # receives (N-1)/N of the result ~ 1x
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,    # sends ~operand/N * (N-1) ~ result x 1
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->.*{\s*$")
+_WHILE_BODY_RE = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"\b(?:body|condition|to_apply|branch_computations=\{)[=\s]*%?"
+    r"([\w.\-]+)")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its instruction lines (flat brace matching)."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def parse_collectives(hlo_text: str, scan_trips: list[int] | None = None
+                      ) -> dict:
+    """Sum result bytes per collective type over the optimized HLO.
+
+    XLA cost/byte analyses count ``while`` bodies ONCE, so collectives
+    inside scan loops (TP all-reduces per layer, K inner steps) are
+    undercounted.  ``scan_trips`` gives the trip counts of the scan
+    nest from outermost to innermost (e.g. [K, L] for the DFL train
+    round, [L] for prefill/decode); a collective found inside n nested
+    while bodies is multiplied by the product of the first n trips.
+    """
+    comps = _split_computations(hlo_text)
+
+    # map: body computation name -> the computation containing its while op
+    body_parent: dict[str, str] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line or "=while(" in line:
+                mb = _WHILE_BODY_RE.search(line)
+                if mb:
+                    body_parent[mb.group(1)] = cname
+
+    # call edges (fusion/to_apply/cond branches) to propagate depth into
+    # called computations
+    called_by: dict[str, str] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            for m in _CALL_RE.finditer(line):
+                callee = m.group(1)
+                if callee in comps and callee not in body_parent:
+                    called_by.setdefault(callee, cname)
+
+    def depth_of(cname: str, seen=None) -> int:
+        seen = seen or set()
+        if cname in seen:
+            return 0
+        seen.add(cname)
+        if cname in body_parent:
+            return 1 + depth_of(body_parent[cname], seen)
+        if cname in called_by:
+            return depth_of(called_by[cname], seen)
+        return 0
+
+    trips = scan_trips or []
+
+    def multiplier(depth: int) -> int:
+        mult = 1
+        for t in trips[:depth]:
+            mult *= max(int(t), 1)
+        # deeper nesting than hints: assume innermost hint repeats
+        if depth > len(trips) and trips:
+            for _ in range(depth - len(trips)):
+                mult *= max(int(trips[-1]), 1)
+        return mult
+
+    stats = {c: {"count": 0, "bytes": 0, "scaled_bytes": 0}
+             for c in _COLLECTIVES}
+    for cname, lines in comps.items():
+        depth = depth_of(cname)
+        mult = multiplier(depth)
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            shape_text, op = m.group(1), m.group(2)
+            if "-done(" in line:
+                continue
+            b = _shape_bytes(shape_text)
+            stats[op]["count"] += 1
+            stats[op]["bytes"] += b
+            stats[op]["scaled_bytes"] += b * mult
+    stats["link_bytes"] = sum(
+        int(v["scaled_bytes"] * _LINK_FACTOR[k]) for k, v in stats.items()
+        if k in _LINK_FACTOR)
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if k in _COLLECTIVES)
+    stats["total_scaled_bytes"] = sum(
+        v["scaled_bytes"] for k, v in stats.items() if k in _COLLECTIVES)
+    stats["scan_trips"] = list(trips)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+def roofline_terms(cost: dict, collectives: dict, n_devices: int,
+                   cfg: ModelConfig, shape_name: str, kind: str,
+                   dfl_m: int, dfl_k: int, *, tp_degree: int = 16,
+                   cache_bytes_total: int = 0) -> dict:
+    """Three roofline terms per device.
+
+    XLA's cost_analysis counts while (scan) bodies ONCE, so measured FLOPs
+    and bytes are lower bounds that undercount scanned layers.  We therefore
+    report the measured values AND analytic floors, and build each term from
+    max(measured, floor):
+      * compute floor  — MODEL_FLOPS (6·N_active·D train / 2·N_active·D
+        inference) divided across chips;
+      * memory floor   — parameter (+ optimizer/dual state + KV cache)
+        traffic per device per step;
+      * collective     — HLO collectives with scan-nesting trip multipliers
+        (see parse_collectives).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    link_bytes = float(collectives.get("link_bytes", 0))
+
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    params_dev = cfg.param_count() * dtype_bytes / tp_degree
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len * dfl_k
+        model_flops = 6 * n_active * tokens
+        # fwd read + bwd read per inner step, plus dual/anchor/z traffic
+        mem_floor = (2 * dfl_k + 6) * params_dev
+    elif kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+        mem_floor = params_dev + cache_bytes_total / n_devices
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+        mem_floor = params_dev + cache_bytes_total / n_devices
+
+    flops_floor = model_flops / n_devices
+    eff_flops = max(flops, flops_floor)
+    eff_bytes = max(bytes_accessed, mem_floor)
+
+    t_compute = eff_flops / mesh_lib.PEAK_FLOPS_BF16
+    t_memory = eff_bytes / mesh_lib.HBM_BW
+    t_collective = link_bytes / mesh_lib.ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "flops_floor_per_device": flops_floor,
+        "mem_floor_per_device": mem_floor,
+        "link_bytes_per_device": link_bytes,
+        "model_flops": model_flops,
+        "params_bytes_per_device": params_dev,
+        # how much of the compiled compute is useful model math; >1 means
+        # XLA's single-count of scan bodies hides recompute (see note above)
+        "useful_flops_ratio": (model_flops / (eff_flops * n_devices)
+                               if eff_flops else 0.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The dry run itself
+# ---------------------------------------------------------------------------
+
+def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               variant: DryrunVariant = DryrunVariant(),
+               mesh=None, save: bool = True, verbose: bool = True) -> dict:
+    cfg, par = resolve(arch_id, variant, multi_pod)
+    ok, reason = shape_applicable(cfg, shape_name)
+    record: dict = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant.name, "status": "skipped", "reason": reason,
+    }
+    if not ok:
+        if save:
+            _save_record(record)
+        if verbose:
+            print(f"[dryrun] SKIP {arch_id} x {shape_name}: {reason}")
+        return record
+
+    if mesh is None:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh_lib.mesh_devices(mesh)
+    kind = SHAPES[shape_name].kind
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            jitted, args = build_train_step(cfg, par, mesh, shape_name,
+                                            metrics=variant.metrics)
+        elif kind == "prefill":
+            jitted, args = build_prefill_step(cfg, par, mesh, shape_name,
+                                              multi_pod)
+        else:
+            jitted, args = build_decode_step(cfg, par, mesh, shape_name,
+                                             multi_pod,
+                                             flash_decode=variant.flash_decode,
+                                             kv_shard=variant.kv_shard)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    # scan-nest trip hints, outermost first (see parse_collectives)
+    L = cfg.num_layers
+    if kind == "train":
+        trips = [par.dfl_k, L]
+    else:
+        trips = [L]
+    if cfg.arch_type in ("ssm", "hybrid") and kind in ("train", "prefill"):
+        trips.append(max(SHAPES[shape_name].seq_len // cfg.ssm_chunk, 1))
+
+    cache_bytes_total = 0
+    if kind == "decode":
+        cache_tree = args[1]
+        cache_bytes_total = int(sum(
+            np.prod(x.shape) * x.dtype.itemsize
+            for x in jax.tree.leaves(cache_tree)))
+
+    tp_degree = mesh.devices.shape[-1]
+    coll = parse_collectives(hlo, scan_trips=trips)
+    terms = roofline_terms(cost, coll, n_devices, cfg, shape_name, kind,
+                           par.dfl_m, par.dfl_k, tp_degree=tp_degree,
+                           cache_bytes_total=cache_bytes_total)
+
+    record.update({
+        "status": "ok",
+        "kind": kind,
+        "n_devices": n_devices,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed",
+                                          "optimal_seconds") if k in cost},
+        "collectives": coll,
+        "roofline": terms,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    })
+    if save:
+        _save_record(record)
+    if verbose:
+        m = record["memory"]
+        arg_gb = (m["argument_bytes"] or 0) / 1e9
+        tmp_gb = (m["temp_bytes"] or 0) / 1e9
+        print(f"[dryrun] OK {arch_id} x {shape_name} ({record['mesh']}, "
+              f"{variant.name}): lower {t_lower:.0f}s compile {t_compile:.0f}s "
+              f"args/dev {arg_gb:.2f}GB temp/dev {tmp_gb:.2f}GB "
+              f"dom={terms['dominant']} "
+              f"t=({terms['t_compute_s']:.3e},{terms['t_memory_s']:.3e},"
+              f"{terms['t_collective_s']:.3e})s")
+    return record
+
+
+def _save_record(record: dict) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    name = (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+            f"__{record['variant']}.json").replace("/", "_")
+    with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def load_records() -> list[dict]:
+    if not os.path.isdir(ARTIFACT_DIR):
+        return []
+    out = []
+    for fn in sorted(os.listdir(ARTIFACT_DIR)):
+        if fn.endswith(".json"):
+            with open(os.path.join(ARTIFACT_DIR, fn)) as f:
+                out.append(json.load(f))
+    return out

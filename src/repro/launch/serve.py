@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a prompt batch, then greedy-decode.
+
+On CPU use ``--smoke``; the same step functions are what the dry-run
+lowers at production size with the sharding rules applied.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None) -> int:
+    from repro.configs import ARCH_IDS, get_model_config, get_smoke_config
+    from repro.data.synthetic import make_model_batch
+    from repro.models import build_model
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else \
+        get_model_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_seq = args.prompt_len + args.gen + 8
+
+    batch = jax.tree.map(jnp.asarray,
+                         make_model_batch(cfg, args.batch, args.prompt_len,
+                                          seed=args.seed))
+    batch.pop("labels", None)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_seq))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, cache = jax.block_until_ready(prefill(params, batch))
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits, axis=-1)
+
+    outs = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        if cfg.arch_type == "audio":
+            # audio decode consumes a frame embedding; feed the token's
+            # one-hot projection as a stand-in frame
+            step_in = jnp.zeros((args.batch, 1, cfg.d_model), jnp.float32)
+        else:
+            step_in = tok
+        logits, cache = decode(params, cache, step_in)
+        tok = jnp.argmax(logits, axis=-1)
+        outs.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+
+    gen = np.stack(outs, axis=1)
+    tok_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prefill({args.prompt_len} tok) {t_prefill*1e3:.1f}ms  "
+          f"decode {args.gen-1} steps {t_decode*1e3:.1f}ms "
+          f"({tok_s:.1f} tok/s)")
+    print(f"[serve] sample continuation (seq 0): {gen[0][:12].tolist()}")
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

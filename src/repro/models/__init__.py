@@ -1,0 +1,4 @@
+"""Model substrate: every assigned architecture as a functional JAX model."""
+from repro.models.model import (Model, build_model, cache_shapes, decode_step,
+                                forward, init_cache, init_params, loss_fn,
+                                logits_fn, param_shapes, prefill)

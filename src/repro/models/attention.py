@@ -1,0 +1,192 @@
+"""GQA/MQA attention with RoPE, sliding windows, prefix-LM masks and a
+KV cache decode path (incl. a shard_map flash-decode for long contexts).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common
+from repro.configs.base import ModelConfig
+
+FULL_WINDOW = 1 << 30  # "no window" sentinel large enough for any seq
+
+
+def init_attn_params(rng, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 4)
+    std = d ** -0.5
+    return {
+        "wq": common.normal_init(ks[0], (d, h * hd), std, dtype),
+        "wk": common.normal_init(ks[1], (d, kv * hd), std, dtype),
+        "wv": common.normal_init(ks[2], (d, kv * hd), std, dtype),
+        "wo": common.normal_init(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _repeat_kv(k, groups):
+    """(B,S,KV,hd) -> (B,S,KV*groups,hd) by repeating each kv head."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd))
+    return k.reshape(b, s, kv * groups, hd)
+
+
+def attend(q, k, v, mask):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd), mask: (B,Sq,Sk) or (Sq,Sk) bool."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None], scores, common.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def attention_block(params, x, positions, cfg: ModelConfig, *,
+                    window=FULL_WINDOW, prefix_len: int = 0):
+    """Self-attention over a full sequence (training / prefill).
+
+    x: (B, S, D); positions: (B, S) or (S,).
+    """
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(x @ params["wq"], h, hd)
+    k = _split_heads(x @ params["wk"], kv, hd)
+    v = _split_heads(x @ params["wv"], kv, hd)
+    if positions.ndim == 1:
+        positions = positions[None]
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    mask = common.attention_mask(positions, positions, window=window,
+                                 prefix_len=prefix_len)
+    out = attend(q, _repeat_kv(k, h // kv), _repeat_kv(v, h // kv), mask)
+    return out.reshape(out.shape[:2] + (h * hd,)) @ params["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
+                     window=FULL_WINDOW, sharded_kv_axis: str | None = None):
+    """x: (B, 1, D). cache_k/v: (B, S_max, KV, hd) with entries valid < pos.
+
+    Writes the new token's k/v at ``pos`` and attends over the cache.
+    ``sharded_kv_axis``: if set, run flash-decode under shard_map with the
+    cache sequence axis sharded over that mesh axis (long-context path).
+    Returns (out (B,1,D), new_k, new_v).
+    """
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b = x.shape[0]
+    q = _split_heads(x @ params["wq"], h, hd)
+    knew = _split_heads(x @ params["wk"], kv, hd)
+    vnew = _split_heads(x @ params["wv"], kv, hd)
+    posb = jnp.broadcast_to(pos.reshape(-1, 1), (b, 1))
+    q = common.apply_rope(q, posb, cfg.rope_theta)
+    knew = common.apply_rope(knew, posb, cfg.rope_theta)
+
+    if sharded_kv_axis is None:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, knew.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, vnew.astype(cache_v.dtype), pos, axis=1)
+        out = _decode_attend(q, cache_k, cache_v, pos, h // kv, window,
+                             kpos_offset=0)
+    else:
+        # shard-aware cache write: only the shard owning ``pos`` commits.
+        s_local = cache_k.shape[1]
+        idx = jax.lax.axis_index(sharded_kv_axis)
+        local_pos = pos - idx * s_local
+        safe_pos = jnp.clip(local_pos, 0, s_local - 1)
+        owner = (local_pos >= 0) & (local_pos < s_local)
+        upd_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, knew.astype(cache_k.dtype), safe_pos, axis=1)
+        upd_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, vnew.astype(cache_v.dtype), safe_pos, axis=1)
+        cache_k = jnp.where(owner, upd_k, cache_k)
+        cache_v = jnp.where(owner, upd_v, cache_v)
+        out = _flash_decode_sharded(q, cache_k, cache_v, pos, h // kv, window,
+                                    sharded_kv_axis)
+    return out.reshape(b, 1, h * hd) @ params["wo"], cache_k, cache_v
+
+
+def _decode_attend(q, ck, cv, pos, groups, window, kpos_offset):
+    """q (B,1,H,hd) vs cache (B,S,KV,hd); masked by validity & window.
+
+    Grouped-GQA form: q is reshaped to (B,1,KV,G,hd) and contracted
+    against the cache directly — no materialized `_repeat_kv` copy — and
+    the f32 accumulation happens inside the dot (preferred_element_type)
+    instead of via explicit f32 casts of the S-sized cache reads.
+    """
+    b, s, kvh, hd = ck.shape
+    q = q.reshape(b, 1, kvh, groups, hd)
+    kpos = jnp.arange(s) + kpos_offset
+    valid = (kpos <= pos) & ((pos - kpos) < window)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, ck,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    scores = jnp.where(valid[None, None, None, None, :], scores,
+                       common.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, kvh * groups, hd).astype(q.dtype)
+
+
+def _flash_decode_sharded(q, ck, cv, pos, groups, window, axis_name):
+    """Flash-decode combine: each shard of the cache computes a partial
+    (max, sum-exp, weighted-V) triple over its sequence slice; shards are
+    combined with a numerically-stable log-sum-exp psum.  Collective bytes:
+    O(B*H*hd) instead of all-gathering the O(B*S*KV*hd) cache.
+
+    Must be called with ``axis_name`` bound (inside shard_map) and ck/cv
+    holding only the local sequence slice.
+    """
+    b, s_local, _, hd = ck.shape
+    idx = jax.lax.axis_index(axis_name)
+    kpos_offset = idx * s_local
+    k = _repeat_kv(ck, groups)
+    v = _repeat_kv(cv, groups)
+    kpos = jnp.arange(s_local) + kpos_offset
+    valid = (kpos <= pos) & ((pos - kpos) < window)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, common.NEG_INF)
+    local_max = jnp.max(scores, axis=-1)                       # (B,H,1)
+    gmax = jax.lax.pmax(local_max, axis_name)
+    exp = jnp.exp(scores - gmax[..., None])
+    denom = jax.lax.psum(jnp.sum(exp, axis=-1), axis_name)     # (B,H,1)
+    weighted = jnp.einsum("bhqk,bkhd->bqhd", exp, v.astype(jnp.float32))
+    numer = jax.lax.psum(weighted, axis_name)                  # (B,1,H,hd)
+    out = numer / jnp.swapaxes(denom, 1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+def flash_decode_call(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                      mesh, seq_axis: str, window=FULL_WINDOW):
+    """shard_map wrapper for one decode-attention call with the cache's
+    sequence axis sharded over ``seq_axis``.  x/pos replicated."""
+    def body(params_, x_, ck, cv, pos_):
+        out, nk, nv = decode_attention(params_, x_, ck, cv, pos_, cfg,
+                                       window=window, sharded_kv_axis=seq_axis)
+        return out, nk, nv
+
+    pspec = jax.tree.map(lambda _: P(), params)
+    cache_spec = P(None, seq_axis, None, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, P(), cache_spec, cache_spec, P()),
+        out_specs=(P(), cache_spec, cache_spec),
+        check_vma=False,
+    )(params, x, cache_k, cache_v, pos)

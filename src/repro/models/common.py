@@ -1,0 +1,119 @@
+"""Shared model building blocks: norms, RoPE, initialisers, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def normal_init(rng: jax.Array, shape, std: float, dtype) -> jax.Array:
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))          # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attention_mask(q_pos: jax.Array, k_pos: jax.Array, *, window,
+                   prefix_len: int = 0) -> jax.Array:
+    """Boolean (..., q, k) mask of *allowed* attention.
+
+    causal with optional sliding ``window`` (q - k < window); positions
+    ``< prefix_len`` attend bidirectionally among themselves (prefix-LM,
+    used by the VLM config).  ``window`` may be a traced scalar (per-layer
+    local/global selection) — pass a huge value for full attention.
+    """
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    causal = k <= q
+    windowed = (q - k) < window
+    allowed = causal & windowed
+    if prefix_len > 0:
+        in_prefix = (q < prefix_len) & (k < prefix_len)
+        allowed = allowed | in_prefix
+    return allowed
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean token NLL.  logits (..., V) any float dtype; labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(x: jax.Array, lm_head: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None,
+                          chunk: int = 2048) -> jax.Array:
+    """CE that never materialises the full (tokens, V) logits tensor.
+
+    Scans over sequence chunks: per chunk computes logits -> (logz, gold)
+    and discards them.  ~V/chunk x less live memory for the loss; used as a
+    beyond-paper memory optimisation for the 128k-262k vocab archs.
+
+    x: (B, S, D); lm_head: (D, V); labels: (B, S).
+    """
+    b, s, d = x.shape
+    n = max(1, s // chunk)
+    while s % n != 0:
+        n -= 1
+    cs = s // n
+    xs = x.reshape(b, n, cs, d).swapaxes(0, 1)            # (n, B, cs, D)
+    ls = labels.reshape(b, n, cs).swapaxes(0, 1)
+    ms = (mask.reshape(b, n, cs).swapaxes(0, 1).astype(jnp.float32)
+          if mask is not None else jnp.ones((n, b, cs), jnp.float32))
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, lc, mc = inp
+        logits = (xc @ lm_head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

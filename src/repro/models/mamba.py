@@ -1,0 +1,285 @@
+"""Mamba-1 (selective scan, falcon-mamba) and Mamba-2 (SSD scalar-decay,
+zamba2) blocks in pure JAX.
+
+Training/prefill uses a *chunked* linear-recurrence scan:
+``lax.scan`` over sequence chunks carrying the state, with
+``lax.associative_scan`` inside each chunk.  This bounds the materialised
+(B, chunk, d_inner, N) tensor instead of (B, S, d_inner, N) — the TPU
+adaptation of the CUDA fused selective-scan kernel (see DESIGN.md §3).
+
+Decode is the exact O(1)-state recurrence step (tested against the scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.configs.base import ModelConfig
+
+
+def _affine_combine(e1, e2):
+    """Compose affine recurrences h -> a*h + b."""
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def _chunk_split(x, chunk: int):
+    """(B, S, ...) -> (n, B, cs, ...) scan-ready chunks (largest cs <= chunk
+    dividing S)."""
+    B, S = x.shape[0], x.shape[1]
+    n = max(1, S // chunk)
+    while S % n != 0:
+        n -= 1
+    cs = S // n
+    return jnp.moveaxis(x.reshape((B, n, cs) + x.shape[2:]), 1, 0)
+
+
+def _chunk_merge(x_chunks):
+    """(n, B, cs, ...) -> (B, S, ...)."""
+    n, B, cs = x_chunks.shape[0], x_chunks.shape[1], x_chunks.shape[2]
+    return jnp.moveaxis(x_chunks, 0, 1).reshape((B, n * cs) + x_chunks.shape[3:])
+
+
+def chunked_linear_scan(a, b, h0, chunk: int):
+    """Run h_t = a_t * h_{t-1} + b_t along axis 1 (time).
+
+    a, b: (B, S, ...) broadcast-compatible; h0: (B, ...).
+    Returns (h_all (B,S,...), h_last (B,...)).
+
+    NOTE: materializes h for every position — O(S * state) HBM.  The
+    model blocks below instead run ``chunked_ssm`` which keeps the
+    per-position state inside the chunk body (only y and the boundary
+    states ever hit HBM); this function remains the reference oracle
+    (tests/test_mamba.py) and the small-shape path.
+    """
+    a_c = _chunk_split(jnp.broadcast_to(a, b.shape), chunk)
+    b_c = _chunk_split(b, chunk)
+
+    def body(h, inp):
+        ac, bc = inp
+        a_cum, b_cum = jax.lax.associative_scan(_affine_combine, (ac, bc), axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(body, h0, (a_c, b_c))
+    return _chunk_merge(h_chunks), h_last
+
+
+def chunked_ssm(ab_fn, y_fn, chunk_inputs, h0, chunk: int):
+    """Chunked SSM driver that never materializes (B, S, state) in HBM.
+
+    ``chunk_inputs``: pytree of (B, S, ...) tensors, split into scan
+    chunks.  Per chunk the body computes a/b via ``ab_fn(inputs_chunk)``,
+    runs the in-chunk associative scan, reduces the states to the output
+    via ``y_fn(h_all, inputs_chunk)`` and carries only the boundary
+    state.  HBM sees the chunked inputs, the y output and one state per
+    chunk boundary — the TPU analogue of the fused CUDA selective scan.
+    """
+    xs = jax.tree.map(lambda t: _chunk_split(t, chunk), chunk_inputs)
+
+    @jax.checkpoint
+    def body(h, inp):
+        a, b = ab_fn(inp)
+        a_cum, b_cum = jax.lax.associative_scan(
+            _affine_combine, (jnp.broadcast_to(a, b.shape), b), axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        return h_all[:, -1], y_fn(h_all, inp)
+
+    # checkpointed body: the backward pass recomputes the (B, c, ..., N)
+    # in-chunk states from the tiny carried boundary state instead of
+    # keeping one h_all per chunk alive for the whole layer.
+    h_last, y_chunks = jax.lax.scan(body, h0, xs)
+    return _chunk_merge(y_chunks), h_last
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x: (B,S,C), w: (Kw,C), b: (C,)."""
+    kw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(kw))
+    return out + b
+
+
+def conv_step(conv_state, xt, w, b):
+    """Single-token causal conv.  conv_state: (B,Kw-1,C) last inputs;
+    xt: (B,1,C).  Returns (yt, new_state)."""
+    window = jnp.concatenate([conv_state, xt], axis=1)        # (B,Kw,C)
+    yt = jnp.einsum("bkc,kc->bc", window, w)[:, None] + b
+    return yt, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+def init_mamba1_params(rng, cfg: ModelConfig, dtype):
+    d, di, st, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(rng, 6)
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, st + 1, dtype=jnp.float32),
+                                      (di, st)))
+    return {
+        "in_proj": common.normal_init(ks[0], (d, 2 * di), d ** -0.5, dtype),
+        "conv_w": common.normal_init(ks[1], (cfg.d_conv, di), cfg.d_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": common.normal_init(ks[2], (di, dr + 2 * st), di ** -0.5, dtype),
+        "dt_proj": common.normal_init(ks[3], (dr, di), dr ** -0.5, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": a_init.astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": common.normal_init(ks[4], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _mamba1_ssm_inputs(params, xc, cfg: ModelConfig):
+    """xc (B,S,di) -> (a (B,S,di,N), b (B,S,di,N), C (B,S,N), dx (B,S,di))."""
+    dr, st = cfg.dt_rank, cfg.ssm_state
+    proj = (xc @ params["x_proj"]).astype(jnp.float32)
+    dt_r, B_, C_ = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,di)
+    A = -jnp.exp(params["A_log"])                                  # (di,N)
+    a = jnp.exp(dt[..., None] * A)                                 # (B,S,di,N)
+    xf = xc.astype(jnp.float32)
+    b = (dt * xf)[..., None] * B_[..., None, :]                    # (B,S,di,N)
+    return a, b, C_, xf
+
+
+def mamba1_block(params, x, cfg: ModelConfig, ssm_state=None, conv_state=None):
+    """Full-sequence Mamba-1 mixer.  x: (B,S,D) -> (y, (ssm, conv) states).
+
+    The O(S·di·N) a/b/h tensors live only inside the chunk scan body
+    (see ``chunked_ssm``); HBM sees (B,S,di)-sized tensors.
+    """
+    di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc_pre = causal_conv1d(x_in, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc_pre.astype(jnp.float32)).astype(x.dtype)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32) if ssm_state is None \
+        else ssm_state
+
+    if cfg.ssm_kernel:
+        # fused Pallas selective scan (forward/serving path): h stays in
+        # VMEM for the whole sequence, HBM sees only (B,S,di) tensors.
+        from repro.kernels import ops as kops
+        dr, st = cfg.dt_rank, cfg.ssm_state
+        proj = (xc @ params["x_proj"]).astype(jnp.float32)
+        dt_r, B_, C_ = jnp.split(proj, [dr, dr + st], axis=-1)
+        dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+        y, h_last = kops.selective_scan(
+            xc.astype(jnp.float32), dt, params["A_log"], B_, C_,
+            params["D"], h0=h0)      # D-skip applied inside the kernel
+    else:
+        def ab_fn(xc_c):
+            a, b, _, _ = _mamba1_ssm_inputs(params, xc_c, cfg)
+            return a, b
+
+        def y_fn(h_all, xc_c):
+            _, _, C_, xf = _mamba1_ssm_inputs(params, xc_c, cfg)
+            return jnp.einsum("bsdn,bsn->bsd", h_all, C_) + params["D"] * xf
+
+        y, h_last = chunked_ssm(ab_fn, y_fn, xc, h0, cfg.ssm_chunk)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_conv = x_in[:, -(cfg.d_conv - 1):, :]
+    return y @ params["out_proj"], (h_last, new_conv)
+
+
+def mamba1_decode_step(params, x, ssm_state, conv_state, cfg: ModelConfig):
+    """x: (B,1,D); ssm_state (B,di,N) f32; conv_state (B,Kw-1,di)."""
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc_pre, new_conv = conv_step(conv_state, x_in, params["conv_w"],
+                                 params["conv_b"])
+    xc = jax.nn.silu(xc_pre.astype(jnp.float32)).astype(x.dtype)
+    a, b, C_, xf = _mamba1_ssm_inputs(params, xc, cfg)
+    h = a[:, 0] * ssm_state + b[:, 0]                            # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, C_[:, 0]) + params["D"] * xf[:, 0]
+    y = (y[:, None] * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"], h, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+def init_mamba2_params(rng, cfg: ModelConfig, dtype):
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    ks = jax.random.split(rng, 4)
+    proj_out = 2 * di + 2 * st + nh
+    return {
+        "in_proj": common.normal_init(ks[0], (d, proj_out), d ** -0.5, dtype),
+        "conv_w": common.normal_init(ks[1], (cfg.d_conv, di), cfg.d_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": common.normal_init(ks[2], (di, d), di ** -0.5, dtype),
+    }
+
+
+def mamba2_block(params, x, cfg: ModelConfig, ssm_state=None, conv_state=None):
+    """x: (B,S,D) -> (y, (ssm (B,nh,p,N), conv (B,Kw-1,di)))."""
+    di, st, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bsz, S = x.shape[0], x.shape[1]
+    proj = x @ params["in_proj"]
+    xz, rest = jnp.split(proj, [2 * di], axis=-1)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    B_, C_, dt_raw = jnp.split(rest, [st, 2 * st], axis=-1)
+    xc_pre = causal_conv1d(x_in, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc_pre.astype(jnp.float32)).astype(x.dtype)
+
+    A = -jnp.exp(params["A_log"])
+    h0 = jnp.zeros((Bsz, nh, p, st), jnp.float32) if ssm_state is None \
+        else ssm_state
+
+    def ab_fn(inp):
+        xc_c, B_c, _, dt_raw_c = inp
+        dt = jax.nn.softplus(dt_raw_c.astype(jnp.float32) + params["dt_bias"])
+        a = jnp.exp(dt * A)[..., None, None]                     # (B,c,nh,1,1)
+        xh = xc_c.astype(jnp.float32).reshape(xc_c.shape[:2] + (nh, p))
+        Bf = B_c.astype(jnp.float32)
+        b = (dt[..., None] * xh)[..., None] * Bf[:, :, None, None, :]
+        return a, b                                              # (B,c,nh,p,N)
+
+    def y_fn(h_all, inp):
+        xc_c, _, C_c, _ = inp
+        xh = xc_c.astype(jnp.float32).reshape(xc_c.shape[:2] + (nh, p))
+        yc = jnp.einsum("bshpn,bsn->bshp", h_all, C_c.astype(jnp.float32))
+        return yc + params["D"][:, None] * xh
+
+    y, h_last = chunked_ssm(ab_fn, y_fn, (xc, B_, C_, dt_raw), h0,
+                            cfg.ssm_chunk)
+    y = y.reshape(Bsz, S, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_conv = x_in[:, -(cfg.d_conv - 1):, :]
+    return y @ params["out_proj"], (h_last, new_conv)
+
+
+def mamba2_decode_step(params, x, ssm_state, conv_state, cfg: ModelConfig):
+    di, st, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bsz = x.shape[0]
+    proj = x @ params["in_proj"]
+    xz, rest = jnp.split(proj, [2 * di], axis=-1)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    B_, C_, dt_raw = jnp.split(rest, [st, 2 * st], axis=-1)
+    xc_pre, new_conv = conv_step(conv_state, x_in, params["conv_w"],
+                                 params["conv_b"])
+    xc = jax.nn.silu(xc_pre.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)[..., None, None]                         # (B,nh,1,1)
+    xh = xc.astype(jnp.float32).reshape(Bsz, nh, p)
+    Bf = B_[:, 0].astype(jnp.float32)
+    b = (dt[..., None] * xh)[..., None] * Bf[:, None, None, :]   # (B,nh,p,N)
+    h = a * ssm_state + b
+    y = jnp.einsum("bhpn,bn->bhp", h, C_[:, 0].astype(jnp.float32))
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(Bsz, 1, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"], h, new_conv

@@ -1,0 +1,22 @@
+"""Gated MLP (SwiGLU) used by all attention architectures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_mlp_params(rng, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": common.normal_init(ks[0], (d_model, d_ff), d_model ** -0.5, dtype),
+        "w_up": common.normal_init(ks[1], (d_model, d_ff), d_model ** -0.5, dtype),
+        "w_down": common.normal_init(ks[2], (d_ff, d_model), d_ff ** -0.5, dtype),
+    }
+
+
+def mlp_block(params, x):
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    up = (x @ params["w_up"]).astype(jnp.float32)
+    return ((gate * up).astype(x.dtype)) @ params["w_down"]

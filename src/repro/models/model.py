@@ -1,0 +1,478 @@
+"""Model assembly: one functional Model API for all assigned architectures.
+
+Design notes
+------------
+* Layer parameters are STACKED (leading ``L`` axis) and the stack is applied
+  with ``lax.scan`` — keeps the HLO size O(1) in depth (essential for the
+  126-layer llama3-405b dry-run).
+* Local/global attention (gemma3 5:1), sliding windows (mixtral) and full
+  attention share ONE code path: a per-layer ``window`` scalar fed through
+  the scan; ``FULL_WINDOW`` disables windowing.
+* Hybrid (zamba2) runs a flat scan over Mamba-2 layers and applies the
+  single SHARED attention block after every ``hybrid_attn_every``-th layer
+  via ``lax.cond`` (same shared params each application, distinct KV cache
+  slice per application at decode time).
+* ``vlm``/``audio`` consume precomputed frontend embeddings per the spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mamba, mlp, moe
+from repro.models.attention import FULL_WINDOW
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(rng, cfg: ModelConfig, dtype, with_moe: bool):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "attn": attention.init_attn_params(ks[0], cfg, dtype),
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if with_moe:
+        p["moe"] = moe.init_moe_params(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_ssm_block(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 2)
+    init = (mamba.init_mamba1_params if cfg.ssm_variant == "mamba1"
+            else mamba.init_mamba2_params)
+    return {"mixer": init(ks[0], cfg, dtype),
+            "ln": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> PyTree:
+    dtype = common.dtype_of(cfg.dtype)
+    k_embed, k_layers, k_head, k_shared = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        layer_init = lambda k: _init_attn_block(k, cfg, dtype, with_moe=False)
+    elif cfg.arch_type == "moe":
+        layer_init = lambda k: _init_attn_block(k, cfg, dtype, with_moe=True)
+    else:  # ssm / hybrid
+        layer_init = lambda k: _init_ssm_block(k, cfg, dtype)
+
+    params: dict = {
+        "layers": jax.vmap(layer_init)(layer_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": common.normal_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                      cfg.d_model ** -0.5, dtype),
+    }
+    if cfg.arch_type != "audio":  # audio consumes frame embeddings directly
+        params["embed"] = common.normal_init(
+            k_embed, (cfg.vocab_size, cfg.d_model), 1.0, dtype)
+    if cfg.arch_type == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_attn"] = _init_attn_block(k_shared, cfg, dtype,
+                                                 with_moe=False)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct pytree without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer window schedule (static, host-side)
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) int32 attention window per layer (FULL_WINDOW = unbounded)."""
+    L = cfg.num_layers
+    if cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio
+        win = [cfg.sliding_window if (i % (r + 1)) != r else FULL_WINDOW
+               for i in range(L)]
+    elif cfg.sliding_window > 0:
+        win = [cfg.sliding_window] * L
+    else:
+        win = [FULL_WINDOW] * L
+    return jnp.asarray(win, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_layer(layer_params, x, positions, window, cfg: ModelConfig):
+    """Pre-norm attention block; returns (x, aux, (k, v))."""
+    h = common.rms_norm(x, layer_params["ln1"], cfg.norm_eps)
+    a, kv = attention.attention_block(layer_params["attn"], h, positions, cfg,
+                                      window=window,
+                                      prefix_len=cfg.prefix_tokens)
+    x = x + a
+    h = common.rms_norm(x, layer_params["ln2"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        m, aux = moe.moe_block(layer_params["moe"], h, cfg)
+    else:
+        m, aux = mlp.mlp_block(layer_params["mlp"], h), 0.0
+    return x + m, aux, kv
+
+
+def _ssm_layer(layer_params, x, cfg: ModelConfig, ssm_state=None,
+               conv_state=None):
+    h = common.rms_norm(x, layer_params["ln"], cfg.norm_eps)
+    block = mamba.mamba1_block if cfg.ssm_variant == "mamba1" else \
+        mamba.mamba2_block
+    y, states = block(layer_params["mixer"], h, cfg, ssm_state, conv_state)
+    return x + y, states
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Tokens and/or frontend embeddings -> (B, S, D) hidden input."""
+    dtype = common.dtype_of(cfg.dtype)
+    if cfg.arch_type == "audio":
+        return batch["embeds"].astype(dtype)
+    tok = params["embed"][batch["tokens"]]
+    if cfg.arch_type == "vlm":
+        prefix = batch["embeds"].astype(dtype)          # (B, P, D) patch embeds
+        return jnp.concatenate([prefix, tok], axis=1)
+    return tok
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, remat: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+    """-> (final hidden (B,S,D), aux_loss scalar)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None]
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        windows = layer_windows(cfg)
+
+        def body(carry, inp):
+            xc, aux = carry
+            lp, win = inp
+            xn, a, _ = _attn_mlp_layer(lp, xc, positions, win, cfg)
+            return (xn, aux + a), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0),
+                                   (params["layers"], windows))
+
+    elif cfg.arch_type == "ssm":
+        def body(xc, lp):
+            xn, _ = _ssm_layer(lp, xc, cfg)
+            return xn, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        aux = aux0
+
+    else:  # hybrid
+        every = cfg.hybrid_attn_every
+        shared = params.get("shared_attn")
+
+        def body(carry, inp):
+            xc, idx = carry
+            lp = inp
+            xn, _ = _ssm_layer(lp, xc, cfg)
+
+            def with_attn(xh):
+                xh2, _, _ = _attn_mlp_layer(shared, xh, positions,
+                                            FULL_WINDOW, cfg)
+                return xh2
+
+            fire = (every > 0) & (jnp.mod(idx + 1, every) == 0)
+            xn = jax.lax.cond(fire, with_attn, lambda h: h, xn)
+            return (xn, idx + 1), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)),
+                                 params["layers"])
+        aux = aux0
+
+    return common.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def logits_fn(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    h, _ = forward(params, cfg, batch)
+    return h @ params["lm_head"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, rng=None, *,
+            remat: bool = False) -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux).  Expects batch["labels"];
+    ``label_mask`` optional (VLM: loss only on text suffix)."""
+    h, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    mask = batch.get("label_mask")
+    if cfg.arch_type == "vlm":
+        # hidden covers prefix+text; labels only cover the text part
+        h = h[:, cfg.prefix_tokens:]
+    if cfg.loss_chunk > 0:
+        ce = common.chunked_cross_entropy(h, params["lm_head"], labels, mask,
+                                          chunk=cfg.loss_chunk)
+    else:
+        ce = common.cross_entropy(h @ params["lm_head"], labels, mask)
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int) -> PyTree:
+    dtype = common.dtype_of(cfg.dtype)
+    L, hd = cfg.num_layers, cfg.resolved_head_dim
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        kvshape = (L, batch_size, max_seq, cfg.num_kv_heads, hd)
+        cache["k"] = jnp.zeros(kvshape, dtype)
+        cache["v"] = jnp.zeros(kvshape, dtype)
+    elif cfg.arch_type == "ssm":
+        cache["ssm"] = jnp.zeros((L, batch_size, cfg.d_inner, cfg.ssm_state),
+                                 jnp.float32)
+        cache["conv"] = jnp.zeros((L, batch_size, cfg.d_conv - 1, cfg.d_inner),
+                                  dtype)
+    else:  # hybrid
+        napps = cfg.num_layers // max(cfg.hybrid_attn_every, 1)
+        cache["ssm"] = jnp.zeros((L, batch_size, cfg.ssm_heads,
+                                  cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((L, batch_size, cfg.d_conv - 1, cfg.d_inner),
+                                  dtype)
+        kvshape = (napps, batch_size, max_seq, cfg.num_kv_heads, hd)
+        cache["k"] = jnp.zeros(kvshape, dtype)
+        cache["v"] = jnp.zeros(kvshape, dtype)
+    return cache
+
+
+def cache_shapes(cfg: ModelConfig, batch_size: int, max_seq: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch_size, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_seq: int):
+    """Run the prompt, return (last-token logits (B,V), filled cache)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None]
+    cache = init_cache(cfg, B, max_seq)
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        windows = layer_windows(cfg)
+
+        def body(xc, inp):
+            lp, win = inp
+            xn, _, (k, v) = _attn_mlp_layer(lp, xc, positions, win, cfg)
+            return xn, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows))
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+
+    elif cfg.arch_type == "ssm":
+        def body(xc, lp):
+            xn, (h, conv) = _ssm_layer(lp, xc, cfg)
+            return xn, (h, conv)
+
+        x, (hs, convs) = jax.lax.scan(body, x, params["layers"])
+        cache["ssm"], cache["conv"] = hs, convs.astype(cache["conv"].dtype)
+
+    else:  # hybrid
+        every = cfg.hybrid_attn_every
+        shared = params.get("shared_attn")
+        napps = cfg.num_layers // max(every, 1)
+
+        def body(carry, lp):
+            xc, idx, app, ck, cv = carry
+            xn, (h, conv) = _ssm_layer(lp, xc, cfg)
+
+            def with_attn(args):
+                xh, app_, ck_, cv_ = args
+                hn = common.rms_norm(xh, shared["ln1"], cfg.norm_eps)
+                a, (k, v) = attention.attention_block(
+                    shared["attn"], hn, positions, cfg, window=FULL_WINDOW)
+                xh = xh + a
+                hn = common.rms_norm(xh, shared["ln2"], cfg.norm_eps)
+                xh = xh + mlp.mlp_block(shared["mlp"], hn)
+                pad_k = jnp.zeros_like(ck_[0])
+                pad_k = jax.lax.dynamic_update_slice_in_dim(
+                    pad_k, k.astype(pad_k.dtype), 0, axis=1)
+                pad_v = jnp.zeros_like(cv_[0])
+                pad_v = jax.lax.dynamic_update_slice_in_dim(
+                    pad_v, v.astype(pad_v.dtype), 0, axis=1)
+                ck_ = jax.lax.dynamic_update_slice_in_dim(
+                    ck_, pad_k[None], app_, axis=0)
+                cv_ = jax.lax.dynamic_update_slice_in_dim(
+                    cv_, pad_v[None], app_, axis=0)
+                return xh, app_ + 1, ck_, cv_
+
+            fire = (every > 0) & (jnp.mod(idx + 1, every) == 0)
+            xn, app, ck, cv = jax.lax.cond(
+                fire, with_attn, lambda a: a, (xn, app, ck, cv))
+            return (xn, idx + 1, app, ck, cv), (h, conv)
+
+        init = (x, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                cache["k"], cache["v"])
+        (x, _, _, ck, cv), (hs, convs) = jax.lax.scan(body, init,
+                                                      params["layers"])
+        cache["ssm"], cache["conv"] = hs, convs.astype(cache["conv"].dtype)
+        cache["k"], cache["v"] = ck, cv
+
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    h = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return (h @ params["lm_head"])[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, cache: PyTree, token: jax.Array,
+                *, mesh=None, flash_axis: str | None = None):
+    """token: (B,) int32 (or (B,1,D) embeds for audio).  Returns
+    (logits (B,V), new cache).  ``flash_axis``: mesh axis holding the KV
+    cache sequence shards (long-context shard_map flash decode)."""
+    dtype = common.dtype_of(cfg.dtype)
+    pos = cache["pos"]
+    if cfg.arch_type == "audio":
+        x = token.astype(dtype)            # (B,1,D) frame embedding
+    else:
+        x = params["embed"][token][:, None] if token.ndim == 1 else \
+            params["embed"][token]
+    B = x.shape[0]
+    windows = layer_windows(cfg) if cfg.uses_attention else None
+
+    def attn_decode(lp, xc, ck, cv, win):
+        h = common.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        if flash_axis is not None:
+            a, nk, nv = attention.flash_decode_call(
+                lp["attn"], h, ck, cv, pos, cfg, mesh, flash_axis, window=win)
+        else:
+            a, nk, nv = attention.decode_attention(
+                lp["attn"], h, ck, cv, pos, cfg, window=win)
+        xc = xc + a
+        h = common.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        if cfg.arch_type == "moe":
+            mo, _ = moe.moe_block(lp["moe"], h, cfg)
+        else:
+            mo = mlp.mlp_block(lp["mlp"], h)
+        return xc + mo, nk, nv
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        def body(xc, inp):
+            lp, ck, cv, win = inp
+            xn, nk, nv = attn_decode(lp, xc, ck, cv, win)
+            return xn, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"], windows))
+        cache = dict(cache, k=nk, v=nv)
+
+    elif cfg.arch_type == "ssm":
+        step = (mamba.mamba1_decode_step if cfg.ssm_variant == "mamba1"
+                else mamba.mamba2_decode_step)
+
+        def body(xc, inp):
+            lp, h, conv = inp
+            hn = common.rms_norm(xc, lp["ln"], cfg.norm_eps)
+            y, nh, nconv = step(lp["mixer"], hn, h, conv, cfg)
+            return xc + y, (nh, nconv.astype(conv.dtype))
+
+        x, (nh, nconv) = jax.lax.scan(body, x, (params["layers"],
+                                                cache["ssm"], cache["conv"]))
+        cache = dict(cache, ssm=nh, conv=nconv)
+
+    else:  # hybrid
+        every = cfg.hybrid_attn_every
+        shared = params.get("shared_attn")
+
+        def body(carry, inp):
+            xc, idx, app, ck, cv = carry
+            lp, h, conv = inp
+            hn = common.rms_norm(xc, lp["ln"], cfg.norm_eps)
+            y, nh, nconv = mamba.mamba2_decode_step(lp["mixer"], hn, h, conv,
+                                                    cfg)
+            xn = xc + y
+
+            def with_attn(args):
+                xh, app_, ck_, cv_ = args
+                hs = common.rms_norm(xh, shared["ln1"], cfg.norm_eps)
+                ck_l = jax.lax.dynamic_index_in_dim(ck_, app_, 0, False)
+                cv_l = jax.lax.dynamic_index_in_dim(cv_, app_, 0, False)
+                a, nk, nv = attention.decode_attention(
+                    shared["attn"], hs, ck_l, cv_l, pos, cfg,
+                    window=FULL_WINDOW)
+                ck_ = jax.lax.dynamic_update_slice_in_dim(ck_, nk[None], app_,
+                                                          axis=0)
+                cv_ = jax.lax.dynamic_update_slice_in_dim(cv_, nv[None], app_,
+                                                          axis=0)
+                xh = xh + a
+                hs = common.rms_norm(xh, shared["ln2"], cfg.norm_eps)
+                xh = xh + mlp.mlp_block(shared["mlp"], hs)
+                return xh, app_ + 1, ck_, cv_
+
+            fire = (every > 0) & (jnp.mod(idx + 1, every) == 0)
+            xn, app, ck, cv = jax.lax.cond(fire, with_attn, lambda a: a,
+                                           (xn, app, ck, cv))
+            return (xn, idx + 1, app, ck, cv), (nh, nconv.astype(conv.dtype))
+
+        init = (x, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                cache["k"], cache["v"])
+        (x, _, _, ck, cv), (nh, nconv) = jax.lax.scan(
+            body, init, (params["layers"], cache["ssm"], cache["conv"]))
+        cache = dict(cache, ssm=nh, conv=nconv, k=ck, v=cv)
+
+    cache["pos"] = pos + 1
+    h = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (h @ params["lm_head"])[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Model bundle
+# ---------------------------------------------------------------------------
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Any
+    forward: Any
+    loss: Any
+    prefill: Any
+    decode_step: Any
+    init_cache: Any
+
+    def param_count(self, params=None) -> int:
+        tree = params if params is not None else param_shapes(self.cfg)
+        import numpy as np
+        return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        forward=functools.partial(forward, cfg=cfg),
+        loss=lambda params, batch, rng=None, **kw: loss_fn(params, cfg, batch,
+                                                           rng, **kw),
+        prefill=lambda params, batch, max_seq: prefill(params, cfg, batch,
+                                                       max_seq),
+        decode_step=lambda params, cache, token, **kw: decode_step(
+            params, cfg, cache, token, **kw),
+        init_cache=functools.partial(init_cache, cfg),
+    )

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch/combine
+einsums (the standard TPU formulation — no scatter/gather, MXU-friendly)
+with a Switch-style load-balance auxiliary loss.
+
+Covers both assigned MoE archs:
+  * mixtral-8x7b      — 8 experts, top-2, per-expert tensor parallelism
+  * qwen3-moe-235b    — 128 experts, top-8, expert-axis parallelism
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.configs.base import ModelConfig
+
+
+def init_moe_params(rng, cfg: ModelConfig, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": common.normal_init(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "w_gate": common.normal_init(ks[1], (e, d, ff), d ** -0.5, dtype),
+        "w_up": common.normal_init(ks[2], (e, d, ff), d ** -0.5, dtype),
+        "w_down": common.normal_init(ks[3], (e, ff, d), ff ** -0.5, dtype),
+    }
+
+
+def router_topk(logits: jax.Array, k: int):
+    """logits (T, E) -> (weights (T,k), indices (T,k), probs (T,E)).
+
+    Weights are softmax over the selected k (Mixtral/Qwen renormalise)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    weights = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return weights, top_i, probs
+
+
+def load_balance_loss(probs: jax.Array, top_i: jax.Array, num_experts: int):
+    """Switch-Transformer aux loss: E * sum_e f_e * p_e."""
+    t = probs.shape[0]
+    assign = jax.nn.one_hot(top_i[:, 0], num_experts, dtype=jnp.float32)
+    f = jnp.mean(assign, axis=0)            # fraction routed (top-1 proxy)
+    p = jnp.mean(probs, axis=0)             # mean router prob
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_block(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    GShard-style grouped capacity dispatch.  Tokens are split into
+    groups of <= cfg.moe_group_size; each group dispatches into its own
+    expert buffers of capacity C = ceil(g * k * capacity_factor / E).
+    Overflow within a group is dropped (contributes zero).
+
+    Grouping matters: a single global group makes the dispatch/combine
+    einsums O(T * E * C) = O(T^2 * k * cf) FLOPs — quadratic in tokens
+    and 27x the expert matmul cost at 32k-token prefill (measured,
+    EXPERIMENTS.md §Perf pair D).  With g-token groups the dispatch is
+    O(T * E * c) with c ~ g*k*cf/E, a few % of the expert matmuls.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    g = min(cfg.moe_group_size or t, t)
+    while t % g != 0:        # largest divisor of T not above the target
+        g -= 1
+    n_groups = t // g
+    cap = int(max(1, round(g * k * cfg.capacity_factor / e)))
+    # round capacity to an MXU-friendly multiple of 8 where possible
+    cap = max(8, (cap + 7) // 8 * 8) if g >= 64 else cap
+
+    xg = x.reshape(n_groups, g, d)                               # (G,g,D)
+    weights, top_i, probs = router_topk(
+        jnp.einsum("gtd,de->gte", xg, params["router"]), k)      # (G,g,k)
+    aux = load_balance_loss(probs.reshape(t, e),
+                            top_i.reshape(t, k), e) * cfg.moe_aux_coef
+
+    # position of each (token, choice) in its expert's buffer, per group
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.int32)           # (G,g,k,E)
+    flat = onehot.reshape(n_groups, g * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat              # (G,g*k,E)
+    pos = jnp.sum(flat * pos_in_expert, axis=-1).reshape(n_groups, g, k)
+    keep = pos < cap
+    w = weights * keep.astype(weights.dtype)
+
+    # dispatch tensor (G, g, E, C): w if token t goes to slot (e, c)
+    slot = jax.nn.one_hot(pos, cap, dtype=jnp.float32)           # (G,g,k,C)
+    oh = onehot.astype(jnp.float32)
+    disp = jnp.einsum("gtke,gtkc->gtec", oh,
+                      slot * keep[..., None].astype(jnp.float32))
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", oh, slot, w.astype(jnp.float32))
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp,
+                           xg.astype(jnp.float32)).astype(x.dtype)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in,
+                                  params["w_gate"]).astype(jnp.float32))
+    up = jnp.einsum("gecd,edf->gecf", expert_in,
+                    params["w_up"]).astype(jnp.float32)
+    act = (gate * up).astype(x.dtype)
+    expert_out = jnp.einsum("gecf,efd->gecd", act, params["w_down"])
+
+    out = jnp.einsum("gtec,gecd->gtd", comb, expert_out.astype(jnp.float32))
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def moe_block_dense_ref(params, x, cfg: ModelConfig):
+    """Oracle: run EVERY expert on every token and combine with the exact
+    top-k weights (no capacity drops).  O(E x) compute — tests only."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(b * s, d)
+    weights, top_i, _ = router_topk(xt @ params["router"], k)
+    gate = jax.nn.silu(jnp.einsum("td,edf->etf", xt, params["w_gate"]
+                                  ).astype(jnp.float32))
+    up = jnp.einsum("td,edf->etf", xt, params["w_up"]).astype(jnp.float32)
+    outs = jnp.einsum("etf,efd->etd", (gate * up).astype(x.dtype),
+                      params["w_down"])                          # (E,T,D)
+    mask = jax.nn.one_hot(top_i, e, dtype=jnp.float32) * weights[..., None]
+    w_e = jnp.sum(mask, axis=1)                                  # (T,E)
+    out = jnp.einsum("te,etd->td", w_e, outs.astype(jnp.float32))
+    return out.reshape(b, s, d).astype(x.dtype)

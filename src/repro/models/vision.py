@@ -1,0 +1,182 @@
+"""The paper's own experiment backbones (Appendix A.1), in pure JAX:
+
+* ``mlp``       — MNIST:   200-200-10 fully connected.
+* ``cnn``       — CIFAR-10: conv5x5(64) -> pool -> conv5x5(64) -> pool ->
+                  fc384 -> fc192 -> classes.
+* ``resnet18``  — CIFAR-100: ResNet-18 with GroupNorm replacing BatchNorm
+                  (the paper swaps BN out because of its detrimental effect
+                  under heterogeneous federated training).
+
+These are the models the faithful-reproduction experiments federate; the
+data is the synthetic stand-in (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _dense_init(rng, fan_in, fan_out):
+    std = (2.0 / fan_in) ** 0.5
+    return (jax.random.normal(rng, (fan_in, fan_out), jnp.float32) * std)
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    std = (2.0 / (kh * kw * cin)) ** 0.5
+    return jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """x: (B,H,W,C); w: (kh,kw,Cin,Cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def max_pool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# MLP (MNIST backbone)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, in_dim=784, hidden=200, classes=10):
+    ks = jax.random.split(rng, 3)
+    return {"w1": _dense_init(ks[0], in_dim, hidden), "b1": jnp.zeros(hidden),
+            "w2": _dense_init(ks[1], hidden, hidden), "b2": jnp.zeros(hidden),
+            "w3": _dense_init(ks[2], hidden, classes),
+            "b3": jnp.zeros(classes)}
+
+
+def mlp_apply(params, x):
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    x = jax.nn.relu(x @ params["w2"] + params["b2"])
+    return x @ params["w3"] + params["b3"]
+
+
+# ---------------------------------------------------------------------------
+# CNN (CIFAR-10 backbone, Appendix A.1)
+# ---------------------------------------------------------------------------
+
+def init_cnn(rng, in_ch=3, classes=10, img=32):
+    ks = jax.random.split(rng, 5)
+    feat = (img // 4) ** 2 * 64
+    return {
+        "c1": _conv_init(ks[0], 5, 5, in_ch, 64), "cb1": jnp.zeros(64),
+        "c2": _conv_init(ks[1], 5, 5, 64, 64), "cb2": jnp.zeros(64),
+        "f1": _dense_init(ks[2], feat, 384), "fb1": jnp.zeros(384),
+        "f2": _dense_init(ks[3], 384, 192), "fb2": jnp.zeros(192),
+        "f3": _dense_init(ks[4], 192, classes), "fb3": jnp.zeros(classes),
+    }
+
+
+def cnn_apply(params, x):
+    x = jax.nn.relu(conv2d(x, params["c1"]) + params["cb1"])
+    x = max_pool(x)
+    x = jax.nn.relu(conv2d(x, params["c2"]) + params["cb2"])
+    x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["fb1"])
+    x = jax.nn.relu(x @ params["f2"] + params["fb2"])
+    return x @ params["f3"] + params["fb3"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 with GroupNorm (CIFAR-100 backbone)
+# ---------------------------------------------------------------------------
+
+_STAGES = ((64, 1), (128, 2), (256, 2), (512, 2))  # (channels, first stride)
+
+
+def init_resnet18(rng, in_ch=3, classes=100):
+    ks = iter(jax.random.split(rng, 64))
+    params: dict = {
+        "stem": _conv_init(next(ks), 3, 3, in_ch, 64),
+        "stem_s": jnp.ones(64), "stem_b": jnp.zeros(64),
+        "head": _dense_init(next(ks), 512, classes),
+        "head_b": jnp.zeros(classes),
+        "blocks": [],
+    }
+    cin = 64
+    for cout, stride in _STAGES:
+        for i in range(2):
+            s = stride if i == 0 else 1
+            blk = {
+                "c1": _conv_init(next(ks), 3, 3, cin, cout),
+                "n1s": jnp.ones(cout), "n1b": jnp.zeros(cout),
+                "c2": _conv_init(next(ks), 3, 3, cout, cout),
+                "n2s": jnp.ones(cout), "n2b": jnp.zeros(cout),
+            }
+            if s != 1 or cin != cout:
+                blk["proj"] = _conv_init(next(ks), 1, 1, cin, cout)
+                blk["projs"] = jnp.ones(cout)
+                blk["projb"] = jnp.zeros(cout)
+            params["blocks"].append(blk)
+            cin = cout
+    return params
+
+
+def _block_stride(i: int) -> int:
+    """Stride is structural (stage layout), not a parameter leaf — keeps
+    the pytree jax-transform safe (vmap/broadcast over clients)."""
+    return _STAGES[i // 2][1] if i % 2 == 0 else 1
+
+
+def resnet18_apply(params, x):
+    x = group_norm(conv2d(x, params["stem"]), params["stem_s"],
+                   params["stem_b"])
+    x = jax.nn.relu(x)
+    for i, blk in enumerate(params["blocks"]):
+        s = _block_stride(i)
+        h = jax.nn.relu(group_norm(conv2d(x, blk["c1"], stride=s),
+                                   blk["n1s"], blk["n1b"]))
+        h = group_norm(conv2d(h, blk["c2"]), blk["n2s"], blk["n2b"])
+        if "proj" in blk:
+            x = group_norm(conv2d(x, blk["proj"], stride=s), blk["projs"],
+                           blk["projb"])
+        x = jax.nn.relu(x + h)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"] + params["head_b"]
+
+
+BACKBONES = {
+    "mlp": (init_mlp, mlp_apply),
+    "cnn": (init_cnn, cnn_apply),
+    "resnet18": (init_resnet18, resnet18_apply),
+}
+
+
+def build_vision(name: str, rng, **kw):
+    init, apply = BACKBONES[name]
+    params = init(rng, **kw)
+    return params, apply
+
+
+def vision_loss_fn(apply):
+    def loss(params, batch, rng):
+        logits = apply(params, batch["x"])
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, batch["y"][..., None], -1)[..., 0]
+        return jnp.mean(logz - gold)
+    return loss

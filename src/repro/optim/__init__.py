@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (OptState, adamw, init_opt_state, sgd,
+                                    sgd_momentum)
+from repro.optim.schedules import constant, exp_decay, warmup_cosine

@@ -1,0 +1,63 @@
+"""Minimal functional optimizers (no optax dependency offline).
+
+Used by the centralized baselines and the non-DFL training path; the DFL
+inner loop implements its own update rules (Eq. 6) in ``core/admm.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    mu: PyTree          # first moment / momentum
+    nu: PyTree          # second moment (adamw only)
+    count: jax.Array
+
+
+def init_opt_state(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+    return OptState(mu=zeros, nu=zeros, count=jnp.zeros((), jnp.int32))
+
+
+def sgd(params, grads, state: OptState, *, lr, weight_decay=0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    new = jax.tree.map(lambda p, g: (p - lr * g.astype(p.dtype)), params, grads)
+    return new, state._replace(count=state.count + 1)
+
+
+def sgd_momentum(params, grads, state: OptState, *, lr, momentum=0.9,
+                 weight_decay=0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                      state.mu, grads)
+    new = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
+    return new, OptState(mu=mu, nu=state.nu, count=state.count + 1)
+
+
+def adamw(params, grads, state: OptState, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.0):
+    cnt = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    c1 = 1 - b1 ** cnt.astype(jnp.float32)
+    c2 = 1 - b2 ** cnt.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new = jax.tree.map(upd, params, mu, nu)
+    return new, OptState(mu=mu, nu=nu, count=cnt)

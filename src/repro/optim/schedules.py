@@ -1,0 +1,25 @@
+"""Learning-rate schedules.  The paper uses 0.1 * 0.998^round."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exp_decay(lr0, decay=0.998):
+    return lambda step: lr0 * decay ** jnp.asarray(step, jnp.float32)
+
+
+def warmup_cosine(lr0, warmup, total):
+    import jax.numpy as jnp
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr0 * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * lr0 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f

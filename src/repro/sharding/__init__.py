@@ -1,0 +1,4 @@
+from repro.sharding.partition import (base_param_spec, decode_specs,
+                                      dfl_state_specs, param_specs,
+                                      prefill_batch_specs, to_shardings,
+                                      train_batch_specs)

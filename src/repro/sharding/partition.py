@@ -1,0 +1,192 @@
+"""Parameter / batch / cache PartitionSpec rules per architecture & mode.
+
+All distribution is GSPMD-style: we annotate inputs/outputs of the jitted
+step functions and let XLA propagate.  The client (DFL) axis is the
+leading axis of every state leaf and maps to ``parallel.client_axis``
+("data" on the single-pod mesh; "pod" is the giant-model variant).
+
+Rules are name+rank based over the pytree paths produced by
+``models.model.init_params``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def base_param_spec(path: str, ndim: int, cfg: ModelConfig,
+                    tensor: str = "model", fsdp: str = "") -> P:
+    """Spec for one UNSTACKED-client leaf (leading L axis for layers/*)."""
+    name = path.split("/")[-1]
+    in_layers = path.startswith("layers/")
+    lead = (None,) if in_layers else ()     # the scanned L axis
+
+    def spec(*rest):
+        return P(*(lead + rest))
+
+    # --- embeddings / head ---------------------------------------------
+    if name == "embed":
+        return P(tensor, fsdp or None)
+    if name == "lm_head":
+        return P(fsdp or None, tensor)
+    if name in ("final_norm",):
+        return P(None)
+
+    # --- attention -------------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        return spec(fsdp or None, tensor)
+    if name == "wo":
+        return spec(tensor, fsdp or None)
+    if name in ("ln1", "ln2", "ln"):
+        return spec(None)
+
+    # --- dense mlp --------------------------------------------------------
+    if name in ("w_gate", "w_up", "w_down") and ndim - len(lead) == 2:
+        if name == "w_down":
+            return spec(tensor, fsdp or None)
+        return spec(fsdp or None, tensor)
+
+    # --- moe experts (E, d, ff) ------------------------------------------
+    if name == "router":
+        return spec(fsdp or None, None)
+    if name in ("w_gate", "w_up", "w_down") and ndim - len(lead) == 3:
+        if cfg.expert_sharding == "expert":
+            return spec(tensor, fsdp or None, None)
+        if name == "w_down":
+            return spec(None, tensor, fsdp or None)
+        return spec(None, fsdp or None, tensor)
+
+    # --- mamba ------------------------------------------------------------
+    if name == "in_proj":
+        return spec(fsdp or None, tensor)
+    if name == "conv_w":
+        return spec(None, tensor)
+    if name in ("conv_b", "dt_bias", "D"):
+        return spec(tensor)
+    if name == "x_proj":
+        return spec(tensor, None)
+    if name == "dt_proj":
+        return spec(None, tensor)
+    if name == "A_log":
+        return spec(tensor, None) if ndim - len(lead) == 2 else spec(None)
+    if name == "out_proj":
+        return spec(tensor, fsdp or None)
+
+    # fallback: replicate
+    return P(*([None] * ndim))
+
+
+def param_specs(shapes: PyTree, cfg: ModelConfig, par: ParallelConfig,
+                *, stacked_client: bool = False) -> PyTree:
+    """PartitionSpec pytree for a params tree.
+
+    ``shapes`` is always the UNSTACKED single-model tree; with
+    ``stacked_client=True`` the returned specs carry a leading client-axis
+    entry (for the (m, ...) DFL state leaves).
+    """
+    def one(path, leaf):
+        p = _path_str(path)
+        spec = base_param_spec(p, leaf.ndim, cfg, tensor=par.tensor_axis,
+                               fsdp=par.fsdp_axis)
+        if stacked_client:
+            spec = P(par.client_axis, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def dfl_state_specs(param_tree: PyTree, cfg: ModelConfig,
+                    par: ParallelConfig) -> Any:
+    """Specs for core.dfl.DFLState with stacked (m, ...) leaves."""
+    from repro.core.dfl import DFLState
+    ps = param_specs(param_tree, cfg, par, stacked_client=True)
+    return DFLState(params=ps, dual=ps,
+                    momentum=ps,
+                    rng=P(par.client_axis, None),
+                    round=P())
+
+
+def train_batch_specs(batch_shapes: PyTree, par: ParallelConfig) -> PyTree:
+    """(m, K, b_local, ...) leaves: client axis + batch axes."""
+    baxes = tuple(a for a in par.batch_axes if a != par.client_axis)
+    batch_axis = baxes[0] if baxes else None
+
+    def one(leaf):
+        rest = (None,) * (leaf.ndim - 3)
+        return P(par.client_axis, None, batch_axis, *rest)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def prefill_batch_specs(batch_shapes: PyTree, par: ParallelConfig,
+                        multi_pod: bool) -> PyTree:
+    axes = ("pod", "data") if multi_pod else ("data",)
+
+    def one(leaf):
+        return P(axes, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def decode_specs(specs_tree: PyTree, cfg: ModelConfig, par: ParallelConfig,
+                 multi_pod: bool, *, long_context: bool = False,
+                 kv_shard: str = "") -> PyTree:
+    """Specs for {"token": ..., "cache": {...}} decode inputs.
+
+    Normal decode: batch axis of token & cache sharded over data(+pod).
+    Long-context (B=1): KV cache sequence axis sharded over "data"
+    (flash-decode shards); SSM state replicated batch-wise.
+
+    ``kv_shard``: additionally shard the KV cache over the tensor axis —
+    "hd" shards the head_dim axis (works for any kv-head count),
+    "heads" shards the kv-head axis (needs kv_heads % tp == 0).  This is
+    the §Perf lever that keeps the cache aligned with the TP-sharded
+    q/k/v projections so GSPMD never reshards the cache inside the
+    per-layer scan.
+    """
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    tensor = par.tensor_axis
+
+    def token_spec(leaf):
+        if long_context:
+            return P(*([None] * leaf.ndim))
+        return P(batch_axes, *([None] * (leaf.ndim - 1)))
+
+    out = {"token": jax.tree.map(token_spec, specs_tree["token"])}
+
+    def cache_spec(path, leaf):
+        name = _path_str(path)
+        if name == "pos":
+            return P()
+        if name in ("k", "v"):
+            head_ax = tensor if kv_shard == "heads" else None
+            hd_ax = tensor if kv_shard == "hd" else None
+            seq_ax = tensor if kv_shard == "seq" else None
+            if long_context:
+                return P(None, None, "data", head_ax, hd_ax)
+            return P(None, batch_axes, seq_ax, head_ax, hd_ax)
+        if name in ("ssm", "conv"):
+            if long_context:
+                return P(*([None] * leaf.ndim))
+            return P(None, batch_axes, *([None] * (leaf.ndim - 2)))
+        return P(*([None] * leaf.ndim))
+
+    out["cache"] = jax.tree_util.tree_map_with_path(
+        cache_spec, specs_tree["cache"])
+    return out
+
+
+def to_shardings(spec_tree: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,104 @@
+"""Pin the DFedADMM implementation to the paper's closed-form math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm, sam
+
+
+def quad_loss(target):
+    def loss(params, batch, rng):
+        return 0.5 * jnp.sum((params["w"] - target - batch) ** 2)
+    return loss
+
+
+def _run_inner_loop(K=7, lr=0.03, lam=0.2, seed=0, rho=0.0):
+    """Run Alg. 1 lines 3-13 recording every inner gradient."""
+    rng = np.random.default_rng(seed)
+    d = 12
+    target = jnp.asarray(rng.normal(size=d), jnp.float32)
+    anchor = {"w": jnp.asarray(rng.normal(size=d), jnp.float32)}
+    dual = {"w": jnp.asarray(rng.normal(size=d) * 0.1, jnp.float32)}
+    batches = jnp.asarray(rng.normal(size=(K, d)) * 0.3, jnp.float32)
+
+    loss = quad_loss(target)
+    grad_fn = sam.sam_grad_fn(loss, rho)
+    params = anchor
+    grads_seq = []
+    for k in range(K):
+        g = grad_fn(params, batches[k], None)
+        grads_seq.append(g)
+        params = admm.local_step(params, g, dual, anchor, lr=lr, lam=lam)
+    grads_seq = {"w": jnp.stack([g["w"] for g in grads_seq])}
+    return params, anchor, dual, grads_seq
+
+
+@pytest.mark.parametrize("K", [1, 3, 7])
+@pytest.mark.parametrize("lam", [0.1, 0.5])
+def test_lemma2_closed_form(K, lam):
+    lr = 0.03
+    params_K, anchor, dual, grads = _run_inner_loop(K=K, lr=lr, lam=lam)
+    delta = admm.lemma2_delta(grads, dual, lr=lr, lam=lam, K=K)
+    np.testing.assert_allclose(params_K["w"] - anchor["w"], delta["w"],
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("K", [1, 4])
+def test_lemma3_dual_closed_form(K):
+    lr, lam = 0.05, 0.25
+    params_K, anchor, dual, grads = _run_inner_loop(K=K, lr=lr, lam=lam)
+    new_dual = admm.dual_update(dual, params_K, anchor, lam=lam)
+    closed = admm.lemma3_dual(grads, dual, lr=lr, lam=lam, K=K)
+    np.testing.assert_allclose(new_dual["w"], closed["w"], rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_gamma_sum_identity():
+    for lr, lam, K in [(0.1, 0.2, 5), (0.01, 0.1, 20), (0.05, 0.05, 3)]:
+        gk = admm.gamma_k(lr, lam, K)
+        assert np.isclose(float(jnp.sum(gk)), admm.gamma(lr, lam, K),
+                          rtol=1e-6)
+
+
+def test_message_uses_old_dual():
+    """Alg. 1 line 17: z = x_K - lam * ghat^{t-1} (NOT the new dual)."""
+    params_K, anchor, dual, _ = _run_inner_loop()
+    lam = 0.2
+    z = admm.message(params_K, dual, lam=lam)
+    np.testing.assert_allclose(z["w"], params_K["w"] - lam * dual["w"],
+                               rtol=1e-6)
+
+
+def test_large_lambda_reduces_to_sgd_with_dual():
+    """lam -> inf: proximal term vanishes; update = SGD on (g - dual)."""
+    lr, lam = 0.05, 1e8
+    params_K, anchor, dual, grads = _run_inner_loop(K=1, lr=lr, lam=lam)
+    manual = anchor["w"] - lr * (grads["w"][0] - dual["w"])
+    np.testing.assert_allclose(params_K["w"], manual, rtol=1e-5)
+
+
+def test_sam_reduces_to_plain_at_rho0():
+    loss = quad_loss(jnp.zeros(4))
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0, 0.5])}
+    g0 = sam.sam_grad_fn(loss, 0.0)(params, jnp.zeros(4), None)
+    g1 = jax.grad(loss)(params, jnp.zeros(4), None)
+    np.testing.assert_allclose(g0["w"], g1["w"])
+
+
+def test_sam_perturbation_norm():
+    rho = 0.3
+    g = {"a": jnp.asarray([3.0, 0.0]), "b": jnp.asarray([[4.0]])}
+    x = {"a": jnp.zeros(2), "b": jnp.zeros((1, 1))}
+    xp = sam.perturb(x, g, rho)
+    # ||g|| = 5 -> perturbation = rho * g / 5
+    np.testing.assert_allclose(xp["a"], jnp.asarray([0.18, 0.0]), rtol=1e-5)
+    np.testing.assert_allclose(xp["b"], jnp.asarray([[0.24]]), rtol=1e-5)
+
+
+def test_dual_fixed_point_at_consensus():
+    """If x_K == anchor the dual is unchanged (no drift, no correction)."""
+    anchor = {"w": jnp.ones(5)}
+    dual = {"w": jnp.full(5, 0.3)}
+    nd = admm.dual_update(dual, anchor, anchor, lam=0.2)
+    np.testing.assert_allclose(nd["w"], dual["w"])

@@ -1,0 +1,55 @@
+"""Checkpoint round-trips + manifest validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_pytree, save_pytree
+
+
+def _tree():
+    return {"layers": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones(4, jnp.bfloat16)},
+            "head": jnp.full((2, 2), 3, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path), 7, t)
+    r = restore_pytree(str(tmp_path), 7, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    for s in (1, 5, 3):
+        save_pytree(str(tmp_path), s, _tree())
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_pytree(str(tmp_path), 1, _tree())
+    bad = _tree()
+    bad["head"] = jnp.zeros((3, 3), jnp.int32)
+    with pytest.raises(ValueError):
+        restore_pytree(str(tmp_path), 1, bad)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_pytree(str(tmp_path), 1, _tree())
+    bad = {"other": jnp.zeros(3)}
+    with pytest.raises(ValueError):
+        restore_pytree(str(tmp_path), 1, bad)
+
+
+def test_overwrite_same_step(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path), 2, t)
+    t2 = jax.tree.map(lambda x: x + 1, t)
+    save_pytree(str(tmp_path), 2, t2)
+    r = restore_pytree(str(tmp_path), 2, jax.tree.map(jnp.zeros_like, t))
+    np.testing.assert_allclose(np.asarray(r["layers"]["w"]),
+                               np.asarray(t2["layers"]["w"]))

@@ -1,0 +1,89 @@
+"""Assigned-architecture configs: exact spec values + analytic sizes."""
+import numpy as np
+import pytest
+
+from repro.configs import (ARCH_IDS, get_bundle, get_model_config,
+                           get_smoke_config, input_specs, shape_applicable)
+from repro.configs.shapes import SHAPES
+
+EXPECT = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab, ~params B)
+    "minitron-8b": (32, 4096, 32, 8, 16384, 256000, None),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048, None),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256, 8.0),
+    "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024, 7.3),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000, 46.7),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128256, 405.0),
+    "gemma3-12b": (48, 3840, 16, 8, 15360, 262144, None),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000, 1.2),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216, 3.0),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936, 235.0),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_values(arch):
+    cfg = get_model_config(arch)
+    L, d, h, kv, ff, v, nb = EXPECT[arch]
+    assert cfg.num_layers == L and cfg.d_model == d
+    assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_near_nominal(arch):
+    cfg = get_model_config(arch)
+    nb = EXPECT[arch][6]
+    if nb is None:
+        return
+    n = cfg.param_count() / 1e9
+    assert abs(n - nb) / nb < 0.25, (arch, n)
+
+
+def test_moe_active_params():
+    q = get_model_config("qwen3-moe-235b-a22b")
+    assert abs(q.active_param_count() / 1e9 - 22.0) < 3.0
+    mx = get_model_config("mixtral-8x7b")
+    assert abs(mx.active_param_count() / 1e9 - 12.9) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_is_reduced(arch):
+    sm = get_smoke_config(arch)
+    assert sm.num_layers <= 8
+    assert sm.d_model <= 512
+    assert sm.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_shapes(arch, shape):
+    bundle = get_bundle(arch)
+    cfg = bundle.model
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        assert shape == "long_500k" and not cfg.sub_quadratic
+        return
+    specs = input_specs(cfg, bundle.parallel, shape)
+    s = SHAPES[shape]
+    if s.kind == "train":
+        lead = (bundle.parallel.dfl_m, bundle.parallel.dfl_k)
+        key = "embeds" if cfg.arch_type == "audio" else "tokens"
+        assert specs[key].shape[:2] == lead
+        assert specs[key].shape[2] == s.global_batch // bundle.parallel.dfl_m
+    elif s.kind == "prefill":
+        key = "embeds" if cfg.arch_type == "audio" else "tokens"
+        assert specs[key].shape[0] == s.global_batch
+    else:
+        assert "cache" in specs and "token" in specs
+        if cfg.uses_attention and cfg.arch_type != "ssm":
+            assert specs["cache"]["k"].shape[2] == s.seq_len or \
+                specs["cache"]["k"].shape[1] == s.global_batch
+
+
+def test_long500k_skips_documented():
+    skips = [a for a in ARCH_IDS
+             if not shape_applicable(get_model_config(a), "long_500k")[0]]
+    assert set(skips) == {"minitron-8b", "llama3-8b", "llama3-405b",
+                          "musicgen-large", "paligemma-3b",
+                          "qwen3-moe-235b-a22b"}

@@ -1,0 +1,68 @@
+"""Gossip matrix construction: Definition-1 properties + topology facts."""
+import numpy as np
+import pytest
+
+from repro.core import gossip
+
+
+TOPOS = ["ring", "grid", "exp", "full", "random"]
+
+
+@pytest.mark.parametrize("topo", TOPOS)
+@pytest.mark.parametrize("m", [4, 9, 16, 100])
+@pytest.mark.parametrize("weights", ["metropolis", "uniform"])
+def test_definition1_properties(topo, m, weights):
+    spec = gossip.make_gossip(topo, m, weights=weights, seed=3)
+    w = spec.matrix
+    gossip.validate_gossip_matrix(w)       # symmetric, stochastic, spectrum
+    assert np.allclose(w.sum(axis=0), 1.0)  # doubly stochastic
+    assert 0.0 <= spec.psi < 1.0           # connected -> spectral gap > 0
+
+
+def test_spectral_gap_ordering():
+    """Paper Sec 5.3: connectivity Ring < Grid < Exp < Full."""
+    m = 16
+    psis = {t: gossip.make_gossip(t, m).psi for t in ("ring", "grid", "exp",
+                                                      "full")}
+    assert psis["ring"] > psis["grid"] > psis["exp"] > psis["full"]
+    assert psis["full"] < 1e-8  # full graph mixes in one step
+
+
+def test_ring_degree():
+    adj = gossip.ring_adjacency(10)
+    assert (adj.sum(axis=1) == 2).all()
+
+
+def test_exp_neighbor_count():
+    adj = gossip.exp_adjacency(16)
+    # i +/- {1,2,4,8}: 8 mod 16 gives same node both directions -> 7 distinct
+    assert (adj.sum(axis=1) == 7).all()
+
+
+def test_random_time_varying_differs():
+    specs = gossip.time_varying_specs("random", 20, 5, degree=6, base_seed=0)
+    mats = [s.matrix for s in specs]
+    assert not np.allclose(mats[0], mats[1])
+    for s in specs:
+        gossip.validate_gossip_matrix(s.matrix)
+
+
+def test_circulant_detection():
+    assert gossip.make_gossip("ring", 8).is_circulant()
+    assert gossip.make_gossip("full", 8).is_circulant()
+    assert gossip.make_gossip("exp", 8).is_circulant()
+
+
+def test_neighbor_offsets_ring():
+    spec = gossip.make_gossip("ring", 8)
+    assert spec.neighbor_offsets() == [1, 7]
+
+
+def test_grid_is_torus():
+    adj = gossip.grid_adjacency(16)
+    assert (adj.sum(axis=1) == 4).all()
+
+
+def test_unknown_topology_raises():
+    with pytest.raises(ValueError):
+        gossip.adjacency("hypercube", 8)

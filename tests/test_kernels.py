@@ -1,0 +1,144 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the container is CPU-only; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(16,), (1000,), (128, 128), (3, 5, 17), (2, 513, 31)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_admm_update_kernel(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x, g, d, a = (jnp.asarray(rng.normal(size=shape), dtype)
+                  for _ in range(4))
+    y = ops.admm_update(x, g, d, a, lr=0.07, lam=0.3)
+    yr = ref.admm_update(x, g, d, a, lr=0.07, lam=0.3)
+    assert y.dtype == dtype and y.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sumsq_kernel(shape, dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    s = ops.global_sumsq({"x": x})
+    np.testing.assert_allclose(float(s), float(ref.sumsq(x)), rtol=1e-2
+                               if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sam_scale_kernel(shape, dtype):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    g = jnp.asarray(rng.normal(size=shape), dtype)
+    y = ops.sam_scale(x, g, 0.11)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref.scale_add(x, g, 0.11),
+                                          np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m", [4, 8, 16])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gossip_matmul_kernel(m, dtype):
+    rng = np.random.default_rng(3)
+    w = rng.random((m, m)).astype(np.float32)
+    w /= w.sum(1, keepdims=True)
+    z = jnp.asarray(rng.normal(size=(m, 3, 50)), dtype)
+    y = ops.gossip_mix_leaf(jnp.asarray(w), z)
+    zr = ref.gossip_matmul(jnp.asarray(w), z.reshape(m, -1)).reshape(z.shape)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(zr, np.float32), **_tol(dtype))
+
+
+def test_kernel_traced_scalars_under_jit():
+    rng = np.random.default_rng(4)
+    x, g, d, a = (jnp.asarray(rng.normal(size=(200,)), jnp.float32)
+                  for _ in range(4))
+
+    @jax.jit
+    def f(lr):
+        return ops.admm_update(x, g, d, a, lr=lr, lam=0.3)
+
+    np.testing.assert_allclose(f(jnp.float32(0.07)),
+                               ref.admm_update(x, g, d, a, lr=0.07, lam=0.3),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_grad_flows():
+    """The fused update stays differentiable (needed inside scan+grad)."""
+    x = jnp.ones(100)
+
+    def f(x_):
+        y = ops.admm_update(x_, x_ * 2, x_ * 0, x_, lr=0.1, lam=0.5)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(f)(x)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+SSCAN_SHAPES = [  # (B, S, D, N)
+    (1, 8, 16, 4),
+    (2, 64, 128, 16),
+    (1, 513, 96, 16),    # S not a multiple of the chunk, D of the tile
+    (3, 130, 257, 8),    # everything ragged
+]
+
+
+@pytest.mark.parametrize("shape", SSCAN_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_selective_scan_kernel(shape, dtype):
+    b, s, d, n = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = jnp.asarray(rng.normal(size=(b, s, d)) * 0.5, dtype)
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, d))) * 0.1, dtype)
+    a_log = jnp.asarray(rng.normal(size=(d, n)) * 0.2, jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, n)) * 0.5, dtype)
+    cm = jnp.asarray(rng.normal(size=(b, s, n)) * 0.5, dtype)
+    dskip = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y, h = ops.selective_scan(x, dt, a_log, bm, cm, dskip)
+    yr, hr = ref.selective_scan(x, dt, a_log, bm, cm, dskip,
+                                jnp.zeros((b, d, n), jnp.float32))
+    assert y.dtype == dtype and y.shape == (b, s, d)
+    assert h.shape == (b, d, n) and h.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_selective_scan_carries_state():
+    """Two half-sequences with carried h == one full sequence."""
+    b, s, d, n = 2, 32, 64, 8
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(b, s, d)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, d))) * 0.1, jnp.float32)
+    a_log = jnp.asarray(rng.normal(size=(d, n)) * 0.2, jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, n)) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, n)) * 0.5, jnp.float32)
+    dskip = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y_full, h_full = ops.selective_scan(x, dt, a_log, bm, cm, dskip)
+    h = None
+    ys = []
+    for lo, hi in ((0, s // 2), (s // 2, s)):
+        y, h = ops.selective_scan(x[:, lo:hi], dt[:, lo:hi], a_log,
+                                  bm[:, lo:hi], cm[:, lo:hi], dskip, h0=h)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full),
+                               rtol=2e-5, atol=1e-5)

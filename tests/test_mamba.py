@@ -1,0 +1,100 @@
+"""SSM blocks: chunked scan == naive recurrence; decode == scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba
+
+
+def test_chunked_linear_scan_matches_naive():
+    rng = np.random.default_rng(0)
+    B, S, D = 2, 24, 5
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (B, S, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    for chunk in (1, 3, 8, 24, 100):
+        h_all, h_last = mamba.chunked_linear_scan(a, b, h0, chunk)
+        h = np.asarray(h0)
+        ref = []
+        for t in range(S):
+            h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+            ref.append(h.copy())
+        ref = np.stack(ref, 1)
+        np.testing.assert_allclose(np.asarray(h_all), ref, rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(h_last), ref[:, -1], rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_causal_conv_matches_stepwise():
+    rng = np.random.default_rng(1)
+    B, S, C, Kw = 2, 10, 6, 4
+    x = jnp.asarray(rng.normal(size=(B, S, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(Kw, C)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(C,)), jnp.float32)
+    full = mamba.causal_conv1d(x, w, bias)
+    state = jnp.zeros((B, Kw - 1, C))
+    outs = []
+    for t in range(S):
+        y, state = mamba.conv_step(state, x[:, t:t + 1], w, bias)
+        outs.append(np.asarray(y[:, 0]))
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(full), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("variant", ["mamba1", "mamba2"])
+def test_decode_recurrence_matches_scan(variant):
+    cfg = ModelConfig(name="ssm-test", arch_type="ssm", num_layers=1,
+                      d_model=32, ssm_variant=variant, ssm_state=8,
+                      ssm_head_dim=16, ssm_chunk=4, vocab_size=64,
+                      dtype="float32")
+    dtype = jnp.float32
+    init = (mamba.init_mamba1_params if variant == "mamba1"
+            else mamba.init_mamba2_params)
+    params = init(jax.random.PRNGKey(0), cfg, dtype)
+    block = mamba.mamba1_block if variant == "mamba1" else mamba.mamba2_block
+    step = (mamba.mamba1_decode_step if variant == "mamba1"
+            else mamba.mamba2_decode_step)
+
+    B, S = 2, 12
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(B, S, 32)) * 0.5,
+                    jnp.float32)
+    y_full, (h_last, conv_last) = block(params, x, cfg)
+
+    if variant == "mamba1":
+        h = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    else:
+        h = jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32)
+    conv = jnp.zeros((B, cfg.d_conv - 1, cfg.d_inner), jnp.float32)
+    for t in range(S):
+        y_t, h, conv = step(params, x[:, t:t + 1], h, conv, cfg)
+        np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                                   np.asarray(y_full[:, t]), rtol=2e-4,
+                                   atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_last), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_mamba1_kernel_path_matches_jnp():
+    """mamba1_block(ssm_kernel=True) == the chunked_ssm jnp path."""
+    import dataclasses
+    import numpy as np
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="m1k", arch_type="ssm", num_layers=1, d_model=32,
+                      ssm_variant="mamba1", ssm_state=8, ssm_chunk=16,
+                      vocab_size=64, dtype="float32")
+    cfg_k = dataclasses.replace(cfg, ssm_kernel=True)
+    params = mamba.init_mamba1_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 48, 32)) * 0.3,
+                    jnp.float32)
+    y_ref, (h_ref, c_ref) = mamba.mamba1_block(params, x, cfg)
+    y_k, (h_k, c_k) = mamba.mamba1_block(params, x, cfg_k)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_ref),
+                               rtol=1e-6, atol=0)

@@ -1,0 +1,76 @@
+"""Mixing execution: dense einsum vs collective_permute equivalence and
+conservation properties."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip, mixing
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_dense_mix_matches_matmul():
+    spec = gossip.make_gossip("exp", 8)
+    z = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(8, 3, 4)),
+                          jnp.float32)}
+    out = mixing.mix_dense(spec.matrix, z)
+    ref = np.einsum("ij,jkl->ikl", spec.matrix, np.asarray(z["a"]))
+    np.testing.assert_allclose(out["a"], ref, rtol=1e-5)
+
+
+def test_dense_mix_preserves_mean():
+    spec = gossip.make_gossip("ring", 10)
+    z = jnp.asarray(np.random.default_rng(1).normal(size=(10, 7)), jnp.float32)
+    out = mixing.mix_dense(spec.matrix, {"p": z})["p"]
+    np.testing.assert_allclose(np.mean(out, 0), np.mean(np.asarray(z), 0),
+                               atol=1e-6)
+
+
+def test_full_topology_mix_is_average():
+    spec = gossip.make_gossip("full", 6)
+    z = jnp.asarray(np.random.default_rng(2).normal(size=(6, 5)), jnp.float32)
+    out = mixing.mix_dense(spec.matrix, {"p": z})["p"]
+    np.testing.assert_allclose(out, np.broadcast_to(np.mean(np.asarray(z), 0),
+                                                    (6, 5)), atol=1e-5)
+
+
+def test_non_circulant_ppermute_raises():
+    spec = gossip.make_gossip("random", 8, degree=3, seed=1)
+    if spec.is_circulant():
+        pytest.skip("random draw happened to be circulant")
+    with pytest.raises(ValueError):
+        mixing._circulant_pattern(spec)
+
+
+_PPERMUTE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.core import gossip, mixing
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+for topo in ("ring", "exp", "full"):
+    spec = gossip.make_gossip(topo, 8)
+    z = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(8, 4, 6)),
+                          jnp.float32)}
+    dense = mixing.mix_dense(spec.matrix, z)
+    pp = mixing.mix_ppermute(z, spec, mesh, "data")
+    np.testing.assert_allclose(np.asarray(pp["a"]), np.asarray(dense["a"]),
+                               rtol=1e-5, atol=1e-6)
+print("PPERMUTE_OK")
+"""
+
+
+def test_ppermute_equals_dense_subprocess():
+    """ppermute mixing == dense W mixing on 8 fake devices."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _PPERMUTE_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "PPERMUTE_OK" in r.stdout

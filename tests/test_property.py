@@ -1,0 +1,162 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import admm, gossip, mixing
+from repro.data.federated import dirichlet_partition, iid_partition
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+@given(m=st.integers(2, 40),
+       topo=st.sampled_from(["ring", "exp", "full"]),
+       weights=st.sampled_from(["metropolis", "uniform"]))
+def test_gossip_matrix_always_valid(m, topo, weights):
+    spec = gossip.make_gossip(topo, m, weights=weights)
+    gossip.validate_gossip_matrix(spec.matrix)
+    assert 0.0 <= spec.psi <= 1.0
+
+
+@given(m=st.integers(2, 12), n=st.integers(1, 20),
+       seed=st.integers(0, 10_000))
+def test_mixing_preserves_mean_any_valid_w(m, n, seed):
+    rng = np.random.default_rng(seed)
+    topo = ["ring", "exp", "full", "random"][seed % 4]
+    spec = gossip.make_gossip(topo, m, degree=3, seed=seed)
+    z = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    out = mixing.mix_dense(spec.matrix, {"p": z})["p"]
+    np.testing.assert_allclose(np.mean(np.asarray(out), 0),
+                               np.mean(np.asarray(z), 0), atol=1e-5)
+
+
+@given(lr=st.floats(1e-4, 0.5), lam_mult=st.floats(0.51, 10.0),
+       K=st.integers(1, 30))
+def test_gamma_identities(lr, lam_mult, K):
+    lam = lr * lam_mult  # ensures lr <= 2*lam (paper's condition)
+    g = admm.gamma(lr, lam, K)
+    gk = np.asarray(admm.gamma_k(lr, lam, K))
+    np.testing.assert_allclose(gk.sum(), g, rtol=1e-4, atol=1e-7)
+    if lam_mult >= 1.0:  # lr <= lam: weights are positive and monotone
+        assert 0.0 < g <= 1.0 + 1e-9
+        assert (gk >= 0).all()
+        # gamma_k increases in k (later grads weigh more)
+        assert (np.diff(gk) >= -1e-12).all()
+
+
+@given(n=st.integers(50, 2000), m=st.integers(2, 20),
+       alpha=st.floats(0.05, 10.0), seed=st.integers(0, 1000))
+def test_dirichlet_partition_is_a_partition(n, m, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n)
+    parts = dirichlet_partition(labels, m, alpha, seed=seed, min_size=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n  # disjoint cover
+
+
+@given(n=st.integers(10, 500), m=st.integers(2, 10))
+def test_iid_partition_is_balanced(n, m):
+    parts = iid_partition(n, m)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+    assert sum(sizes) == n
+
+
+@given(seed=st.integers(0, 500), K=st.integers(1, 8),
+       lam=st.floats(0.05, 1.0))
+def test_lemma2_property(seed, K, lam):
+    """Lemma 2 closed form holds for arbitrary gradient sequences."""
+    lr = min(0.1, 2 * lam)
+    rng = np.random.default_rng(seed)
+    d = 6
+    anchor = {"w": jnp.asarray(rng.normal(size=d), jnp.float32)}
+    dual = {"w": jnp.asarray(rng.normal(size=d), jnp.float32)}
+    gs = jnp.asarray(rng.normal(size=(K, d)), jnp.float32)
+    params = anchor
+    for k in range(K):
+        params = admm.local_step(params, {"w": gs[k]}, dual, anchor,
+                                 lr=lr, lam=lam)
+    closed = admm.lemma2_delta({"w": gs}, dual, lr=lr, lam=lam, K=K)
+    np.testing.assert_allclose(np.asarray(params["w"] - anchor["w"]),
+                               np.asarray(closed["w"]), rtol=2e-4, atol=2e-5)
+
+
+@given(shape=st.sampled_from([(37,), (130,), (4, 33)]),
+       lr=st.floats(1e-3, 0.3), lam=st.floats(0.05, 2.0),
+       seed=st.integers(0, 100))
+def test_kernel_matches_ref_property(shape, lr, lam, seed):
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(seed)
+    x, g, d, a = (jnp.asarray(rng.normal(size=shape), jnp.float32)
+                  for _ in range(4))
+    np.testing.assert_allclose(
+        np.asarray(ops.admm_update(x, g, d, a, lr=lr, lam=lam)),
+        np.asarray(ref.admm_update(x, g, d, a, lr=lr, lam=lam)),
+        rtol=1e-5, atol=1e-5)
+
+
+@given(b=st.integers(1, 3), s=st.integers(2, 40), d=st.integers(1, 8),
+       n=st.integers(1, 4), chunk=st.integers(1, 16),
+       seed=st.integers(0, 1000))
+def test_chunked_ssm_invariant_to_chunk_size(b, s, d, n, chunk, seed):
+    """chunked_ssm == chunked_linear_scan oracle for every chunking."""
+    from repro.models import mamba
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(np.exp(-np.abs(rng.normal(size=(b, s, d, n)))),
+                    jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, d, n)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(b, d, n)), jnp.float32)
+
+    h_all, h_last = mamba.chunked_linear_scan(a, bb, h0, chunk)
+
+    def ab_fn(inp):
+        ac, bc = inp
+        return ac, bc
+
+    def y_fn(h, inp):
+        return h
+
+    y, h_last2 = mamba.chunked_ssm(ab_fn, y_fn, (a, bb), h0, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(h_all),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last2), np.asarray(h_last),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(m=st.integers(2, 8), k=st.integers(1, 3), n=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 100))
+def test_microbatch_exactness_property(m, k, n, seed):
+    """Grad accumulation over n splits == full batch, any (m, K, n)."""
+    import jax
+    from repro.core import DFLConfig, make_gossip, make_train_round
+    from repro.core.dfl import init_state
+    b = 4 * n
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(p, batch, r):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    outs = []
+    for nn in (1, n):
+        cfg = DFLConfig(algorithm="dfedadmm", m=m, K=k, topology="ring",
+                        microbatches=nn)
+        spec = make_gossip("ring", m)
+        params = {"w": jnp.ones((5, 2), jnp.float32)}
+        state = init_state(params, cfg)
+        batches = {"x": jnp.asarray(rng.normal(size=(m, k, b, 5)),
+                                    jnp.float32),
+                   "y": jnp.asarray(rng.normal(size=(m, k, b, 2)),
+                                    jnp.float32)}
+        w = jnp.asarray(spec.matrix, jnp.float32)
+        rf = make_train_round(loss_fn, cfg, spec=spec)
+        out, _ = jax.jit(rf)(state, batches, w)
+        outs.append(out.params["w"])
+        rng = np.random.default_rng(seed)   # same batches both times
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,81 @@
+"""Partition-rule unit tests (pure spec logic, no devices needed)."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_bundle, get_model_config
+from repro.models.model import param_shapes
+from repro.sharding import partition
+
+
+def test_dense_param_specs():
+    cfg = get_model_config("llama3-8b")
+    par = get_bundle("llama3-8b").parallel
+    shapes = param_shapes(cfg)
+    specs = partition.param_specs(shapes, cfg, par)
+    assert specs["embed"] == P("model", None)
+    assert specs["lm_head"] == P(None, "model")
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", None)
+
+
+def test_stacked_client_prepends_axis():
+    cfg = get_model_config("llama3-8b")
+    par = get_bundle("llama3-8b").parallel
+    shapes = param_shapes(cfg)
+    specs = partition.param_specs(shapes, cfg, par, stacked_client=True)
+    assert specs["layers"]["attn"]["wq"] == P("data", None, None, "model")
+    assert specs["embed"] == P("data", "model", None)
+
+
+def test_moe_expert_vs_tensor_sharding():
+    mx = get_model_config("mixtral-8x7b")
+    q = get_model_config("qwen3-moe-235b-a22b")
+    sp_mx = partition.param_specs(param_shapes(mx), mx,
+                                  get_bundle("mixtral-8x7b").parallel)
+    sp_q = partition.param_specs(param_shapes(q), q,
+                                 get_bundle("qwen3-moe-235b-a22b").parallel)
+    # mixtral: shard d_ff; qwen3: shard the expert axis
+    assert sp_mx["layers"]["moe"]["w_gate"] == P(None, None, None, "model")
+    assert sp_q["layers"]["moe"]["w_gate"] == P(None, "model", None, None)
+    assert sp_mx["layers"]["moe"]["w_down"] == P(None, None, "model", None)
+
+
+def test_mamba_specs():
+    cfg = get_model_config("falcon-mamba-7b")
+    par = get_bundle("falcon-mamba-7b").parallel
+    specs = partition.param_specs(param_shapes(cfg), cfg, par)
+    mixer = specs["layers"]["mixer"]
+    assert mixer["in_proj"] == P(None, None, "model")
+    assert mixer["out_proj"] == P(None, "model", None)
+    assert mixer["A_log"] == P(None, "model", None)
+
+
+def test_fsdp_axis_threads_through():
+    cfg = get_model_config("llama3-405b")
+    import dataclasses
+    par = dataclasses.replace(get_bundle("llama3-405b").parallel,
+                              fsdp_axis="data", client_axis="pod")
+    specs = partition.param_specs(param_shapes(cfg), cfg, par,
+                                  stacked_client=True)
+    assert specs["layers"]["attn"]["wq"] == P("pod", None, "data", "model")
+    assert specs["layers"]["mlp"]["w_down"] == P("pod", None, "model", "data")
+
+
+def test_decode_specs_long_context():
+    cfg = get_model_config("gemma3-12b")
+    bundle = get_bundle("gemma3-12b")
+    from repro.configs import input_specs
+    sds = input_specs(cfg, bundle.parallel, "long_500k")
+    specs = partition.decode_specs(sds, cfg, bundle.parallel, False,
+                                   long_context=True)
+    assert specs["cache"]["k"] == P(None, None, "data", None, None)
+    assert specs["token"] == P(None)
+
+
+def test_hybrid_shared_attn_specs():
+    cfg = get_model_config("zamba2-1.2b")
+    par = get_bundle("zamba2-1.2b").parallel
+    specs = partition.param_specs(param_shapes(cfg), cfg, par)
+    assert specs["shared_attn"]["attn"]["wq"] == P(None, "model")
+    assert specs["shared_attn"]["mlp"]["w_down"] == P("model", None)
