@@ -74,10 +74,14 @@ def accuracy(params, task) -> float:
 
 
 def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
-            lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5):
+            lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5,
+            participation=None):
     """Run a DFL algorithm on the synthetic federated task; returns
-    (final_acc, history, us_per_round)."""
-    from repro.core import DFLConfig, mean_params, simulate
+    (final_acc, history, us_per_round).  ``participation`` is an optional
+    ``repro.core.ParticipationSpec`` scenario (default: every client,
+    every round)."""
+    from repro.core import (DFLConfig, ParticipationSpec, mean_params,
+                            simulate)
     task = fl_task()
     parts = task.partition(m, alpha, seed=seed)
     sampler0 = task.client_sampler(parts, batch=32, K=K, seed=seed)
@@ -87,7 +91,8 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
         return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
 
     cfg = DFLConfig(algorithm=algo, m=m, K=K, topology=topology, lr=lr,
-                    lam=lam, rho=rho, degree=min(10, m - 1))
+                    lam=lam, rho=rho, degree=min(10, m - 1),
+                    participation=participation or ParticipationSpec())
     params = mlp_init(task.dim, task.n_classes, seed=seed)
 
     def eval_fn(p):

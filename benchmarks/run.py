@@ -11,7 +11,7 @@ import sys
 
 
 SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
-          "roofline")
+          "roofline", "participation")
 
 
 def main(argv=None) -> int:
@@ -46,6 +46,9 @@ def main(argv=None) -> int:
     if "roofline" in suites:
         from benchmarks import roofline_report
         roofline_report.run()
+    if "participation" in suites:
+        from benchmarks import participation_bench
+        participation_bench.run(rounds=10 if args.quick else 20)
     return 0
 
 

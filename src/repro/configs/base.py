@@ -154,6 +154,33 @@ class ParallelConfig:
     topology: str = "ring"
     remat: bool = False          # activation checkpointing per layer
 
+    # client participation scenario (repro.core.participation); the
+    # defaults are the paper's full-participation setting
+    participation_mode: str = "full"   # full | uniform | fraction | schedule
+    participation_p: float = 1.0       # sampling prob / kept fraction
+    dropout: float = 0.0               # P(sampled client crashes mid-round)
+    straggler_frac: float = 0.0        # fixed fraction of slow clients
+    straggler_steps: int = 1           # local steps a straggler completes
+    min_active: int = 2                # floor on sampled clients per round
+
+    def participation_spec(self, seed: int = 0):
+        """Materialize the scenario as a ``ParticipationSpec`` (lazy import
+        keeps this config module free of core dependencies).
+
+        Deterministic ``schedule`` mode is not expressible here — a
+        schedule is a per-round tuple of client ids, not a flat config
+        field; build the spec directly for that.  These knobs describe
+        the single-device simulation substrate; the sharded dry-run path
+        does not consume them yet (see ROADMAP open items)."""
+        from repro.core.participation import ParticipationSpec
+        return ParticipationSpec(mode=self.participation_mode,
+                                 p=self.participation_p,
+                                 dropout=self.dropout,
+                                 straggler_frac=self.straggler_frac,
+                                 straggler_steps=self.straggler_steps,
+                                 min_active=self.min_active,
+                                 seed=seed)
+
 
 @dataclasses.dataclass(frozen=True)
 class ArchBundle:

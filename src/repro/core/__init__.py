@@ -6,9 +6,12 @@ from repro.core.admm import (ADMMHParams, client_round, dual_update, gamma,
 from repro.core.dfl import (ALGORITHMS, DFLConfig, DFLState, consensus_distance,
                             init_state, make_train_round, mean_params, simulate)
 from repro.core.gossip import (GossipSpec, TOPOLOGIES, adjacency, make_gossip,
-                               metropolis_weights, spectral_psi,
-                               time_varying_specs, uniform_weights,
-                               validate_gossip_matrix)
+                               mask_and_renormalize, metropolis_weights,
+                               spectral_psi, time_varying_specs,
+                               uniform_weights, validate_gossip_matrix)
+from repro.core.participation import (ParticipationSpec, RoundParticipation,
+                                      participation_schedule,
+                                      round_participation)
 from repro.core.mixing import mix, mix_dense, mix_ppermute, mix_ppermute_local
 from repro.core.sam import global_norm, perturb, sam_grad_fn, sam_value_and_grad
 from repro.core.baselines import (CFLConfig, CFLState, init_cfl_state,

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import admm, mixing, sam
 from repro.core.gossip import GossipSpec, make_gossip
+from repro.core.participation import ParticipationSpec
 
 PyTree = Any
 
@@ -46,10 +47,19 @@ class DFLConfig:
     use_kernel: bool = False     # fused Pallas inner update
     microbatches: int = 1        # grad-accumulation splits per inner step
                                  # (exact for SGD; SAM perturbs per split)
+    participation: ParticipationSpec = ParticipationSpec()
+                                 # partial-participation scenario; the
+                                 # default (full, no dropout/stragglers)
+                                 # takes the exact paper code path
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if not self.participation.is_trivial and self.mixing == "ppermute":
+            raise ValueError(
+                "partial participation requires dense mixing: the masked "
+                "gossip matrix is not circulant, so the ppermute path "
+                "cannot realize it")
 
     @property
     def is_admm(self) -> bool:
@@ -122,9 +132,20 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
       scale (and it drags the gossip permutes to f32 via convert
       hoisting).  "light" keeps only scalar telemetry; production runs
       sample full metrics every N rounds from the checkpoint instead.
+
+    Participation: when ``cfg.participation`` is non-trivial the returned
+    ``round_fn`` takes two extra per-round arrays,
+    ``round_fn(state, batches, w, active, steps)`` — ``active`` (m,) bool
+    and ``steps`` (m,) int32 from
+    ``participation.round_participation`` — and ``w`` must already be the
+    masked matrix from ``gossip.mask_and_renormalize``.  The mask enters
+    the vmapped local update via ``jnp.where`` (inactive clients freeze,
+    stragglers stop after ``steps_i`` iterations), so the round stays one
+    jitted computation with fixed shapes for any participation pattern.
     """
     if cfg.mixing == "ppermute" and spec is None:
         raise ValueError("ppermute mixing needs a static GossipSpec")
+    masked = not cfg.participation.is_trivial
 
     loss_and_grad = sam.sam_value_and_grad(loss_fn, cfg.sam_rho,
                                            use_kernel=cfg.use_kernel)
@@ -156,56 +177,118 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                 body, (jnp.zeros((), jnp.float32), zeros), mb)
             return tl / n, jax.tree.map(lambda g: g / n, tg)
 
-    def client_local(anchor, dual, mom, batches_k, rng, lr_t):
-        """K local steps for ONE client -> (params_K, new_dual, new_mom, z, loss)."""
+    def _tree_where(pred, a, b):
+        return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+    def client_local(anchor, dual, mom, batches_k, rng, lr_t,
+                     active_i=None, n_steps=None):
+        """K local steps for ONE client -> (params_K, new_dual, new_mom, z, loss).
+
+        In the masked (partial-participation) path ``active_i`` is this
+        client's scalar bool and ``n_steps`` its local-iteration budget:
+        iterations past ``n_steps`` are computed but discarded via
+        ``jnp.where`` (keeping one fixed-shape scan), inactive clients
+        freeze all state, and their gossip message degenerates to their
+        own parameters so the identity row of the masked matrix holds
+        them in place.
+        """
         if cfg.is_admm:
             def body(carry, inp):
                 params, rng_ = carry
+                batch, k = inp if masked else (inp, None)
                 rng_, sub = jax.random.split(rng_)
-                l, g = loss_and_grad(params, inp, sub)
+                l, g = loss_and_grad(params, batch, sub)
                 new_params = admm.local_step(params, g, dual, anchor,
                                              lr=lr_t, lam=cfg.lam,
                                              use_kernel=cfg.use_kernel)
+                if masked:
+                    take = k < n_steps
+                    new_params = _tree_where(take, new_params, params)
+                    l = jnp.where(take, l, 0.0)
                 return (new_params, rng_), l
 
-            (params_K, _), losses = jax.lax.scan(body, (anchor, rng), batches_k)
+            xs = (batches_k, jnp.arange(cfg.K)) if masked else batches_k
+            (params_K, _), losses = jax.lax.scan(body, (anchor, rng), xs)
             new_dual = admm.dual_update(dual, params_K, anchor, lam=cfg.lam)
             z = admm.message(params_K, dual, lam=cfg.lam)
-            return params_K, new_dual, mom, z, jnp.mean(losses)
+            if masked:
+                new_dual = _tree_where(active_i, new_dual, dual)
+                z = _tree_where(active_i, z, anchor)
+                # mean over the n_steps completed iterations, written as
+                # the static mean rescaled by K/n_steps so that a fully
+                # participating client (n_steps == K, scale == exactly
+                # 1.0) reproduces the seed path's jnp.mean bit for bit
+                loss = jnp.mean(losses) * (
+                    jnp.float32(cfg.K)
+                    / jnp.maximum(n_steps.astype(jnp.float32), 1.0))
+            else:
+                loss = jnp.mean(losses)
+            return params_K, new_dual, mom, z, loss
 
         # --- SGD-family baselines -----------------------------------------
         wd = cfg.weight_decay
 
         def body(carry, inp):
             params, mom_, rng_ = carry
+            batch, k = inp if masked else (inp, None)
             rng_, sub = jax.random.split(rng_)
-            l, g = loss_and_grad(params, inp, sub)
+            l, g = loss_and_grad(params, batch, sub)
             if wd:
                 g = jax.tree.map(lambda gi, p: gi + wd * p, g, params)
             if cfg.algorithm == "dfedavgm":
-                mom_ = jax.tree.map(
+                new_mom = jax.tree.map(
                     lambda mi, gi: (cfg.momentum * mi + gi).astype(mi.dtype),
                     mom_, g)
-                upd = mom_
+                upd = new_mom
             else:
+                new_mom = mom_
                 upd = g
-            params = jax.tree.map(
+            new_params = jax.tree.map(
                 lambda p, u: (p.astype(jnp.float32)
                               - lr_t * u.astype(jnp.float32)).astype(p.dtype),
                 params, upd)
-            return (params, mom_, rng_), l
+            if masked:
+                take = k < n_steps
+                new_params = _tree_where(take, new_params, params)
+                new_mom = _tree_where(take, new_mom, mom_)
+                l = jnp.where(take, l, 0.0)
+            return (new_params, new_mom, rng_), l
 
         steps = 1 if cfg.algorithm == "dpsgd" else cfg.K
         bk = jax.tree.map(lambda b: b[:steps], batches_k)
-        (params_K, mom, _), losses = jax.lax.scan(body, (anchor, mom, rng), bk)
-        return params_K, dual, mom, params_K, jnp.mean(losses)
+        xs = (bk, jnp.arange(steps)) if masked else bk
+        (params_K, mom, _), losses = jax.lax.scan(body, (anchor, mom, rng), xs)
+        if masked:
+            # inactive clients (n_steps == 0) took no step: params_K is
+            # already the anchor and the message z = params_K holds them.
+            # Static mean rescaled by a runtime factor that is exactly 1.0
+            # at full participation (bitwise identity with the seed path).
+            done = jnp.minimum(n_steps, steps).astype(jnp.float32)
+            loss = jnp.mean(losses) * (jnp.float32(steps)
+                                       / jnp.maximum(done, 1.0))
+        else:
+            loss = jnp.mean(losses)
+        return params_K, dual, mom, params_K, loss
 
-    def round_fn(state: DFLState, batches: PyTree, w: jax.Array):
+    def round_fn(state: DFLState, batches: PyTree, w: jax.Array,
+                 active: jax.Array | None = None,
+                 steps: jax.Array | None = None):
         lr_t = cfg.lr * (cfg.lr_decay ** state.round.astype(jnp.float32))
         rngs = jax.vmap(lambda k: jax.random.fold_in(k, state.round))(state.rng)
-        params_K, new_dual, new_mom, z, losses = jax.vmap(
-            client_local, in_axes=(0, 0, 0, 0, 0, None)
-        )(state.params, state.dual, state.momentum, batches, rngs, lr_t)
+        if masked:
+            if active is None or steps is None:
+                raise ValueError(
+                    "cfg.participation is non-trivial: round_fn needs the "
+                    "per-round (active, steps) arrays from "
+                    "participation.round_participation")
+            params_K, new_dual, new_mom, z, losses = jax.vmap(
+                client_local, in_axes=(0, 0, 0, 0, 0, None, 0, 0)
+            )(state.params, state.dual, state.momentum, batches, rngs, lr_t,
+              active, steps)
+        else:
+            params_K, new_dual, new_mom, z, losses = jax.vmap(
+                client_local, in_axes=(0, 0, 0, 0, 0, None)
+            )(state.params, state.dual, state.momentum, batches, rngs, lr_t)
 
         if cfg.mixing == "ppermute":
             new_params = mixing.mix_ppermute(
@@ -215,7 +298,24 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
         else:
             new_params = mixing.mix_dense(w, z)
 
-        out_metrics = {"loss": jnp.mean(losses), "lr": lr_t}
+        if masked:
+            af = active.astype(jnp.float32)
+            # mean over active clients == static mean over all clients
+            # rescaled by m/n_active; at full participation the scale is
+            # exactly 1.0, so the metric matches the seed path bit for bit.
+            # A round with no active clients (only reachable via an empty
+            # schedule entry) has no loss measurement — report NaN, not a
+            # spurious 0.0 that would read as perfect convergence.
+            n_active = jnp.sum(af)
+            mean_loss = jnp.mean(losses * af) * (
+                jnp.float32(cfg.m) / jnp.maximum(n_active, 1.0))
+            out_metrics = {
+                "loss": jnp.where(n_active > 0, mean_loss, jnp.nan),
+                "lr": lr_t,
+                "participation": jnp.mean(af),
+            }
+        else:
+            out_metrics = {"loss": jnp.mean(losses), "lr": lr_t}
         if metrics == "full":
             out_metrics["consensus_sq"] = consensus_distance(new_params)
             out_metrics["dual_norm"] = sam.global_norm(new_dual)
@@ -238,8 +338,16 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
 
     ``sample_batches(t)`` -> leaves (m, K, ...)   (host-side data pipeline)
     ``eval_fn(params_single) -> dict`` evaluated on the client-mean model.
+
+    ``cfg.participation`` selects the scenario: with the trivial default
+    every client runs every round on the exact seed code path; otherwise
+    the per-round mask from ``participation.round_participation`` gates
+    the local updates, the gossip matrix is masked-renormalized to the
+    active subgraph, and ``history["participation"]`` records the
+    realized per-round active fraction.
     """
-    from repro.core.gossip import time_varying_specs
+    from repro.core.gossip import mask_and_renormalize, time_varying_specs
+    from repro.core.participation import participation_schedule
 
     specs = time_varying_specs(cfg.topology, cfg.m, rounds,
                                degree=cfg.degree, base_seed=seed,
@@ -248,13 +356,28 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     round_fn = jax.jit(make_train_round(loss_fn, cfg, spec=spec0))
     state = init_state(params_single, cfg, seed=seed)
 
+    trivial = cfg.participation.is_trivial
+    sched = None if trivial else participation_schedule(
+        cfg.participation, cfg.m, rounds, cfg.K)
+
     history: dict[str, list] = {"round": [], "loss": [], "consensus_sq": [],
                                 "dual_norm": []}
+    if not trivial:
+        history["participation"] = []
     eval_hist: dict[str, list] = {}
     for t in range(rounds):
         batches = sample_batches(t)
-        w = jnp.asarray(specs[t].matrix, jnp.float32)
-        state, metrics = round_fn(state, batches, w)
+        if trivial:
+            w = jnp.asarray(specs[t].matrix, jnp.float32)
+            state, metrics = round_fn(state, batches, w)
+        else:
+            rp = sched[t]
+            w = jnp.asarray(mask_and_renormalize(specs[t].matrix, rp.active),
+                            jnp.float32)
+            state, metrics = round_fn(state, batches, w,
+                                      jnp.asarray(rp.active),
+                                      jnp.asarray(rp.steps))
+            history["participation"].append(float(metrics["participation"]))
         history["round"].append(t)
         for k in ("loss", "consensus_sq", "dual_norm"):
             history[k].append(float(metrics[k]))

@@ -191,6 +191,25 @@ class GossipSpec:
                 return False
         return True
 
+    def masked(self, active: np.ndarray) -> "GossipSpec":
+        """Restrict this round's gossip to the ``active`` clients.
+
+        Returns a new spec whose matrix is ``mask_and_renormalize`` of
+        this one — inactive rows/columns collapse to identity (those
+        clients hold their state) while the active subgraph keeps
+        Definition-1 symmetry and double stochasticity.  ``psi`` is
+        recomputed; a disconnected active subgraph yields psi == 1
+        (zero spectral gap), which is the honest signal that gossip
+        cannot mix across the partition this round.
+
+        The psi recompute is an m x m eigendecomposition per call — the
+        ``simulate`` round loop therefore applies ``mask_and_renormalize``
+        directly and skips this; use ``masked`` when you want the spec's
+        derived quantities, not on a hot path.
+        """
+        w = mask_and_renormalize(self.matrix, active)
+        return GossipSpec(topology=self.topology, matrix=w, psi=spectral_psi(w))
+
 
 def spectral_psi(w: np.ndarray) -> float:
     eig = np.linalg.eigvalsh((w + w.T) / 2.0)
@@ -210,6 +229,32 @@ def make_gossip(topology: str, m: int, *, weights: str = "metropolis",
         raise ValueError(f"unknown weight scheme {weights!r}")
     validate_gossip_matrix(w)
     return GossipSpec(topology=topology, matrix=w, psi=spectral_psi(w))
+
+
+def mask_and_renormalize(w: np.ndarray, active: np.ndarray) -> np.ndarray:
+    """Gossip matrix for a round where only ``active`` clients participate.
+
+    Edges touching an inactive client are removed and the lost mass is
+    returned to the diagonal, so every inactive row/column becomes the
+    identity (the client holds its state) and every active row keeps its
+    surviving off-diagonal weights with the self-weight absorbing the
+    rest.  Off-diagonal entries are untouched among active pairs, so
+    symmetry is preserved; rows sum to 1 by construction; symmetric +
+    row-stochastic ⇒ doubly stochastic.  The result satisfies every
+    ``validate_gossip_matrix`` property (Definition 1) restricted to the
+    active subgraph — note eigenvalue 1 gains multiplicity for each
+    inactive client, which is the correct spectrum for "those clients do
+    not mix this round".
+    """
+    w = np.asarray(w, dtype=np.float64)
+    active = np.asarray(active, dtype=bool)
+    if active.shape != (w.shape[0],):
+        raise ValueError(
+            f"active mask shape {active.shape} does not match m={w.shape[0]}")
+    wm = np.where(np.outer(active, active), w, 0.0)
+    np.fill_diagonal(wm, 0.0)
+    np.fill_diagonal(wm, 1.0 - wm.sum(axis=1))
+    return wm
 
 
 def validate_gossip_matrix(w: np.ndarray, atol: float = 1e-9) -> None:
@@ -233,11 +278,22 @@ def validate_gossip_matrix(w: np.ndarray, atol: float = 1e-9) -> None:
 
 
 def time_varying_specs(topology: str, m: int, rounds: int, *, degree: int = 10,
-                       base_seed: int = 0, weights: str = "metropolis"
+                       base_seed: int = 0, weights: str = "metropolis",
+                       masks: Sequence[np.ndarray] | None = None
                        ) -> Sequence[GossipSpec]:
-    """One GossipSpec per round.  Only 'random' actually varies in time."""
+    """One GossipSpec per round.  Only 'random' varies in time by itself;
+    passing per-round participation ``masks`` (e.g. from
+    ``repro.core.participation.participation_schedule``) composes partial
+    participation with any topology — each round's matrix is masked to
+    that round's active clients via ``mask_and_renormalize``."""
     if topology != "random":
         spec = make_gossip(topology, m, weights=weights)
-        return [spec] * rounds
-    return [make_gossip("random", m, weights=weights, degree=degree,
-                        seed=base_seed + t) for t in range(rounds)]
+        specs = [spec] * rounds
+    else:
+        specs = [make_gossip("random", m, weights=weights, degree=degree,
+                             seed=base_seed + t) for t in range(rounds)]
+    if masks is None:
+        return specs
+    if len(masks) != rounds:
+        raise ValueError(f"need one mask per round: {len(masks)} != {rounds}")
+    return [s.masked(a) for s, a in zip(specs, masks)]

@@ -1,0 +1,183 @@
+"""Per-round client participation scenarios for the DFL round loop.
+
+The paper's setting (and the seed implementation) assumes every client
+performs K local steps and gossips every round.  Real decentralized
+deployments see partial participation: clients sampled in and out per
+round, clients that crash mid-round after doing local work, and
+persistent stragglers that only complete a few local steps.  This module
+models those scenarios host-side as tiny per-round numpy artifacts:
+
+* an ``active`` boolean mask (who contributes to this round's gossip),
+* a ``sampled`` mask (who *attempted* the round — differs from ``active``
+  when mid-round dropout discards finished local work), and
+* a per-client ``steps`` vector (how many of the K local iterations each
+  client completes — 0 for inactive clients, < K for stragglers).
+
+The masks are consumed in two places: ``gossip.mask_and_renormalize``
+turns the round's gossip matrix into a Definition-1-preserving matrix on
+the active subgraph (inactive rows become identity, so those clients hold
+their state), and ``dfl.make_train_round`` threads ``active``/``steps``
+into the vmapped local update via ``jnp.where`` so the whole round stays
+a single jitted computation regardless of who participates.
+
+Everything here is plain numpy on the host — masks are (m,) vectors and
+are regenerated per round from a counter-based seed, so schedules are
+reproducible without carrying RNG state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+MODES = ("full", "uniform", "fraction", "schedule")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSpec:
+    """Declarative description of a participation scenario.
+
+    mode:
+      "full"      — every client, every round (the paper's setting).
+      "uniform"   — each client joins independently with probability ``p``.
+      "fraction"  — exactly ``round(p * m)`` clients, sampled uniformly
+                    without replacement each round.
+      "schedule"  — deterministic: ``schedule[t % len(schedule)]`` is the
+                    tuple of active client ids for round ``t``.
+    dropout:       probability that a *sampled* client crashes mid-round —
+                   it burns the local compute but its update is discarded
+                   and it is excluded from the gossip step.
+    straggler_frac: fraction of clients (a fixed, seed-chosen set — slow
+                   devices are persistently slow) that only complete
+                   ``straggler_steps`` of the K local iterations.
+    min_active:    lower bound on the number of sampled clients per round;
+                   random modes top up from the inactive pool to meet it.
+                   0 disables the floor — a round may then sample nobody,
+                   in which case every client holds its state and the
+                   round's loss metric is NaN (no measurement).
+    seed:          base seed; round ``t`` draws from ``default_rng((seed, t))``.
+    """
+
+    mode: str = "full"
+    p: float = 1.0
+    schedule: tuple = ()
+    dropout: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_steps: int = 1
+    min_active: int = 2
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown participation mode {self.mode!r}; expected one of {MODES}")
+        if not 0.0 < self.p <= 1.0:
+            raise ValueError(f"participation p must be in (0, 1], got {self.p}")
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {self.dropout}")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError(
+                f"straggler_frac must be in [0, 1], got {self.straggler_frac}")
+        if self.straggler_steps < 1:
+            raise ValueError("straggler_steps must be >= 1")
+        if self.min_active < 0:
+            raise ValueError("min_active must be >= 0")
+        if self.mode == "schedule" and not self.schedule:
+            raise ValueError("schedule mode needs a non-empty schedule")
+
+    @property
+    def is_trivial(self) -> bool:
+        """True iff the spec is the paper's full-participation setting, in
+        which case the round loop takes the exact seed code path
+        (bit-identical trajectories)."""
+        return (self.mode == "full" and self.dropout == 0.0
+                and self.straggler_frac == 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundParticipation:
+    """Realized participation for one round."""
+
+    active: np.ndarray    # (m,) bool — contributes to gossip this round
+    sampled: np.ndarray   # (m,) bool — attempted the round (>= active)
+    steps: np.ndarray     # (m,) int32 — local iterations completed (0 if inactive)
+
+    @property
+    def rate(self) -> float:
+        return float(self.active.mean())
+
+    @property
+    def wasted(self) -> int:
+        """Clients whose local work was discarded by mid-round dropout."""
+        return int(self.sampled.sum() - self.active.sum())
+
+
+def _round_rng(spec: ParticipationSpec, stream: int,
+               t: int) -> np.random.Generator:
+    # counter-based: (seed, stream, round) must all be non-negative ints
+    return np.random.default_rng((spec.seed, stream, t))
+
+
+_SAMPLE, _DROPOUT, _STRAGGLER = 0, 1, 2
+
+
+def straggler_set(spec: ParticipationSpec, m: int) -> np.ndarray:
+    """(m,) bool mask of the fixed straggler clients."""
+    n = int(round(spec.straggler_frac * m))
+    mask = np.zeros(m, dtype=bool)
+    if n > 0:
+        rng = _round_rng(spec, _STRAGGLER, 0)
+        mask[rng.choice(m, size=n, replace=False)] = True
+    return mask
+
+
+def sample_mask(spec: ParticipationSpec, m: int, t: int) -> np.ndarray:
+    """(m,) bool mask of the clients sampled for round ``t`` (pre-dropout)."""
+    if spec.mode == "full":
+        return np.ones(m, dtype=bool)
+    if spec.mode == "schedule":
+        ids = np.asarray(spec.schedule[t % len(spec.schedule)], dtype=int)
+        if ids.size and (ids.min() < 0 or ids.max() >= m):
+            raise ValueError(f"schedule round {t} names clients outside [0, {m})")
+        mask = np.zeros(m, dtype=bool)
+        mask[ids] = True
+        return mask
+    rng = _round_rng(spec, _SAMPLE, t)
+    if spec.mode == "uniform":
+        mask = rng.random(m) < spec.p
+    else:  # fraction
+        k = max(int(round(spec.p * m)), 1)
+        mask = np.zeros(m, dtype=bool)
+        mask[rng.choice(m, size=min(k, m), replace=False)] = True
+    floor = min(spec.min_active, m)
+    short = floor - int(mask.sum())
+    if short > 0:
+        pool = np.flatnonzero(~mask)
+        mask[rng.choice(pool, size=short, replace=False)] = True
+    return mask
+
+
+def round_participation(spec: ParticipationSpec, m: int, t: int,
+                        K: int) -> RoundParticipation:
+    """Realize the spec for round ``t`` with ``K`` nominal local steps."""
+    sampled = sample_mask(spec, m, t)
+    active = sampled.copy()
+    if spec.dropout > 0.0:
+        rng = _round_rng(spec, _DROPOUT, t)
+        drops = rng.random(m) < spec.dropout
+        active &= ~drops
+        if not active.any() and sampled.any():
+            # dropout must not erase the whole round: one sampled client
+            # survives so the round stays measurable (otherwise the loss
+            # metric has no participants to average over)
+            active[rng.choice(np.flatnonzero(sampled))] = True
+    steps = np.where(straggler_set(spec, m),
+                     min(spec.straggler_steps, K), K).astype(np.int32)
+    steps[~active] = 0
+    return RoundParticipation(active=active, sampled=sampled, steps=steps)
+
+
+def participation_schedule(spec: ParticipationSpec, m: int, rounds: int,
+                           K: int) -> list[RoundParticipation]:
+    """One RoundParticipation per round (deterministic in ``spec.seed``)."""
+    return [round_participation(spec, m, t, K) for t in range(rounds)]

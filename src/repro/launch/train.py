@@ -24,7 +24,8 @@ import numpy as np
 def main(argv=None) -> int:
     from repro.checkpoint import latest_step, restore_pytree, save_pytree
     from repro.configs import ARCH_IDS, get_model_config, get_smoke_config
-    from repro.core import DFLConfig, mean_params, simulate
+    from repro.core import (DFLConfig, ParticipationSpec, mean_params,
+                            simulate)
     from repro.data.synthetic import make_dfl_lm_sampler
     from repro.models import build_model
 
@@ -46,6 +47,20 @@ def main(argv=None) -> int:
     ap.add_argument("--topology", default="random")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="grad-accumulation splits per inner step")
+    ap.add_argument("--participation", default="full",
+                    choices=("full", "uniform", "fraction"),
+                    help="per-round client sampling mode")
+    ap.add_argument("--participation-p", type=float, default=1.0,
+                    help="sampling probability / kept fraction per round")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="P(sampled client crashes mid-round)")
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fixed fraction of clients that straggle")
+    ap.add_argument("--straggler-steps", type=int, default=1,
+                    help="local steps a straggler completes (< K)")
+    ap.add_argument("--min-active", type=int, default=2,
+                    help="floor on sampled clients per round (0 disables; "
+                         "random modes top up to meet it)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -62,10 +77,16 @@ def main(argv=None) -> int:
     print(f"[train] arch={cfg.name} algo={args.algorithm} "
           f"params={model.param_count(params):,} m={args.m} K={args.k}")
 
+    part = ParticipationSpec(mode=args.participation, p=args.participation_p,
+                             dropout=args.dropout,
+                             straggler_frac=args.straggler_frac,
+                             straggler_steps=args.straggler_steps,
+                             min_active=args.min_active, seed=args.seed)
     dfl_cfg = DFLConfig(algorithm=args.algorithm, m=args.m, K=args.k,
                         lr=args.lr, lam=args.lam, rho=args.rho,
                         topology=args.topology,
-                        microbatches=args.microbatches)
+                        microbatches=args.microbatches,
+                        participation=part)
     sampler = _make_sampler(cfg, args)
     eval_batch = _eval_batch(cfg, args)
 

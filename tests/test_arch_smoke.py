@@ -10,6 +10,9 @@ from repro.core import DFLConfig, init_state, make_gossip, make_train_round
 from repro.data.synthetic import make_model_batch
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # jit/subprocess-heavy: excluded from the fast tier
+
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward(arch):

@@ -9,6 +9,9 @@ from repro.data.synthetic import make_model_batch
 from repro.models import build_model
 from repro.models.model import logits_fn
 
+pytestmark = pytest.mark.slow  # jit/subprocess-heavy: excluded from the fast tier
+
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_matches_forward(arch):

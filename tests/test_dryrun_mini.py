@@ -4,7 +4,15 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
+
+pytestmark = [
+    pytest.mark.slow,  # jit/subprocess-heavy: excluded from the fast tier
+    # the dry-run mesh needs jax.sharding.AxisType (jax >= 0.5)
+    pytest.mark.skipif(not hasattr(jax.sharding, "AxisType"),
+                       reason="jax.sharding.AxisType unavailable in this jax"),
+]
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -43,6 +51,7 @@ multi = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
                       axis_types=(AxisType.Auto,) * 3)
 
 import sys
+
 arch, shape, mesh_kind, variant_name = sys.argv[1:5]
 mesh = single if mesh_kind == "single" else multi
 variant = dl.DryrunVariant(name=variant_name,

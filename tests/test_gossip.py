@@ -66,3 +66,60 @@ def test_grid_is_torus():
 def test_unknown_topology_raises():
     with pytest.raises(ValueError):
         gossip.adjacency("hypercube", 8)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("degree", [5, 6, 100])
+def test_random_adjacency_degree_clamped_to_full(degree):
+    """degree >= m-1 clamps to the complete graph instead of erroring."""
+    m = 6
+    adj = gossip.random_adjacency(m, degree, seed=0)
+    assert (adj.sum(axis=1) == m - 1).all()
+    assert not adj.diagonal().any()
+    gossip.validate_gossip_matrix(gossip.metropolis_weights(adj))
+
+
+@pytest.mark.parametrize("m", [5, 7, 13])
+def test_grid_prime_m_falls_back_to_ring(m):
+    """Prime m has no r*c factorization with r >= 2 -> degenerate 1-row
+    grid, which must collapse to the ring."""
+    np.testing.assert_array_equal(gossip.grid_adjacency(m),
+                                  gossip.ring_adjacency(m))
+    gossip.validate_gossip_matrix(gossip.make_gossip("grid", m).matrix)
+
+
+def test_neighbor_offsets_non_circulant_is_offset_union():
+    """On a non-circulant matrix neighbor_offsets degrades to the union of
+    per-client offsets: still well-formed (sorted, in [1, m-1]) but NOT a
+    valid per-client pattern — the ppermute path must refuse it."""
+    from repro.core import mixing
+    m = 9
+    spec = gossip.make_gossip("random", m, degree=3, seed=2)
+    assert not spec.is_circulant()
+    offs = spec.neighbor_offsets()
+    assert offs == sorted(set(offs))
+    assert all(1 <= o <= m - 1 for o in offs)
+    # the union over-counts any single client's neighbourhood
+    row_deg = (spec.matrix[0] > 0).sum() - 1
+    assert len(offs) > row_deg
+    with pytest.raises(ValueError):
+        mixing._circulant_pattern(spec)
+
+
+def test_grid_torus_not_circulant_under_row_major_ids():
+    spec = gossip.make_gossip("grid", 12)
+    assert not spec.is_circulant()
+    with pytest.raises(ValueError):
+        from repro.core import mixing
+        mixing._circulant_pattern(spec)
+
+
+def test_two_client_edge_case():
+    for topo in ("ring", "exp", "full"):
+        spec = gossip.make_gossip(topo, 2)
+        gossip.validate_gossip_matrix(spec.matrix)
+    with pytest.raises(ValueError):
+        gossip.ring_adjacency(1)

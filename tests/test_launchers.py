@@ -6,7 +6,11 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
+
+pytestmark = pytest.mark.slow  # jit/subprocess-heavy: excluded from the fast tier
+
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -40,6 +44,8 @@ def test_serve_cli_smoke():
     assert "tok/s" in out
 
 
+@pytest.mark.skipif(not hasattr(jax.sharding, "AxisType"),
+                    reason="jax.sharding.AxisType unavailable in this jax")
 def test_dryrun_cli_no_save(tmp_path):
     out = _run("repro.launch.dryrun", "--arch", "llama3-8b",
                "--shape", "decode_32k", "--kv-shard", "seq", "--no-save")

@@ -4,6 +4,7 @@ import os
 import subprocess
 import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,6 +12,9 @@ import pytest
 from repro.core import gossip, mixing
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# the shard_map/ppermute substrate needs jax.sharding.AxisType (jax >= 0.5)
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
 
 
 def test_dense_mix_matches_matmul():
@@ -66,6 +70,8 @@ print("PPERMUTE_OK")
 """
 
 
+@pytest.mark.skipif(not _HAS_AXIS_TYPE,
+                    reason="jax.sharding.AxisType unavailable in this jax")
 def test_ppermute_equals_dense_subprocess():
     """ppermute mixing == dense W mixing on 8 fake devices."""
     env = dict(os.environ, PYTHONPATH=SRC)

@@ -1,0 +1,391 @@
+"""Partial-participation scenario engine: masked gossip algebra, spec
+sampling, and end-to-end behaviour of the masked round loop."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DFLConfig, ParticipationSpec, make_gossip,
+                        make_train_round, mask_and_renormalize, simulate,
+                        spectral_psi, time_varying_specs,
+                        validate_gossip_matrix)
+from repro.core.dfl import init_state
+from repro.core.participation import (participation_schedule,
+                                      round_participation, sample_mask,
+                                      straggler_set)
+from repro.data.synthetic import SyntheticClassification
+
+
+# ---------------------------------------------------------------------------
+# mask_and_renormalize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", ["ring", "grid", "exp", "full", "random"])
+def test_masked_matrix_keeps_definition1(topo):
+    m = 12
+    w = make_gossip(topo, m, degree=4, seed=1).matrix
+    active = np.ones(m, dtype=bool)
+    active[[1, 5, 6, 10]] = False
+    wm = mask_and_renormalize(w, active)
+    validate_gossip_matrix(wm)                       # symmetric + stochastic
+    assert np.allclose(wm, wm.T)
+    assert np.allclose(wm.sum(axis=1), 1.0)
+    assert np.allclose(wm.sum(axis=0), 1.0)          # doubly stochastic
+    assert ((wm >= 0) & (wm <= 1)).all()
+
+
+def test_masked_inactive_rows_are_identity():
+    m = 8
+    w = make_gossip("full", m).matrix
+    active = np.array([True, False, True, True, False, True, True, True])
+    wm = mask_and_renormalize(w, active)
+    for i in np.flatnonzero(~active):
+        expected = np.zeros(m)
+        expected[i] = 1.0
+        np.testing.assert_array_equal(wm[i], expected)
+        np.testing.assert_array_equal(wm[:, i], expected)
+
+
+def test_masked_all_active_is_identity_operation():
+    w = make_gossip("exp", 16).matrix
+    wm = mask_and_renormalize(w, np.ones(16, dtype=bool))
+    np.testing.assert_allclose(wm, w, atol=1e-12)
+
+
+def test_masked_off_diagonals_preserved_among_active():
+    m = 10
+    w = make_gossip("random", m, degree=5, seed=7).matrix
+    active = np.ones(m, dtype=bool)
+    active[[0, 3]] = False
+    wm = mask_and_renormalize(w, active)
+    act = np.flatnonzero(active)
+    for i in act:
+        for j in act:
+            if i != j:
+                assert wm[i, j] == w[i, j]
+
+
+def test_masked_spectral_gap_sanity():
+    m = 12
+    w = make_gossip("full", m).matrix
+    active = np.ones(m, dtype=bool)
+    active[:4] = False
+    wm = mask_and_renormalize(w, active)
+    # the full m-node matrix has eigenvalue 1 with multiplicity 1 + #inactive
+    # -> psi == 1: inactive clients genuinely do not mix this round
+    assert spectral_psi(wm) == pytest.approx(1.0, abs=1e-9)
+    # but the active subgraph itself still mixes: its principal submatrix
+    # is a valid gossip matrix with a positive spectral gap
+    sub = wm[np.ix_(active, active)]
+    validate_gossip_matrix(sub)
+    assert spectral_psi(sub) < 1.0 - 1e-6
+
+
+def test_masked_shape_mismatch_raises():
+    w = make_gossip("ring", 8).matrix
+    with pytest.raises(ValueError):
+        mask_and_renormalize(w, np.ones(6, dtype=bool))
+
+
+def test_time_varying_specs_compose_with_masks():
+    m, rounds = 10, 6
+    spec = ParticipationSpec(mode="fraction", p=0.6)
+    masks = [rp.active for rp in participation_schedule(spec, m, rounds, K=5)]
+    specs = time_varying_specs("random", m, rounds, degree=4, masks=masks)
+    assert len(specs) == rounds
+    for s, a in zip(specs, masks):
+        validate_gossip_matrix(s.matrix)
+        for i in np.flatnonzero(~a):
+            assert s.matrix[i, i] == 1.0
+    with pytest.raises(ValueError):
+        time_varying_specs("ring", m, rounds, masks=masks[:-1])
+
+
+def test_fifty_round_random_topology_masked_all_valid():
+    m, rounds = 16, 50
+    spec = ParticipationSpec(mode="uniform", p=0.5, dropout=0.1, seed=3)
+    sched = participation_schedule(spec, m, rounds, K=5)
+    base = time_varying_specs("random", m, rounds, degree=6, base_seed=11)
+    for s, rp in zip(base, sched):
+        validate_gossip_matrix(mask_and_renormalize(s.matrix, rp.active))
+
+
+# ---------------------------------------------------------------------------
+# ParticipationSpec sampling
+# ---------------------------------------------------------------------------
+
+def test_fraction_mode_exact_count():
+    spec = ParticipationSpec(mode="fraction", p=0.5)
+    for t in range(10):
+        assert sample_mask(spec, 16, t).sum() == 8
+
+
+def test_uniform_mode_respects_min_active():
+    spec = ParticipationSpec(mode="uniform", p=0.01, min_active=3, seed=0)
+    for t in range(20):
+        assert sample_mask(spec, 12, t).sum() >= 3
+
+
+def test_min_active_zero_allows_empty_rounds():
+    """min_active=0 disables the floor: a low-p sweep keeps its true
+    rate instead of being silently inflated."""
+    spec = ParticipationSpec(mode="uniform", p=0.05, min_active=0, seed=0)
+    counts = [sample_mask(spec, 16, t).sum() for t in range(100)]
+    assert min(counts) == 0                      # empty rounds do occur
+    assert np.mean(counts) < 3                   # rate stays near 0.05*16
+    with pytest.raises(ValueError):
+        ParticipationSpec(min_active=-1)
+
+
+def test_schedule_mode_cycles_and_validates():
+    spec = ParticipationSpec(mode="schedule", schedule=((0, 1), (2, 3, 4)))
+    m0 = sample_mask(spec, 6, 0)
+    assert np.flatnonzero(m0).tolist() == [0, 1]
+    assert np.flatnonzero(sample_mask(spec, 6, 1)).tolist() == [2, 3, 4]
+    np.testing.assert_array_equal(sample_mask(spec, 6, 2), m0)  # cycles
+    bad = ParticipationSpec(mode="schedule", schedule=((0, 99),))
+    with pytest.raises(ValueError):
+        sample_mask(bad, 6, 0)
+
+
+def test_straggler_set_is_fixed_and_sized():
+    spec = ParticipationSpec(straggler_frac=0.25, straggler_steps=2)
+    s0 = straggler_set(spec, 16)
+    assert s0.sum() == 4
+    np.testing.assert_array_equal(s0, straggler_set(spec, 16))
+
+
+def test_round_participation_steps_vector():
+    spec = ParticipationSpec(mode="fraction", p=0.5, straggler_frac=0.25,
+                             straggler_steps=2, seed=1)
+    rp = round_participation(spec, 16, 0, K=5)
+    stragglers = straggler_set(spec, 16)
+    assert (rp.steps[~rp.active] == 0).all()
+    assert (rp.steps[rp.active & stragglers] == 2).all()
+    assert (rp.steps[rp.active & ~stragglers] == 5).all()
+    assert rp.sampled.sum() >= rp.active.sum()
+
+
+def test_dropout_never_empties_a_sampled_round():
+    """Even with extreme dropout, a round that sampled anyone keeps at
+    least one survivor so the loss metric stays measurable."""
+    spec = ParticipationSpec(mode="uniform", p=0.3, dropout=0.9, seed=0)
+    for t in range(50):
+        rp = round_participation(spec, 8, t, K=5)
+        assert rp.sampled.any()
+        assert rp.active.any()
+
+
+def test_empty_schedule_round_reports_nan_loss():
+    """A schedule entry with no clients has no loss measurement: the
+    metric must be NaN, not a spurious 0.0."""
+    m, K = 4, 2
+    part = ParticipationSpec(mode="schedule", schedule=((0, 1), ()))
+    rp = round_participation(part, m, 1, K=K)
+    assert not rp.active.any()
+    cfg = DFLConfig(algorithm="dfedadmm", m=m, K=K, topology="full",
+                    lam=0.2, participation=part)
+    spec = make_gossip("full", m)
+    params = {"w": jnp.ones((3,), jnp.float32)}
+    state = init_state(params, cfg, seed=0)
+    rng = np.random.default_rng(0)
+    batches = {"x": jnp.asarray(rng.normal(size=(m, K, 4, 3)), jnp.float32),
+               "y": jnp.asarray(rng.normal(size=(m, K, 4)), jnp.float32)}
+
+    def loss_fn(p, batch, r):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    round_fn = jax.jit(make_train_round(loss_fn, cfg, spec=spec,
+                                        metrics="light"))
+    w = jnp.asarray(mask_and_renormalize(spec.matrix, rp.active), jnp.float32)
+    new_state, metrics = round_fn(state, batches, w, jnp.asarray(rp.active),
+                                  jnp.asarray(rp.steps))
+    assert np.isnan(float(metrics["loss"]))
+    assert float(metrics["participation"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(new_state.params["w"]),
+                                  np.asarray(state.params["w"]))
+
+
+def test_dropout_subset_and_wasted_accounting():
+    spec = ParticipationSpec(mode="uniform", p=0.9, dropout=0.5, seed=2)
+    rp = round_participation(spec, 32, 0, K=5)
+    assert (rp.sampled | ~rp.active).all()        # active subset of sampled
+    assert rp.wasted == int(rp.sampled.sum() - rp.active.sum())
+
+
+def test_schedule_is_deterministic():
+    spec = ParticipationSpec(mode="uniform", p=0.5, dropout=0.2,
+                             straggler_frac=0.5, seed=9)
+    a = participation_schedule(spec, 10, 7, K=5)
+    b = participation_schedule(spec, 10, 7, K=5)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.active, rb.active)
+        np.testing.assert_array_equal(ra.steps, rb.steps)
+
+
+def test_trivial_detection_and_validation():
+    assert ParticipationSpec().is_trivial
+    assert not ParticipationSpec(mode="uniform", p=0.5).is_trivial
+    assert not ParticipationSpec(dropout=0.1).is_trivial
+    assert not ParticipationSpec(straggler_frac=0.5).is_trivial
+    for bad in (dict(mode="lottery"), dict(p=0.0), dict(p=1.5),
+                dict(dropout=1.0), dict(straggler_frac=2.0),
+                dict(straggler_steps=0), dict(mode="schedule")):
+        with pytest.raises(ValueError):
+            ParticipationSpec(**bad)
+
+
+def test_ppermute_mixing_rejected():
+    with pytest.raises(ValueError):
+        DFLConfig(mixing="ppermute",
+                  participation=ParticipationSpec(mode="uniform", p=0.5))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: masked round loop
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _task():
+    return SyntheticClassification(n_classes=6, dim=12, n_train=1500,
+                                   n_test=300, noise=1.0, seed=0)
+
+
+def _mlp_init(dim, n_classes, hidden=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": jnp.asarray(rng.normal(size=(dim, hidden)) / np.sqrt(dim),
+                          jnp.float32),
+        "b1": jnp.zeros(hidden),
+        "w2": jnp.asarray(rng.normal(size=(hidden, n_classes)) /
+                          np.sqrt(hidden), jnp.float32),
+        "b2": jnp.zeros(n_classes),
+    }
+
+
+def _loss(params, batch, rng):
+    h = jnp.tanh(batch["x"] @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, batch["y"][..., None], -1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _simulate(participation, rounds, algo="dfedadmm", m=8, K=3, seed=0):
+    task = _task()
+    parts = task.partition(m, 0.3, seed=seed)
+    sampler0 = task.client_sampler(parts, batch=16, K=K, seed=seed)
+
+    def sampler(t):
+        b = sampler0(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    cfg = DFLConfig(algorithm=algo, m=m, K=K, topology="random", degree=4,
+                    lam=0.2, participation=participation)
+    params = _mlp_init(task.dim, task.n_classes)
+    return simulate(_loss, None, params, cfg, sampler, rounds=rounds,
+                    seed=seed)
+
+
+def test_full_participation_bit_identical_to_seed_path():
+    """participation 1.0 through the masked machinery == the untouched
+    paper code path, bit for bit (losses and parameters)."""
+    state_a, hist_a = _simulate(ParticipationSpec(), rounds=6)
+    state_b, hist_b = _simulate(ParticipationSpec(mode="fraction", p=1.0),
+                                rounds=6)
+    np.testing.assert_array_equal(np.asarray(hist_a["loss"]),
+                                  np.asarray(hist_b["loss"]))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state_a.params, state_b.params)
+    assert hist_b["participation"] == [1.0] * 6
+
+
+@pytest.mark.slow
+def test_half_participation_still_converges():
+    """0.5 participation reaches a loss within 2x of full participation
+    in at most 2x the rounds (acceptance criterion)."""
+    _, hist_full = _simulate(ParticipationSpec(), rounds=10)
+    _, hist_half = _simulate(ParticipationSpec(mode="fraction", p=0.5),
+                             rounds=20)
+    assert hist_half["loss"][-1] < hist_half["loss"][0]        # it learns
+    assert hist_half["loss"][-1] <= 2.0 * hist_full["loss"][-1]
+    assert hist_half["participation"] == [0.5] * 20
+
+
+def test_inactive_clients_hold_state_one_round():
+    """Direct round_fn check: inactive clients' params, dual, and momentum
+    are bitwise frozen across a masked round."""
+    m, K = 6, 3
+    cfg = DFLConfig(algorithm="dfedadmm", m=m, K=K, topology="full",
+                    lam=0.2,
+                    participation=ParticipationSpec(mode="fraction", p=0.5))
+    spec = make_gossip("full", m)
+    params = {"w": jnp.ones((4, 3), jnp.float32)}
+    state = init_state(params, cfg, seed=0)
+    rng = np.random.default_rng(0)
+    batches = {"x": jnp.asarray(rng.normal(size=(m, K, 8, 4)), jnp.float32),
+               "y": jnp.asarray(rng.normal(size=(m, K, 8, 3)), jnp.float32)}
+
+    def loss_fn(p, batch, r):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    active = np.array([True, False, True, False, True, True])
+    steps = np.where(active, K, 0).astype(np.int32)
+    w = mask_and_renormalize(spec.matrix, active)
+    round_fn = jax.jit(make_train_round(loss_fn, cfg, spec=spec))
+    new_state, metrics = round_fn(state, batches,
+                                  jnp.asarray(w, jnp.float32),
+                                  jnp.asarray(active), jnp.asarray(steps))
+    for i in np.flatnonzero(~active):
+        np.testing.assert_array_equal(np.asarray(new_state.params["w"][i]),
+                                      np.asarray(state.params["w"][i]))
+        np.testing.assert_array_equal(np.asarray(new_state.dual["w"][i]),
+                                      np.asarray(state.dual["w"][i]))
+    for i in np.flatnonzero(active):   # active clients did move
+        assert not np.array_equal(np.asarray(new_state.params["w"][i]),
+                                  np.asarray(state.params["w"][i]))
+    assert float(metrics["participation"]) == pytest.approx(4 / 6)
+
+
+def test_straggler_does_fewer_steps_than_full_client():
+    """A straggler's one-round displacement is driven by fewer local
+    steps: freezing after step 1 must differ from the full-K client run
+    with identical data."""
+    m, K = 4, 4
+    part = ParticipationSpec(straggler_frac=0.5, straggler_steps=1, seed=0)
+    cfg = DFLConfig(algorithm="dfedavg", m=m, K=K, topology="full",
+                    participation=part)
+    spec = make_gossip("full", m)
+    params = {"w": jnp.ones((3,), jnp.float32)}
+    state = init_state(params, cfg, seed=0)
+    rng = np.random.default_rng(0)
+    batches = {"x": jnp.asarray(rng.normal(size=(m, K, 8, 3)), jnp.float32),
+               "y": jnp.asarray(rng.normal(size=(m, K, 8)), jnp.float32)}
+
+    def loss_fn(p, batch, r):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    round_fn = jax.jit(make_train_round(loss_fn, cfg, spec=spec,
+                                        metrics="light"))
+    active = np.ones(m, dtype=bool)
+    w = jnp.asarray(spec.matrix, jnp.float32)
+
+    outs = {}
+    for name, steps in (("straggle", np.array([1, 1, K, K], np.int32)),
+                        ("full", np.full(m, K, np.int32))):
+        st, _ = round_fn(state, batches, w, jnp.asarray(active),
+                         jnp.asarray(steps))
+        outs[name] = np.asarray(st.params["w"])
+    assert not np.allclose(outs["straggle"], outs["full"])
+
+
+@pytest.mark.slow
+def test_dropout_and_straggler_scenario_end_to_end():
+    part = ParticipationSpec(mode="uniform", p=0.8, dropout=0.2,
+                             straggler_frac=0.25, straggler_steps=1, seed=4)
+    _, hist = _simulate(part, rounds=10, algo="dfedavgm")
+    assert np.isfinite(hist["loss"]).all()
+    assert hist["loss"][-1] < hist["loss"][0]
+    assert all(0.0 <= p <= 1.0 for p in hist["participation"])

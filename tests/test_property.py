@@ -1,12 +1,19 @@
-"""Hypothesis property tests on system invariants."""
-import hypothesis
-import hypothesis.strategies as st
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional dependency: the whole module is skipped
+(not a collection error) when it is absent, so the tier-1 run
+``PYTHONPATH=src python -m pytest -x -q`` works on a clean environment.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
 
-from repro.core import admm, gossip, mixing
-from repro.data.federated import dirichlet_partition, iid_partition
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402,F401
+
+from repro.core import admm, gossip, mixing  # noqa: E402
+from repro.data.federated import dirichlet_partition, iid_partition  # noqa: E402
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=25,

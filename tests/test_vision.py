@@ -8,6 +8,8 @@ from repro.core import DFLConfig, simulate
 from repro.models.vision import (BACKBONES, build_vision, group_norm,
                                  vision_loss_fn)
 
+pytestmark = pytest.mark.slow  # jit/subprocess-heavy: excluded from the fast tier
+
 
 @pytest.mark.parametrize("name,kw,shape", [
     ("mlp", dict(in_dim=64, classes=10), (4, 64)),
