@@ -1,0 +1,59 @@
+"""Communication layer: wire bytes vs rounds-to-target across codecs and
+transports.
+
+Two questions the paper's full-precision symmetric setting never asks:
+
+* how much uplink does a codec save, and what does it cost in rounds —
+  ``int8`` / 4-bit stochastic rounding and top-k sparsification (all
+  with error feedback) against the identity wire;
+* what does dropping the symmetry requirement cost — push-sum over a
+  one-directional ring vs plain gossip over the symmetric ring.
+
+Each row reports the modeled per-round uplink bytes (sum over active
+clients of the codec's message size), the compression factor vs f32,
+the final accuracy, and rounds until the eval accuracy first reaches
+``target``.  The acceptance bar for the comm redesign: int8 cuts wire
+bytes >= 3x without degrading rounds-to-target by more than 20%.
+"""
+from benchmarks.common import emit, rounds_from_history, run_dfl
+
+CODEC_POINTS = (
+    ("identity", dict()),
+    ("int8", dict(codec="int8", codec_bits=8)),
+    ("int4", dict(codec="int8", codec_bits=4)),
+    ("top32", dict(codec="topk", codec_k=32)),
+)
+
+
+def run(rounds: int = 20, m: int = 16, algo: str = "dfedadmm",
+        target: float = 0.6):
+    base_bytes = None
+    for name, kw in CODEC_POINTS:
+        acc, hist, us = run_dfl(algo, rounds=rounds, alpha=0.3, m=m,
+                                topology="ring", eval_every=2, **kw)
+        bpr = hist["wire_bytes"][0]
+        if base_bytes is None:
+            base_bytes = bpr
+        rt = rounds_from_history(hist, target)
+        emit(f"comm/codec/{name}", us,
+             f"bytes_per_round={bpr};x{base_bytes / bpr:.1f};acc={acc:.4f};"
+             f"rounds_to_{target:g}={rt if rt is not None else f'>{rounds}'}")
+
+    for name, kw in (
+        ("ring", dict(topology="ring")),
+        ("dring_pushsum", dict(topology="dring", transport="pushsum")),
+        ("dring_pushsum_int4", dict(topology="dring", transport="pushsum",
+                                    codec="int8", codec_bits=4)),
+        ("drandom_pushsum", dict(topology="drandom", transport="pushsum")),
+    ):
+        acc, hist, us = run_dfl(algo, rounds=rounds, alpha=0.3, m=m,
+                                eval_every=2, **kw)
+        rt = rounds_from_history(hist, target)
+        emit(f"comm/transport/{name}", us,
+             f"bytes_per_round={hist['wire_bytes'][0]};acc={acc:.4f};"
+             f"rounds_to_{target:g}={rt if rt is not None else f'>{rounds}'}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

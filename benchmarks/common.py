@@ -75,11 +75,13 @@ def accuracy(params, task) -> float:
 
 def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
             lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5,
-            participation=None):
+            participation=None, transport="", codec="identity",
+            codec_bits=8, codec_k=64):
     """Run a DFL algorithm on the synthetic federated task; returns
     (final_acc, history, us_per_round).  ``participation`` is an optional
     ``repro.core.ParticipationSpec`` scenario (default: every client,
-    every round)."""
+    every round); ``transport``/``codec`` select the communication layer
+    (``repro.core.comm``) — the history carries per-round wire bytes."""
     from repro.core import (DFLConfig, ParticipationSpec, mean_params,
                             simulate)
     task = fl_task()
@@ -92,6 +94,8 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
 
     cfg = DFLConfig(algorithm=algo, m=m, K=K, topology=topology, lr=lr,
                     lam=lam, rho=rho, degree=min(10, m - 1),
+                    transport=transport, codec=codec,
+                    codec_bits=codec_bits, codec_k=codec_k,
                     participation=participation or ParticipationSpec())
     params = mlp_init(task.dim, task.n_classes, seed=seed)
 
@@ -123,6 +127,16 @@ def run_cfl(algo: str, *, rounds: int, alpha, m=16, K=5, lr=0.1, seed=0):
                                rounds=rounds, seed=seed)
     dt = time.perf_counter() - t0
     return accuracy(state.global_params, task), hist, dt / rounds * 1e6
+
+
+def rounds_from_history(hist, target):
+    """Rounds until the eval accuracy in ``hist`` first reaches
+    ``target`` (None if it never does)."""
+    ev = hist.get("eval", {})
+    for r, a in zip(ev.get("round", []), ev.get("acc", [])):
+        if a >= target:
+            return r + 1
+    return None
 
 
 def rounds_to_accuracy(algo, target, *, alpha, max_rounds, kind="dfl", **kw):

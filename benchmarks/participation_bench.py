@@ -1,12 +1,18 @@
-"""Partial-participation scenarios: round cost and accuracy vs the
-fraction of clients that actually gossip each round.
+"""Partial-participation scenarios: round cost, accuracy,
+rounds-to-target, and wire bytes vs the fraction of clients that
+actually gossip each round.
 
 Two effects compose: fewer active clients means less useful work per
 round (slower convergence in rounds), but on the simulation substrate
 the jitted round still computes all m clients and masks, so us/round is
 roughly flat — the derived columns make the compute/communication
-trade-off visible.  Dropout and straggler rows quantify the scenarios
-the paper's full-participation setting never sees.
+trade-off visible.  Each participation row also reports rounds until the
+eval accuracy reaches ``target`` and the modeled per-round uplink bytes
+(active clients x codec message size), so participation and compression
+land in one table (see ``experiments/update_tables.py``); the codec rows
+at the bottom cross 50% participation with compressed messages — the
+bandwidth-limited-client scenario.  Dropout and straggler rows quantify
+the scenarios the paper's full-participation setting never sees.
 """
 import numpy as np
 
@@ -14,12 +20,13 @@ from repro.core import ParticipationSpec
 from repro.core.gossip import mask_and_renormalize, make_gossip, spectral_psi
 from repro.core.participation import participation_schedule
 
-from benchmarks.common import emit, run_dfl
+from benchmarks.common import emit, rounds_from_history, run_dfl
 
 RATES = (1.0, 0.75, 0.5, 0.25)
 
 
-def run(rounds: int = 20, m: int = 16, algo: str = "dfedadmm"):
+def run(rounds: int = 20, m: int = 16, algo: str = "dfedadmm",
+        target: float = 0.6):
     # effective connectivity among the participants: psi of the active
     # principal submatrix of the masked matrix, averaged over sampled
     # rounds (the full masked matrix always has psi == 1 once anyone sits
@@ -36,23 +43,33 @@ def run(rounds: int = 20, m: int = 16, algo: str = "dfedadmm"):
         emit(f"participation/psi/p{p:g}", 0.0,
              f"mean_active_psi={sum(psis) / len(psis):.4f}")
 
+    def _row(name, part, **kw):
+        acc, hist, us = run_dfl(algo, rounds=rounds, alpha=0.3, m=m,
+                                participation=part, eval_every=2, **kw)
+        rt = rounds_from_history(hist, target)
+        bpr = int(np.mean(hist["wire_bytes"]))
+        emit(f"participation/{algo}/{name}", us,
+             f"acc={acc:.4f};loss={hist['loss'][-1]:.4f};"
+             f"rounds_to_{target:g}={rt if rt is not None else f'>{rounds}'};"
+             f"bytes_per_round={bpr}")
+
     for p in RATES:
         part = (ParticipationSpec() if p == 1.0
                 else ParticipationSpec(mode="fraction", p=p))
-        acc, hist, us = run_dfl(algo, rounds=rounds, alpha=0.3, m=m,
-                                participation=part)
-        emit(f"participation/{algo}/p{p:g}", us,
-             f"acc={acc:.4f};loss={hist['loss'][-1]:.4f}")
+        _row(f"p{p:g}", part)
 
     for name, part in (
         ("dropout0.2", ParticipationSpec(mode="uniform", p=0.8, dropout=0.2)),
         ("stragglers", ParticipationSpec(straggler_frac=0.5,
                                          straggler_steps=1)),
     ):
-        acc, hist, us = run_dfl(algo, rounds=rounds, alpha=0.3, m=m,
-                                participation=part)
-        emit(f"participation/{algo}/{name}", us,
-             f"acc={acc:.4f};loss={hist['loss'][-1]:.4f}")
+        _row(name, part)
+
+    # participation x compression: half the clients, compressed messages
+    # (the bandwidth-limited-client scenario of arXiv:2107.12048)
+    half = ParticipationSpec(mode="fraction", p=0.5)
+    _row("p0.5+int8", half, codec="int8")
+    _row("p0.5+int4", half, codec="int8", codec_bits=4)
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@ import sys
 
 
 SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
-          "roofline", "participation")
+          "roofline", "participation", "comm")
 
 
 def main(argv=None) -> int:
@@ -49,6 +49,10 @@ def main(argv=None) -> int:
     if "participation" in suites:
         from benchmarks import participation_bench
         participation_bench.run(rounds=10 if args.quick else 20)
+    if "comm" in suites:
+        from benchmarks import comm_bench
+        comm_bench.run(rounds=10 if args.quick else 20,
+                       target=0.5 if args.quick else 0.6)
     return 0
 
 

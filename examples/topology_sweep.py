@@ -2,7 +2,10 @@
 DFedADMM under Ring / Grid / Exp / Full topologies, with the measured
 spectral gap 1-psi for each — then re-run the sweep under partial
 participation (half the clients sampled per round, with stragglers) to
-show how unreliable clients interact with topology connectivity.
+show how unreliable clients interact with topology connectivity, and
+finally sweep the communication layer itself: push-sum over directed
+graphs and compressed (int8 / top-k) gossip messages, reporting the
+modeled uplink bytes alongside accuracy.
 
     PYTHONPATH=src python examples/topology_sweep.py
 """
@@ -53,6 +56,28 @@ def main():
     print("Better-connected topologies (larger spectral gap) converge to "
           "higher accuracy — Corollary 1; partial participation thins every "
           "topology toward ring-like mixing.")
+
+    print("--- communication layer: transports x codecs")
+    print(f"{'scenario':26s} {'acc':>7s} {'uplink/round':>13s}")
+    for name, kw in (
+        ("ring / identity", dict(topology="ring")),
+        ("dring / push-sum", dict(topology="dring", transport="pushsum")),
+        ("dring / push-sum + int8", dict(topology="dring",
+                                         transport="pushsum", codec="int8")),
+        ("ring / int4", dict(topology="ring", codec="int8", codec_bits=4)),
+        ("ring / top-64", dict(topology="ring", codec="topk", codec_k=64)),
+    ):
+        cfg = DFLConfig(algorithm="dfedadmm", m=m, K=5, lam=0.2, **kw)
+        state, hist = simulate(loss_fn, None, params, cfg, sampler,
+                               rounds=rounds)
+        pred = np.argmax(np.asarray(
+            logits_fn(mean_params(state.params), jnp.asarray(task.x_test))),
+            -1)
+        acc = float(np.mean(pred == task.y_test))
+        print(f"{name:26s} {acc:7.3f} {hist['wire_bytes'][0]/1e3:10.1f} kB")
+    print("Push-sum keeps directed (one-directional) rings competitive with "
+          "symmetric gossip, and error-feedback compression cuts uplink "
+          "bytes ~4-8x at matching accuracy.")
 
 
 if __name__ == "__main__":

@@ -1,57 +1,165 @@
-"""Regenerate the §Roofline tables inside EXPERIMENTS.md from artifacts."""
-import re, sys
-sys.path.insert(0, "src"); sys.path.insert(0, ".")
-from benchmarks.roofline_report import markdown_table
-from repro.launch.dryrun_lib import load_records
+"""Regenerate the tables inside EXPERIMENTS.md from artifacts.
 
-recs = load_records()
-single = [r for r in recs if r['mesh'] == '16x16' and r.get('variant') == 'baseline']
-multi = [r for r in recs if r['mesh'] == '2x16x16' and r.get('variant') == 'baseline']
+Two artifact sources, each section skipped gracefully when its artifact
+is missing:
 
-path = "EXPERIMENTS.md"
-text = open(path).read()
-text = re.sub(r"<!-- ROOFLINE_SINGLE -->(.|\n)*?(?=\n### Multi-pod)",
-              "<!-- ROOFLINE_SINGLE -->\n\n" + markdown_table(single) + "\n",
-              text)
-text = re.sub(r"<!-- ROOFLINE_MULTI -->(.|\n)*?(?=\n### Reading)",
-              "<!-- ROOFLINE_MULTI -->\n\n" + markdown_table(multi) + "\n",
-              text)
-open(path, "w").write(text)
-print("tables updated:", len(single), "single-pod rows,", len(multi), "multi-pod rows")
+* dry-run records (``experiments/artifacts/*.json`` via
+  ``repro.launch.dryrun``) -> the §Roofline tables;
+* benchmark CSV (``experiments/artifacts/participation.csv``, produced by
+  ``PYTHONPATH=src python -m benchmarks.run --suite participation --suite
+  comm > experiments/artifacts/participation.csv``) -> the §Participation
+  x compression table: rounds-to-target accuracy vs participation rate,
+  with the codec's modeled wire bytes per round alongside, so the
+  participation and compression trade-offs land in one table.
+"""
+import os
+import re
+import sys
 
-# --- optimized vs baseline comparison table -------------------------------
-def comparison_table(recs, mesh='16x16'):
-    base = {(r['arch'], r['shape']): r for r in recs
-            if r['mesh'] == mesh and r.get('variant') == 'baseline'}
-    opt = {(r['arch'], r['shape']): r for r in recs
-           if r['mesh'] == mesh and r.get('variant') == 'optimized'}
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+ART_DIR = os.path.join("experiments", "artifacts")
+MD_PATH = "EXPERIMENTS.md"
+
+
+def _replace_section(text, marker, end_pattern, body):
+    """Swap the text between ``marker`` and ``end_pattern`` for ``body``,
+    appending a fresh marker block when the file does not have one yet."""
+    if marker in text:
+        return re.sub(rf"{re.escape(marker)}(.|\n)*?(?={end_pattern})",
+                      marker + "\n\n" + body + "\n", text)
+    return text + f"\n{marker}\n\n{body}\n"
+
+
+def update_roofline(text):
+    from benchmarks.roofline_report import markdown_table
+    from repro.launch.dryrun_lib import load_records
+
+    recs = load_records()
+    if not recs:
+        print("no dry-run records; skipping roofline tables")
+        return text
+    single = [r for r in recs
+              if r["mesh"] == "16x16" and r.get("variant") == "baseline"]
+    multi = [r for r in recs
+             if r["mesh"] == "2x16x16" and r.get("variant") == "baseline"]
+    text = re.sub(r"<!-- ROOFLINE_SINGLE -->(.|\n)*?(?=\n### Multi-pod)",
+                  "<!-- ROOFLINE_SINGLE -->\n\n" + markdown_table(single)
+                  + "\n", text)
+    text = re.sub(r"<!-- ROOFLINE_MULTI -->(.|\n)*?(?=\n### Reading)",
+                  "<!-- ROOFLINE_MULTI -->\n\n" + markdown_table(multi)
+                  + "\n", text)
+    print("roofline tables updated:", len(single), "single-pod rows,",
+          len(multi), "multi-pod rows")
+
+    def comparison_table(recs, mesh="16x16"):
+        base = {(r["arch"], r["shape"]): r for r in recs
+                if r["mesh"] == mesh and r.get("variant") == "baseline"}
+        opt = {(r["arch"], r["shape"]): r for r in recs
+               if r["mesh"] == mesh and r.get("variant") == "optimized"}
+        lines = [
+            "| arch | shape | baseline max-term (s) | optimized max-term (s)"
+            " | x | dominant b->o | temp/dev b->o (GB) |",
+            "|---|---|---|---|---|---|---|",
+        ]
+        for key in sorted(base):
+            b, o = base[key], opt.get(key)
+            if b["status"] != "ok" or o is None or o["status"] != "ok":
+                continue
+            tb = max(b["roofline"][k] for k in
+                     ("t_compute_s", "t_memory_s", "t_collective_s"))
+            to = max(o["roofline"][k] for k in
+                     ("t_compute_s", "t_memory_s", "t_collective_s"))
+            tgb = (b["memory"]["temp_bytes"] or 0) / 1e9
+            tgo = (o["memory"]["temp_bytes"] or 0) / 1e9
+            lines.append(
+                f"| {key[0]} | {key[1]} | {tb:.3e} | {to:.3e} | "
+                f"**{tb/to:.1f}x** | {b['roofline']['dominant']} -> "
+                f"{o['roofline']['dominant']} | {tgb:.0f} -> {tgo:.0f} |")
+        return "\n".join(lines)
+
+    both = (comparison_table(recs) + "\n\n**Multi-pod 2×16×16:**\n\n"
+            + comparison_table(recs, mesh="2x16x16"))
+    text = re.sub(r"<!-- OPTIMIZED_TABLE -->(.|\n)*?(?=\n## §Ablations)",
+                  "<!-- OPTIMIZED_TABLE -->\n\n" + both + "\n", text)
+    print("optimized comparison table updated")
+    return text
+
+
+def _parse_bench_csv(path):
+    """Rows of the ``name,us_per_call,derived`` contract, derived split on
+    ``;`` into a key=value dict (bare values keep their position key)."""
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("name,"):
+                continue
+            name, us, derived = line.split(",", 2)
+            fields = {}
+            for part in derived.split(";"):
+                k, _, v = part.partition("=")
+                fields[k] = v
+            rows.append((name, float(us), fields))
+    return rows
+
+
+def participation_table(rows):
+    """participation rate / scenario x (accuracy, rounds-to-target, wire
+    bytes per round) — the participation and compression trade-offs in
+    one table."""
     lines = [
-        "| arch | shape | baseline max-term (s) | optimized max-term (s) | x | "
-        "dominant b->o | temp/dev b->o (GB) |",
-        "|---|---|---|---|---|---|---|",
+        "| scenario | acc | rounds-to-target | uplink bytes/round | "
+        "us/round |",
+        "|---|---|---|---|---|",
     ]
-    for key in sorted(base):
-        b, o = base[key], opt.get(key)
-        if b['status'] != 'ok' or o is None or o['status'] != 'ok':
+    for name, us, f in rows:
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] not in ("participation", "comm"):
             continue
-        tb = max(b['roofline'][k] for k in
-                 ('t_compute_s', 't_memory_s', 't_collective_s'))
-        to = max(o['roofline'][k] for k in
-                 ('t_compute_s', 't_memory_s', 't_collective_s'))
-        tgb = (b['memory']['temp_bytes'] or 0) / 1e9
-        tgo = (o['memory']['temp_bytes'] or 0) / 1e9
-        lines.append(
-            f"| {key[0]} | {key[1]} | {tb:.3e} | {to:.3e} | "
-            f"**{tb/to:.1f}x** | {b['roofline']['dominant']} -> "
-            f"{o['roofline']['dominant']} | {tgb:.0f} -> {tgo:.0f} |")
+        if "acc" not in f:
+            continue
+        scenario = f"{parts[0]}:{parts[2]}"
+        rt_key = next((k for k in f if k.startswith("rounds_to")), None)
+        rt = (f"{f[rt_key]} (acc {rt_key[len('rounds_to_'):]})"
+              if rt_key else "-")
+        lines.append(f"| {scenario} | {f['acc']} | {rt} | "
+                     f"{f.get('bytes_per_round', '-')} | {us:.0f} |")
+    if len(lines) == 2:
+        return None
     return "\n".join(lines)
 
 
-text = open(path).read()
-both = (comparison_table(recs) + "\n\n**Multi-pod 2×16×16:**\n\n"
-        + comparison_table(recs, mesh='2x16x16'))
-text = re.sub(r"<!-- OPTIMIZED_TABLE -->(.|\n)*?(?=\n## §Ablations)",
-              "<!-- OPTIMIZED_TABLE -->\n\n" + both + "\n",
-              text)
-open(path, "w").write(text)
-print("optimized comparison table updated")
+def update_participation(text):
+    path = os.path.join(ART_DIR, "participation.csv")
+    if not os.path.exists(path):
+        print(f"no {path}; skipping participation x compression table "
+              "(generate it with: PYTHONPATH=src python -m benchmarks.run "
+              "--suite participation --suite comm > " + path + ")")
+        return text
+    table = participation_table(_parse_bench_csv(path))
+    if table is None:
+        print(f"{path} has no participation/comm rows; skipping")
+        return text
+    body = ("Rounds-to-target accuracy vs participation rate, with the "
+            "codec's modeled uplink bytes per round (active clients × "
+            "message size) — regenerate via ``PYTHONPATH=src python -m "
+            "benchmarks.run --suite participation --suite comm`` and "
+            "``experiments/update_tables.py``.\n\n" + table)
+    text = _replace_section(text, "<!-- PARTICIPATION_COMM -->",
+                            r"\n<!-- |\n## |\Z", body)
+    print("participation x compression table updated")
+    return text
+
+
+def main():
+    text = open(MD_PATH).read() if os.path.exists(MD_PATH) else \
+        "# EXPERIMENTS\n"
+    text = update_roofline(text)
+    text = update_participation(text)
+    open(MD_PATH, "w").write(text)
+
+
+if __name__ == "__main__":
+    main()

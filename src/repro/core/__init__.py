@@ -5,10 +5,21 @@ from repro.core.admm import (ADMMHParams, client_round, dual_update, gamma,
                              message)
 from repro.core.dfl import (ALGORITHMS, DFLConfig, DFLState, consensus_distance,
                             init_state, make_train_round, mean_params, simulate)
-from repro.core.gossip import (GossipSpec, TOPOLOGIES, adjacency, make_gossip,
-                               mask_and_renormalize, metropolis_weights,
-                               spectral_psi, time_varying_specs,
-                               uniform_weights, validate_gossip_matrix)
+from repro.core.gossip import (DIRECTED_TOPOLOGIES, GossipSpec, TOPOLOGIES,
+                               adjacency, as_column_stochastic,
+                               column_stochastic_weights,
+                               directed_ring_adjacency, make_gossip,
+                               mask_and_renormalize,
+                               mask_and_renormalize_columns,
+                               metropolis_weights, spectral_psi,
+                               time_varying_specs, uniform_weights,
+                               validate_column_stochastic,
+                               validate_gossip_matrix)
+from repro.core.comm import (CODECS, TRANSPORTS, DenseTransport,
+                             IdentityCodec, MessageCodec, PpermuteTransport,
+                             PushSumTransport, QuantizeCodec, TopKCodec,
+                             Transport, init_comm_state, make_codec,
+                             make_transport)
 from repro.core.participation import (ParticipationSpec, RoundParticipation,
                                       participation_schedule,
                                       round_participation)

@@ -1,0 +1,441 @@
+"""Pluggable communication layer: transports and message codecs.
+
+Alg. 1 line 19 is one symmetric gossip step; this module makes the whole
+wire level a first-class API so scenario work (directed links, bandwidth
+limits, sparsification) composes with the round loop instead of forking
+it.  Two protocols:
+
+``Transport`` — how messages move between clients::
+
+    plan        = transport.prepare(spec, active)   # host-side, per round
+    x, aux      = transport.mix(z, plan, aux)       # inside the jitted round
+
+``prepare`` turns this round's ``GossipSpec`` + optional participation
+mask into a *plan* — a pytree of arrays passed through jit (a masked
+matrix, ppermute gate vectors, ...) — so partial participation composes
+uniformly with every transport; it subsumes the old direct
+``gossip.mask_and_renormalize`` call sites.  ``aux`` is the transport's
+persistent per-client state (``DFLState.comm``), e.g. the push-sum
+weights.  Three implementations:
+
+* ``DenseTransport``     — einsum against the (masked) matrix; wraps the
+  seed ``mixing.mix_dense`` path bit-identically.
+* ``PpermuteTransport``  — neighbour collective_permute on a mesh
+  (circulant topologies).  With a participation mask the permute sends
+  are *gated* per client (``mixing.mix_ppermute_masked``), realizing the
+  masked matrix on the sharded substrate without materializing it.
+* ``PushSumTransport``   — asymmetric/directed gossip.  Accepts any row-
+  or column-stochastic matrix (symmetric doubly-stochastic ones work
+  unchanged) and threads a per-client push-sum weight through ``aux`` so
+  one-directional links still converge to the true average: biased
+  messages ``pi_j * z_j`` are mixed with the column-stochastic matrix,
+  weights follow the same contraction, and the de-biased parameters are
+  the elementwise ratio.  With a doubly stochastic matrix the weights
+  stay exactly uniform and the step reduces to plain dense mixing.
+
+``MessageCodec`` — what goes on the wire::
+
+    wire, resid = codec.encode(z, resid, rng, active)
+    zhat        = codec.decode(wire)
+
+* ``identity`` — passthrough (returns ``z`` itself: bit-exact, zero cost).
+* ``int8``     — per-client symmetric-scale stochastic-rounding
+  quantization to ``codec_bits`` <= 8 bits (int8 container), fused
+  quantize+residual Pallas kernel (``kernels/quantize.py``) behind
+  ``use_kernel``.
+* ``topk``     — per-client magnitude top-``codec_k`` sparsification.
+
+Both lossy codecs carry per-client error-feedback residuals
+(``DFLState.comm["residual"]``): each round encodes ``z + resid`` and
+carries the quantization error forward, so the *sum* of decoded messages
+telescopes to the sum of true messages and compressed runs still
+converge.  ``bytes_per_client`` reports the modeled wire size for the
+bandwidth telemetry (``history["wire_bytes"]``, ``comm_bench``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mixing
+from repro.core.gossip import (GossipSpec, as_column_stochastic,
+                               mask_and_renormalize,
+                               mask_and_renormalize_columns)
+
+PyTree = Any
+
+TRANSPORTS = ("dense", "ppermute", "pushsum")
+CODECS = ("identity", "int8", "topk")
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+class Transport:
+    """Protocol: ``prepare(spec, active) -> plan``;
+    ``mix(z, plan, aux) -> (x, aux)``; ``init_aux(m) -> aux | None``."""
+
+    kind: str = ""
+
+    def prepare(self, spec: GossipSpec, active: np.ndarray | None = None):
+        raise NotImplementedError
+
+    def mix(self, z: PyTree, plan, aux=None):
+        raise NotImplementedError
+
+    def init_aux(self, m: int):
+        return None
+
+
+class DenseTransport(Transport):
+    """Any-topology einsum mixing — the seed path, verbatim."""
+
+    kind = "dense"
+
+    def prepare(self, spec: GossipSpec, active: np.ndarray | None = None):
+        w = spec.matrix
+        if active is not None:
+            w = mask_and_renormalize(w, active)
+        return jnp.asarray(w, jnp.float32)
+
+    def mix(self, z, plan, aux=None):
+        return mixing.mix_dense(plan, z), aux
+
+
+class PpermuteTransport(Transport):
+    """Neighbour-only collective_permute mixing for circulant topologies.
+
+    The offset->weight pattern is static (baked into the compiled round
+    from the ``spec`` given at construction); participation enters as
+    per-round gate arrays in the plan, so the same fixed communication
+    schedule serves every mask.  Without a mesh (single-device
+    simulation) the transport falls back to the equivalent dense einsum.
+    """
+
+    kind = "ppermute"
+
+    def __init__(self, spec: GossipSpec, mesh=None, client_axis: str = "data",
+                 inner_specs: PyTree | None = None):
+        if spec is None:
+            raise ValueError("ppermute transport needs a static GossipSpec")
+        mixing._circulant_pattern(spec)      # raises for non-circulant
+        self.spec = spec
+        self.mesh = mesh
+        self.client_axis = client_axis
+        self.inner_specs = inner_specs
+
+    def prepare(self, spec: GossipSpec, active: np.ndarray | None = None):
+        if spec is not None and spec is not self.spec and \
+                not np.array_equal(spec.matrix, self.spec.matrix):
+            # the offset->weight pattern is baked into the compiled round:
+            # a different per-round matrix (e.g. a time-varying topology)
+            # would silently gossip over the construction-time graph
+            raise ValueError(
+                f"ppermute pattern was compiled for {self.spec.topology!r} "
+                f"and cannot realize this round's {spec.topology!r} matrix; "
+                "use the dense transport for time-varying topologies")
+        if active is None:
+            return None                       # static unmasked pattern
+        if self.mesh is None:
+            # dense fallback executes the masked matrix directly
+            return jnp.asarray(
+                mask_and_renormalize(self.spec.matrix, active), jnp.float32)
+        gates, self_w = mixing.ppermute_gates(self.spec, active)
+        return {"gates": jnp.asarray(gates), "self_w": jnp.asarray(self_w)}
+
+    def mix(self, z, plan, aux=None):
+        if isinstance(plan, dict):            # masked, on-mesh
+            return mixing.mix_ppermute_masked(
+                z, plan["gates"], plan["self_w"], self.spec, self.mesh,
+                self.client_axis, inner_specs=self.inner_specs), aux
+        if self.mesh is None:
+            # plan is the masked matrix, or None / an ignored raw matrix
+            # (the legacy round_fn signature passes one) at full
+            # participation — identical to the seed fallback either way
+            w = plan if plan is not None else self.spec.matrix
+            return mixing.mix_dense(w, z), aux
+        return mixing.mix_ppermute(z, self.spec, self.mesh, self.client_axis,
+                                   inner_specs=self.inner_specs), aux
+
+
+class PushSumTransport(Transport):
+    """Directed gossip with the push-sum weight correction.
+
+    ``aux`` is the per-client weight vector pi (m,) f32, initialized
+    uniform at 1/m.  One round::
+
+        u_i   = sum_j P_ij * pi_j * z_j      (biased mix, f32)
+        pi'_i = sum_j P_ij * pi_j
+        x_i   = u_i / pi'_i                  (de-biased parameters)
+
+    With P column stochastic the weighted sums ``sum_j pi_j z_j`` and
+    ``sum_j pi_j`` are conserved exactly, so repeated rounds drive every
+    client to the true initial average regardless of how asymmetric the
+    link structure is; pi converges to the Perron vector of P (uniform
+    1/m for a directed ring).
+    """
+
+    kind = "pushsum"
+
+    def prepare(self, spec: GossipSpec, active: np.ndarray | None = None):
+        p = as_column_stochastic(spec.matrix)
+        if active is not None:
+            p = mask_and_renormalize_columns(p, active)
+        return jnp.asarray(p, jnp.float32)
+
+    def mix(self, z, plan, aux=None):
+        if aux is None:
+            raise ValueError(
+                "push-sum needs its weight state: initialize DFLState.comm "
+                "via init_state (or Transport.init_aux)")
+        pi = aux.astype(jnp.float32)
+        weighted = plan * pi[None, :]
+        pi_new = plan @ pi
+        m = pi.shape[0]
+
+        def leaf(arr):
+            u = jnp.einsum("ij,j...->i...", weighted,
+                           arr.astype(jnp.float32))
+            return (u / pi_new.reshape((m,) + (1,) * (arr.ndim - 1))
+                    ).astype(arr.dtype)
+
+        return jax.tree.map(leaf, z), pi_new
+
+    def init_aux(self, m: int):
+        return jnp.full((m,), 1.0 / m, jnp.float32)
+
+
+def make_transport(cfg, spec: GossipSpec | None = None, mesh=None,
+                   client_axis: str = "data",
+                   inner_specs: PyTree | None = None) -> Transport:
+    """Build the transport named by ``cfg.transport``."""
+    name = cfg.transport
+    if name == "dense":
+        return DenseTransport()
+    if name == "ppermute":
+        return PpermuteTransport(spec, mesh=mesh, client_axis=client_axis,
+                                 inner_specs=inner_specs)
+    if name == "pushsum":
+        return PushSumTransport()
+    raise ValueError(f"unknown transport {name!r}; expected one of {TRANSPORTS}")
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+class MessageCodec:
+    """Protocol: ``encode(z, resid, rng, active) -> (wire, resid)``;
+    ``decode(wire) -> zhat``; ``bytes_per_client(params) -> int``."""
+
+    name = "identity"
+    stateful = False
+
+    def init_state(self, stacked_params: PyTree):
+        return None
+
+    def encode(self, z: PyTree, resid=None, rng=None, active=None):
+        return z, resid
+
+    def decode(self, wire):
+        return wire
+
+    def bytes_per_client(self, params_single: PyTree) -> int:
+        return int(sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(params_single)))
+
+
+class IdentityCodec(MessageCodec):
+    """Uncompressed wire: ``decode(encode(z)) is z`` — bit-exact."""
+
+
+def _leaf_rngs(rng, leaves):
+    return [jax.random.fold_in(rng, i) for i in range(len(leaves))]
+
+
+def _gate_tree(active, new, old):
+    """Per-client select: keep ``old`` rows where the client is inactive
+    (an inactive client transmits nothing, so its codec state and its
+    self-message must pass through untouched)."""
+    def sel(a, b):
+        mask = active.reshape((a.shape[0],) + (1,) * (a.ndim - 1))
+        return jnp.where(mask, a, b)
+    return jax.tree.map(sel, new, old)
+
+
+class QuantizeCodec(MessageCodec):
+    """Low-bit stochastic-rounding quantization with error feedback.
+
+    Per client and per leaf: symmetric scale ``max|e| / qmax`` over the
+    error-compensated message ``e = z + resid``, stochastic rounding to
+    ``bits``-bit integers (int8 container), residual ``e - decode(wire)``
+    carried to the next round.  ``use_kernel`` dispatches the fused
+    Pallas quantize+residual kernel; the default pure-jnp path is the
+    ``kernels.ref`` oracle (tested equivalent).
+    """
+
+    stateful = True
+
+    def __init__(self, bits: int = 8, use_kernel: bool = False):
+        if not 2 <= bits <= 8:
+            raise ValueError(f"codec_bits must be in [2, 8], got {bits}")
+        self.name = f"int8[{bits}b]" if bits != 8 else "int8"
+        self.bits = bits
+        self.use_kernel = use_kernel
+        self._meta = None                 # [(shape, dtype)] captured at encode
+
+    def init_state(self, stacked_params: PyTree):
+        # f32 residuals: the whole point of error feedback is to remember
+        # mass smaller than one quantization step
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), stacked_params)
+
+    def encode(self, z, resid=None, rng=None, active=None):
+        leaves, treedef = jax.tree.flatten(z)
+        self._meta = ([(l.shape, l.dtype) for l in leaves], treedef)
+        rleaves = jax.tree.leaves(resid) if resid is not None else \
+            [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+        qmax = float(2 ** (self.bits - 1) - 1)
+        wire_leaves, new_resid = [], []
+        for leaf, r, key in zip(leaves, rleaves, _leaf_rngs(rng, leaves)):
+            e = leaf.astype(jnp.float32) + r
+            u = jax.random.uniform(key, e.shape, jnp.float32)
+            if self.use_kernel:
+                from repro.kernels import ops
+                q, scale, rr = ops.quantize_leaf(e, u, bits=self.bits)
+                rr = rr.astype(jnp.float32)
+            else:
+                m = e.shape[0]
+                absmax = jnp.max(jnp.abs(e).reshape(m, -1), axis=1)
+                scale = jnp.maximum(absmax, jnp.float32(1e-12)) / qmax
+                sb = scale.reshape((m,) + (1,) * (e.ndim - 1))
+                q = jnp.clip(jnp.floor(e / sb + u), -qmax, qmax
+                             ).astype(jnp.int8)
+                rr = e - q.astype(jnp.float32) * sb
+            if active is not None:
+                # inactive clients transmit nothing: their residual must
+                # not absorb a phantom quantization error (the round loop
+                # restores their self-message from z directly)
+                rr = _gate_tree(active, rr, r)
+            wire_leaves.append({"q": q, "scale": scale})
+            new_resid.append(rr)
+        return (jax.tree.unflatten(treedef, wire_leaves),
+                jax.tree.unflatten(treedef, new_resid))
+
+    def decode(self, wire):
+        metas, treedef = self._meta
+        leaves = treedef.flatten_up_to(wire)
+        out = []
+        for w, (shape, dtype) in zip(leaves, metas):
+            if self.use_kernel:
+                from repro.kernels import ops
+                out.append(ops.dequantize_leaf(w["q"], w["scale"], shape,
+                                               dtype))
+            else:
+                m = w["q"].shape[0]
+                sb = w["scale"].reshape((m,) + (1,) * (len(shape) - 1))
+                out.append((w["q"].astype(jnp.float32) * sb).astype(dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    def bytes_per_client(self, params_single: PyTree) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(params_single):
+            total += math.ceil(self.bits * leaf.size / 8) + 4  # + f32 scale
+        return int(total)
+
+
+class TopKCodec(MessageCodec):
+    """Magnitude top-k sparsification with error feedback.
+
+    Per client and per leaf the ``k`` largest-|.| entries of the
+    error-compensated message go on the wire as (index, value) pairs;
+    everything else accumulates into the residual.
+    """
+
+    stateful = True
+
+    def __init__(self, k: int = 64):
+        if k < 1:
+            raise ValueError(f"codec_k must be >= 1, got {k}")
+        self.name = f"topk[{k}]"
+        self.k = k
+        self._meta = None
+
+    def init_state(self, stacked_params: PyTree):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), stacked_params)
+
+    def encode(self, z, resid=None, rng=None, active=None):
+        leaves, treedef = jax.tree.flatten(z)
+        self._meta = ([(l.shape, l.dtype) for l in leaves], treedef)
+        rleaves = jax.tree.leaves(resid) if resid is not None else \
+            [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+        wire_leaves, new_resid = [], []
+        for leaf, r in zip(leaves, rleaves):
+            m = leaf.shape[0]
+            e = leaf.astype(jnp.float32) + r
+            flat = e.reshape(m, -1)
+            k = min(self.k, flat.shape[1])
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            val = jnp.take_along_axis(flat, idx, axis=1)
+            dec = jnp.zeros_like(flat).at[
+                jnp.arange(m)[:, None], idx].set(val)
+            rr = e - dec.reshape(e.shape)
+            if active is not None:
+                rr = _gate_tree(active, rr, r)
+            wire_leaves.append({"idx": idx.astype(jnp.int32), "val": val})
+            new_resid.append(rr)
+        return (jax.tree.unflatten(treedef, wire_leaves),
+                jax.tree.unflatten(treedef, new_resid))
+
+    def decode(self, wire):
+        metas, treedef = self._meta
+        leaves = treedef.flatten_up_to(wire)
+        out = []
+        for w, (shape, dtype) in zip(leaves, metas):
+            m = shape[0]
+            n = int(np.prod(shape[1:], dtype=np.int64)) if len(shape) > 1 else 1
+            flat = jnp.zeros((m, n), jnp.float32).at[
+                jnp.arange(m)[:, None], w["idx"]].set(w["val"])
+            out.append(flat.reshape(shape).astype(dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    def bytes_per_client(self, params_single: PyTree) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(params_single):
+            k = min(self.k, leaf.size)
+            total += k * (4 + 4)                   # int32 index + f32 value
+        return int(total)
+
+
+def make_codec(cfg) -> MessageCodec:
+    """Build the codec named by ``cfg.codec``."""
+    name = cfg.codec
+    if name == "identity":
+        return IdentityCodec()
+    if name == "int8":
+        return QuantizeCodec(bits=cfg.codec_bits, use_kernel=cfg.use_kernel)
+    if name == "topk":
+        return TopKCodec(k=cfg.codec_k)
+    raise ValueError(f"unknown codec {name!r}; expected one of {CODECS}")
+
+
+def init_comm_state(cfg, stacked_params: PyTree):
+    """Per-client communication state threaded through ``DFLState.comm``:
+    push-sum weights and/or error-feedback residuals, or None when both
+    transport and codec are stateless (the seed layout, bit-compatible).
+
+    State shapes are owned by the codec (``init_state``) and transport
+    (``init_aux``); this only decides which slots exist."""
+    comm = {}
+    if cfg.transport == "pushsum":
+        comm["ps_weight"] = PushSumTransport().init_aux(cfg.m)
+    codec = make_codec(cfg)
+    if codec.stateful:
+        comm["residual"] = codec.init_state(stacked_params)
+    return comm or None

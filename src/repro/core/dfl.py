@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import admm, mixing, sam
-from repro.core.gossip import GossipSpec, make_gossip
+from repro.core import admm, comm as comm_lib, sam
+from repro.core.gossip import DIRECTED_TOPOLOGIES, GossipSpec, make_gossip
 from repro.core.participation import ParticipationSpec
 
 PyTree = Any
@@ -43,8 +43,13 @@ class DFLConfig:
     topology: str = "random"
     weights: str = "metropolis"
     degree: int = 10             # neighbours for the random topology
-    mixing: str = "dense"        # "dense" | "ppermute"
-    use_kernel: bool = False     # fused Pallas inner update
+    mixing: str = ""             # DEPRECATED alias for ``transport``
+    transport: str = ""          # "dense" | "ppermute" | "pushsum"
+                                 # ("" resolves to mixing, then "dense")
+    codec: str = "identity"      # wire codec: "identity" | "int8" | "topk"
+    codec_bits: int = 8          # int8 codec: bits per value (2..8)
+    codec_k: int = 64            # topk codec: kept entries per leaf
+    use_kernel: bool = False     # fused Pallas inner update + codec kernel
     microbatches: int = 1        # grad-accumulation splits per inner step
                                  # (exact for SGD; SAM perturbs per split)
     participation: ParticipationSpec = ParticipationSpec()
@@ -55,11 +60,33 @@ class DFLConfig:
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
-        if not self.participation.is_trivial and self.mixing == "ppermute":
+        eff = self.transport or self.mixing or "dense"
+        if eff not in comm_lib.TRANSPORTS:
             raise ValueError(
-                "partial participation requires dense mixing: the masked "
-                "gossip matrix is not circulant, so the ppermute path "
-                "cannot realize it")
+                f"unknown transport {eff!r}; expected one of "
+                f"{comm_lib.TRANSPORTS}")
+        if self.transport and self.mixing and self.transport != self.mixing:
+            raise ValueError(
+                f"transport={self.transport!r} conflicts with the deprecated "
+                f"mixing={self.mixing!r} alias; set only transport")
+        # resolve the deprecated alias both ways so old cfg.mixing reads
+        # and new cfg.transport reads agree
+        object.__setattr__(self, "transport", eff)
+        object.__setattr__(self, "mixing", eff)
+        if self.codec not in comm_lib.CODECS:
+            raise ValueError(
+                f"unknown codec {self.codec!r}; expected one of "
+                f"{comm_lib.CODECS}")
+        if not 2 <= self.codec_bits <= 8:
+            raise ValueError(f"codec_bits must be in [2, 8], "
+                             f"got {self.codec_bits}")
+        if self.codec_k < 1:
+            raise ValueError(f"codec_k must be >= 1, got {self.codec_k}")
+        if self.topology in DIRECTED_TOPOLOGIES and eff != "pushsum":
+            raise ValueError(
+                f"directed topology {self.topology!r} is only sound under "
+                "transport='pushsum' (plain mixing with a non-doubly-"
+                "stochastic matrix converges to a biased average)")
 
     @property
     def is_admm(self) -> bool:
@@ -78,6 +105,9 @@ class DFLState:
     momentum: PyTree             # (m, ...) — zeros unless dfedavgm
     rng: jax.Array               # (m, 2) per-client PRNG keys
     round: jax.Array             # scalar int32
+    comm: PyTree = None          # communication state (comm.init_comm_state):
+                                 # push-sum weights / codec residuals; None
+                                 # for the stateless seed configuration
 
 
 def init_state(params_single: PyTree, cfg: DFLConfig, seed: int = 0) -> DFLState:
@@ -89,7 +119,8 @@ def init_state(params_single: PyTree, cfg: DFLConfig, seed: int = 0) -> DFLState
     zeros = jax.tree.map(jnp.zeros_like, stacked)
     keys = jax.random.split(jax.random.PRNGKey(seed), m)
     return DFLState(params=stacked, dual=zeros, momentum=zeros,
-                    rng=keys, round=jnp.zeros((), jnp.int32))
+                    rng=keys, round=jnp.zeros((), jnp.int32),
+                    comm=comm_lib.init_comm_state(cfg, stacked))
 
 
 def consensus_distance(params: PyTree) -> jax.Array:
@@ -118,14 +149,20 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                      client_axis: str = "data",
                      param_inner_specs: PyTree | None = None,
                      metrics: str = "full"):
-    """Build ``round_fn(state, batches, w) -> (state, metrics)``.
+    """Build ``round_fn(state, batches, plan) -> (state, metrics)``.
 
     * ``loss_fn(params_single, batch, rng) -> scalar`` — per-client loss.
     * ``batches`` leaves are shaped (m, K, ...): one minibatch per client
       per inner step (Alg. 1 line 5 samples fresh minibatches).
-    * ``w`` is the (m, m) gossip matrix for this round (supports the
-      time-varying "random" topology).  When ``cfg.mixing == 'ppermute'``
-      the static ``spec`` is used instead and ``w`` is ignored.
+    * ``plan`` is this round's communication plan from
+      ``Transport.prepare(spec_t, active)`` — for the dense and push-sum
+      transports simply the (m, m) mixing matrix (supports the
+      time-varying "random" topology), for ppermute ``None`` (static
+      pattern from ``spec``) or the per-client gate arrays of a masked
+      round.  A raw matrix is accepted everywhere the seed code passed
+      one.  ``cfg.codec`` compresses the messages on the wire
+      (stochastic-rounding quantization / top-k with error feedback); the
+      codec residuals and the push-sum weights ride in ``state.comm``.
     * ``metrics``: "full" computes consensus distance + dual norm every
       round — a param-sized f32 cross-client all-reduce, fine for the
       simulation substrate but ~2x the gossip's own link bytes at 405B
@@ -135,16 +172,21 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
 
     Participation: when ``cfg.participation`` is non-trivial the returned
     ``round_fn`` takes two extra per-round arrays,
-    ``round_fn(state, batches, w, active, steps)`` — ``active`` (m,) bool
-    and ``steps`` (m,) int32 from
-    ``participation.round_participation`` — and ``w`` must already be the
-    masked matrix from ``gossip.mask_and_renormalize``.  The mask enters
+    ``round_fn(state, batches, plan, active, steps)`` — ``active`` (m,)
+    bool and ``steps`` (m,) int32 from
+    ``participation.round_participation`` — and ``plan`` must come from
+    ``Transport.prepare(spec_t, active)`` (which applies the
+    mask-and-renormalize step for the transport).  The mask enters
     the vmapped local update via ``jnp.where`` (inactive clients freeze,
     stragglers stop after ``steps_i`` iterations), so the round stays one
     jitted computation with fixed shapes for any participation pattern.
     """
-    if cfg.mixing == "ppermute" and spec is None:
-        raise ValueError("ppermute mixing needs a static GossipSpec")
+    if cfg.transport == "ppermute" and spec is None:
+        raise ValueError("the ppermute transport needs a static GossipSpec")
+    transport = comm_lib.make_transport(cfg, spec=spec, mesh=mesh,
+                                        client_axis=client_axis,
+                                        inner_specs=param_inner_specs)
+    codec = comm_lib.make_codec(cfg)
     masked = not cfg.participation.is_trivial
 
     loss_and_grad = sam.sam_value_and_grad(loss_fn, cfg.sam_rho,
@@ -270,7 +312,7 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             loss = jnp.mean(losses)
         return params_K, dual, mom, params_K, loss
 
-    def round_fn(state: DFLState, batches: PyTree, w: jax.Array,
+    def round_fn(state: DFLState, batches: PyTree, plan,
                  active: jax.Array | None = None,
                  steps: jax.Array | None = None):
         lr_t = cfg.lr * (cfg.lr_decay ** state.round.astype(jnp.float32))
@@ -290,13 +332,32 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                 client_local, in_axes=(0, 0, 0, 0, 0, None)
             )(state.params, state.dual, state.momentum, batches, rngs, lr_t)
 
-        if cfg.mixing == "ppermute":
-            new_params = mixing.mix_ppermute(
-                z, spec, mesh, client_axis,
-                inner_specs=param_inner_specs) if mesh is not None else \
-                mixing.mix_dense(spec.matrix, z)
+        aux = state.comm if state.comm is not None else {}
+        if codec.stateful:
+            codec_rng = jax.random.fold_in(
+                jax.random.fold_in(state.rng[0], state.round), 0x51AB3)
+            wire, new_resid = codec.encode(z, aux.get("residual"), codec_rng,
+                                           active if masked else None)
+            zhat = codec.decode(wire)
+            if masked:
+                # an inactive client transmits nothing — its self-message
+                # must round-trip exactly so the identity row of the
+                # masked plan holds it in place
+                zhat = jax.tree.map(
+                    lambda a, b: jnp.where(
+                        active.reshape((cfg.m,) + (1,) * (a.ndim - 1)), a, b),
+                    zhat, z)
         else:
-            new_params = mixing.mix_dense(w, z)
+            zhat, new_resid = z, None
+        new_params, new_ps = transport.mix(zhat, plan, aux.get("ps_weight"))
+
+        new_comm = state.comm
+        if state.comm is not None:
+            new_comm = dict(state.comm)
+            if "ps_weight" in new_comm:
+                new_comm["ps_weight"] = new_ps
+            if "residual" in new_comm:
+                new_comm["residual"] = new_resid
 
         if masked:
             af = active.astype(jnp.float32)
@@ -321,7 +382,7 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             out_metrics["dual_norm"] = sam.global_norm(new_dual)
         new_state = DFLState(params=new_params, dual=new_dual,
                              momentum=new_mom, rng=state.rng,
-                             round=state.round + 1)
+                             round=state.round + 1, comm=new_comm)
         return new_state, out_metrics
 
     return round_fn
@@ -342,42 +403,61 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     ``cfg.participation`` selects the scenario: with the trivial default
     every client runs every round on the exact seed code path; otherwise
     the per-round mask from ``participation.round_participation`` gates
-    the local updates, the gossip matrix is masked-renormalized to the
-    active subgraph, and ``history["participation"]`` records the
+    the local updates, ``Transport.prepare`` restricts the round's plan
+    to the active subgraph, and ``history["participation"]`` records the
     realized per-round active fraction.
-    """
-    from repro.core.gossip import mask_and_renormalize, time_varying_specs
-    from repro.core.participation import participation_schedule
 
+    ``cfg.transport`` / ``cfg.codec`` select the communication layer
+    (``repro.core.comm``); ``history["wire_bytes"]`` records the modeled
+    uplink bytes per round (active clients x codec message size).  The
+    ppermute transport compiles one static neighbour pattern, so it
+    rejects the time-varying random topologies instead of silently
+    reusing round 0's graph.
+    """
+    from repro.core.participation import participation_schedule
+    from repro.core.gossip import time_varying_specs
+
+    if cfg.transport == "ppermute" and cfg.topology in ("random", "drandom"):
+        raise ValueError(
+            f"topology={cfg.topology!r} draws a fresh non-circulant graph "
+            "every round, but the ppermute transport compiles one static "
+            "neighbour pattern and would silently gossip over round 0's "
+            "graph forever; use transport='dense' for time-varying "
+            "topologies")
     specs = time_varying_specs(cfg.topology, cfg.m, rounds,
                                degree=cfg.degree, base_seed=seed,
                                weights=cfg.weights)
     spec0 = specs[0]
     round_fn = jax.jit(make_train_round(loss_fn, cfg, spec=spec0))
     state = init_state(params_single, cfg, seed=seed)
+    transport = comm_lib.make_transport(cfg, spec=spec0)
+    codec = comm_lib.make_codec(cfg)
+    bytes_per_client = codec.bytes_per_client(params_single)
 
     trivial = cfg.participation.is_trivial
     sched = None if trivial else participation_schedule(
         cfg.participation, cfg.m, rounds, cfg.K)
 
     history: dict[str, list] = {"round": [], "loss": [], "consensus_sq": [],
-                                "dual_norm": []}
+                                "dual_norm": [], "wire_bytes": []}
     if not trivial:
         history["participation"] = []
     eval_hist: dict[str, list] = {}
     for t in range(rounds):
         batches = sample_batches(t)
         if trivial:
-            w = jnp.asarray(specs[t].matrix, jnp.float32)
-            state, metrics = round_fn(state, batches, w)
+            plan = transport.prepare(specs[t])
+            state, metrics = round_fn(state, batches, plan)
+            n_active = cfg.m
         else:
             rp = sched[t]
-            w = jnp.asarray(mask_and_renormalize(specs[t].matrix, rp.active),
-                            jnp.float32)
-            state, metrics = round_fn(state, batches, w,
+            plan = transport.prepare(specs[t], rp.active)
+            state, metrics = round_fn(state, batches, plan,
                                       jnp.asarray(rp.active),
                                       jnp.asarray(rp.steps))
             history["participation"].append(float(metrics["participation"]))
+            n_active = int(rp.active.sum())
+        history["wire_bytes"].append(bytes_per_client * n_active)
         history["round"].append(t)
         for k in ("loss", "consensus_sq", "dual_norm"):
             history[k].append(float(metrics[k]))

@@ -6,6 +6,13 @@ Ring, Grid (2-D torus), Exponential, Fully-connected, and the
 Definition-1 properties (symmetry, double stochasticity, null-space,
 spectral bounds) and the spectral gap ``1 - psi``.
 
+Beyond the paper's symmetric setting, the *directed* topologies
+(``dring``, ``drandom``) model one-directional links (the ADFL setting
+of arXiv:2310.05093).  Their matrices are column stochastic — each
+sender splits its mass over its out-neighbours — and are only valid
+under the push-sum transport (``repro.core.comm.PushSumTransport``),
+which carries the weight correction that recovers the true average.
+
 All matrices are plain ``numpy`` float64 on the host — they are tiny
 (m x m) and are consumed either by the dense-mixing einsum or to derive
 the neighbor lists for the ``ppermute`` mixing path.
@@ -18,6 +25,7 @@ from typing import Sequence
 import numpy as np
 
 TOPOLOGIES = ("ring", "grid", "exp", "full", "random")
+DIRECTED_TOPOLOGIES = ("dring", "drandom")
 
 
 def _check_m(m: int) -> None:
@@ -110,6 +118,102 @@ def random_adjacency(m: int, degree: int, seed: int) -> np.ndarray:
         adj[i, pick] = True
         adj[pick, i] = True
     return adj
+
+
+def directed_ring_adjacency(m: int) -> np.ndarray:
+    """One-directional ring: client i receives only from i-1 (mod m).
+
+    Convention (matching the receive-weight convention of the symmetric
+    matrices): ``adj[i, j]`` is True iff there is a link j -> i.
+    """
+    _check_m(m)
+    adj = np.zeros((m, m), dtype=bool)
+    for i in range(m):
+        adj[i, (i - 1) % m] = True
+    return adj
+
+
+def directed_random_adjacency(m: int, degree: int, seed: int) -> np.ndarray:
+    """Random digraph: a directed-ring backbone (strong connectivity) plus
+    ~``degree`` extra one-directional in-edges per node.  Deliberately NOT
+    symmetrized — out-degrees are unequal, so the column-stochastic matrix
+    is not doubly stochastic and plain averaging would be biased."""
+    _check_m(m)
+    degree = min(degree, m - 1)
+    rng = np.random.default_rng(seed)
+    adj = directed_ring_adjacency(m)
+    for i in range(m):
+        extra = max(degree - int(adj[i].sum()), 0)
+        if extra <= 0:
+            continue
+        candidates = np.flatnonzero(~adj[i])
+        candidates = candidates[candidates != i]
+        if candidates.size == 0:
+            continue
+        pick = rng.choice(candidates, size=min(extra, candidates.size),
+                         replace=False)
+        adj[i, pick] = True           # j -> i only; no reverse edge
+    return adj
+
+
+def column_stochastic_weights(adj: np.ndarray) -> np.ndarray:
+    """Push-sum weights for a digraph: sender j splits its mass equally
+    over its out-neighbours and itself, so every *column* sums to 1.
+
+    ``adj[i, j]`` means j -> i.  ``P[i, j] = 1 / (1 + outdeg(j))`` for
+    each out-edge, with the same share kept on the diagonal."""
+    m = adj.shape[0]
+    adj = adj.copy()
+    np.fill_diagonal(adj, False)
+    outdeg = adj.sum(axis=0)                       # receivers of column j
+    p = adj.astype(np.float64) / (outdeg + 1.0)[None, :]
+    np.fill_diagonal(p, 1.0 / (outdeg + 1.0))
+    return p
+
+
+def validate_column_stochastic(p: np.ndarray, atol: float = 1e-9) -> None:
+    """The push-sum requirement: nonnegative with unit column sums
+    (mass conservation — Σ_i of what j sends equals what j had)."""
+    m = p.shape[0]
+    if p.shape != (m, m):
+        raise ValueError("gossip matrix must be square")
+    if np.any(p < -atol) or np.any(p > 1 + atol):
+        raise ValueError("gossip weights must lie in [0, 1]")
+    if not np.allclose(p.sum(axis=0), 1.0, atol=1e-7):
+        raise ValueError("push-sum gossip matrix must be column-stochastic")
+
+
+def as_column_stochastic(w: np.ndarray) -> np.ndarray:
+    """Coerce a gossip matrix to the push-sum (column-stochastic) form.
+
+    Column-stochastic input passes through; a merely row-stochastic input
+    is transposed — the same directed graph re-expressed in the sender
+    convention ("who I push to" instead of "who I listen to").  Doubly
+    stochastic matrices are both, so every symmetric topology works under
+    push-sum unchanged."""
+    w = np.asarray(w, dtype=np.float64)
+    if np.allclose(w.sum(axis=0), 1.0, atol=1e-7):
+        return w
+    if np.allclose(w.sum(axis=1), 1.0, atol=1e-7):
+        return w.T
+    raise ValueError("push-sum needs a row- or column-stochastic matrix")
+
+
+def mask_and_renormalize_columns(p: np.ndarray, active: np.ndarray) -> np.ndarray:
+    """Column-stochastic analogue of ``mask_and_renormalize``: edges that
+    touch an inactive client are removed and the lost mass returns to the
+    *sender's* diagonal, so every column still sums to 1 (push-sum mass
+    conservation) and inactive clients neither send nor receive — their
+    row and column collapse to identity."""
+    p = np.asarray(p, dtype=np.float64)
+    active = np.asarray(active, dtype=bool)
+    if active.shape != (p.shape[0],):
+        raise ValueError(
+            f"active mask shape {active.shape} does not match m={p.shape[0]}")
+    pm = np.where(np.outer(active, active), p, 0.0)
+    np.fill_diagonal(pm, 0.0)
+    np.fill_diagonal(pm, 1.0 - pm.sum(axis=0))
+    return pm
 
 
 def adjacency(topology: str, m: int, *, degree: int = 10, seed: int = 0) -> np.ndarray:
@@ -207,6 +311,11 @@ class GossipSpec:
         directly and skips this; use ``masked`` when you want the spec's
         derived quantities, not on a hot path.
         """
+        if self.topology in DIRECTED_TOPOLOGIES:
+            raise ValueError(
+                "masked() row-renormalizes, which breaks column "
+                "stochasticity; directed specs are masked per round by "
+                "comm.PushSumTransport.prepare (mask_and_renormalize_columns)")
         w = mask_and_renormalize(self.matrix, active)
         return GossipSpec(topology=self.topology, matrix=w, psi=spectral_psi(w))
 
@@ -220,6 +329,17 @@ def spectral_psi(w: np.ndarray) -> float:
 
 def make_gossip(topology: str, m: int, *, weights: str = "metropolis",
                 degree: int = 10, seed: int = 0) -> GossipSpec:
+    if topology in DIRECTED_TOPOLOGIES:
+        # directed graphs take sender-normalized (column-stochastic)
+        # weights regardless of the ``weights`` scheme; they are only
+        # meaningful under the push-sum transport
+        if topology == "dring":
+            adj = directed_ring_adjacency(m)
+        else:
+            adj = directed_random_adjacency(m, degree, seed)
+        p = column_stochastic_weights(adj)
+        validate_column_stochastic(p)
+        return GossipSpec(topology=topology, matrix=p, psi=spectral_psi(p))
     adj = adjacency(topology, m, degree=degree, seed=seed)
     if weights == "metropolis":
         w = metropolis_weights(adj)
@@ -286,12 +406,12 @@ def time_varying_specs(topology: str, m: int, rounds: int, *, degree: int = 10,
     ``repro.core.participation.participation_schedule``) composes partial
     participation with any topology — each round's matrix is masked to
     that round's active clients via ``mask_and_renormalize``."""
-    if topology != "random":
+    if topology in ("random", "drandom"):
+        specs = [make_gossip(topology, m, weights=weights, degree=degree,
+                             seed=base_seed + t) for t in range(rounds)]
+    else:
         spec = make_gossip(topology, m, weights=weights)
         specs = [spec] * rounds
-    else:
-        specs = [make_gossip("random", m, weights=weights, degree=degree,
-                             seed=base_seed + t) for t in range(rounds)]
     if masks is None:
         return specs
     if len(masks) != rounds:

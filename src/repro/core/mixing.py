@@ -32,11 +32,19 @@ PyTree = Any
 
 
 def mix_dense(w: jax.Array | np.ndarray, z: PyTree) -> PyTree:
-    """x_i = sum_j w_ij z_j over the leading (client) axis of every leaf."""
+    """x_i = sum_j w_ij z_j over the leading (client) axis of every leaf.
+
+    The contraction runs in f32 and the result is cast back to the leaf
+    dtype: casting W down to bf16 instead would de-normalize the rows
+    (a bf16 gossip matrix is no longer doubly stochastic to machine
+    precision), so the client-mean would drift every round.
+    """
     w = jnp.asarray(w)
 
     def leaf(arr):
-        return jnp.einsum("ij,j...->i...", w.astype(arr.dtype), arr)
+        out = jnp.einsum("ij,j...->i...", w.astype(jnp.float32),
+                         arr.astype(jnp.float32))
+        return out.astype(arr.dtype)
 
     return jax.tree.map(leaf, z)
 
@@ -88,6 +96,72 @@ def mix_ppermute(z: PyTree, spec: GossipSpec, mesh: jax.sharding.Mesh,
     fn = functools.partial(mix_ppermute_local, spec=spec, axis_name=client_axis)
     return jax.shard_map(fn, mesh=mesh, in_specs=(pspec,), out_specs=pspec,
                          check_vma=False)(z)
+
+
+def mix_ppermute_local_masked(z_local: PyTree, gates, self_w, spec: GossipSpec,
+                              axis_name: str) -> PyTree:
+    """Participation-gated per-shard mixing body.
+
+    Realizes ``mask_and_renormalize(W, active) @ z`` on the ppermute path
+    without ever materializing the (non-circulant) masked matrix: every
+    permute still fires (fixed communication schedule, no shape change),
+    but each received contribution is scaled by its per-client gate
+    ``active[sender] * active[receiver]`` and the self-weight absorbs the
+    lost mass — inactive clients end up with gate rows of zero and a self
+    weight of exactly 1, holding their state bitwise.
+
+    ``gates``: (local_m, n_off) f32, one column per non-zero offset of the
+    circulant pattern, in ``_circulant_pattern`` order (offset 0 excluded).
+    ``self_w``: (local_m,) f32.  Both are sharded along the client axis.
+    """
+    m = spec.m
+    pattern = [(off, wgt) for off, wgt in _circulant_pattern(spec) if off != 0]
+
+    def leaf(arr):
+        extra = (1,) * (arr.ndim - 1)
+        acc = arr * self_w.reshape((-1,) + extra)
+        for col, (off, wgt) in enumerate(pattern):
+            perm = [(src, (src + off) % m) for src in range(m)]
+            gate = (wgt * gates[:, col]).reshape((-1,) + extra)
+            acc = acc + jax.lax.ppermute(arr, axis_name, perm) * gate
+        return acc
+
+    return jax.tree.map(leaf, z_local)
+
+
+def mix_ppermute_masked(z: PyTree, gates, self_w, spec: GossipSpec,
+                        mesh: jax.sharding.Mesh, client_axis: str,
+                        inner_specs: PyTree | None = None) -> PyTree:
+    """shard_map wrapper for the participation-gated ppermute path."""
+    if inner_specs is None:
+        pspec = jax.tree.map(lambda _: P(client_axis), z)
+    else:
+        pspec = inner_specs
+
+    fn = functools.partial(mix_ppermute_local_masked, spec=spec,
+                           axis_name=client_axis)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(pspec, P(client_axis, None), P(client_axis)),
+        out_specs=pspec, check_vma=False)(z, gates, self_w)
+
+
+def ppermute_gates(spec: GossipSpec, active: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side plan for ``mix_ppermute_masked``.
+
+    Returns ``(gates (m, n_off) f32, self_w (m,) f32)`` such that the gated
+    circulant exchange equals ``gossip.mask_and_renormalize(W, active)``:
+    ``gates[i, col] = active[i - off_col] * active[i]`` and the self weight
+    is ``1 - sum_col w_col * gates[i, col]`` (identically 1 for inactive i).
+    """
+    active = np.asarray(active, dtype=bool)
+    pattern = [(off, wgt) for off, wgt in _circulant_pattern(spec) if off != 0]
+    gates = np.stack([np.roll(active, off) & active for off, _ in pattern],
+                     axis=1).astype(np.float64)
+    wgts = np.array([wgt for _, wgt in pattern])
+    self_w = 1.0 - gates @ wgts
+    return gates.astype(np.float32), self_w.astype(np.float32)
 
 
 def mix(z: PyTree, spec: GossipSpec, *, strategy: str = "dense",

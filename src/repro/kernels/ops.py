@@ -15,10 +15,12 @@ import jax.numpy as jnp
 
 from repro.kernels import admm_update as _admm
 from repro.kernels import gossip_matmul as _gossip
+from repro.kernels import quantize as _quant
 from repro.kernels import sam_scale as _sam
 from repro.kernels import selective_scan as _sscan
 
 LANE = 128
+SUBLANE = 8
 
 
 def _interpret_default() -> bool:
@@ -124,6 +126,56 @@ def gossip_mix_leaf(w, z, *, interpret: bool | None = None):
 def gossip_mix(w, tree, *, interpret: bool | None = None):
     return jax.tree.map(
         functools.partial(gossip_mix_leaf, w, interpret=interpret), tree)
+
+
+def _pad_client_planes(x, col_tile):
+    """Stacked (m, ...) leaf -> padded (m', N') 2-D planes for the
+    quantize kernels, with m' a sublane multiple and N' a lane/tile
+    multiple.  Returns (planes, m, n)."""
+    m = x.shape[0]
+    flat = x.reshape(m, -1)
+    n = flat.shape[1]
+    pad_m = (-m) % SUBLANE
+    pad_n = (-n) % col_tile
+    if pad_m or pad_n:
+        flat = jnp.pad(flat, ((0, pad_m), (0, pad_n)))
+    return flat, m, n
+
+
+def quantize_leaf(x, u, *, bits: int = 8, interpret: bool | None = None):
+    """Fused stochastic quantize + error-feedback residual for ONE stacked
+    (m, ...) leaf.
+
+    ``u`` is a uniform-[0,1) array shaped like ``x`` (the caller owns the
+    PRNG so kernel and oracle see identical bits).  Returns
+    ``(q int8 (m, ...), scale (m,) f32, residual (m, ...) x.dtype)`` with
+    a per-client symmetric scale ``max|x_i| / qmax`` (floored away from
+    zero so an all-zero message quantizes to exact zeros).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    qmax = float(2 ** (bits - 1) - 1)
+    m = x.shape[0]
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)).reshape(m, -1), axis=1)
+    scale = jnp.maximum(absmax, jnp.float32(1e-12)) / qmax
+    xp, _, n = _pad_client_planes(x, _quant.COL_TILE)
+    up, _, _ = _pad_client_planes(u.astype(jnp.float32), _quant.COL_TILE)
+    # padded rows divide by 1.0, not 0.0 (their outputs are discarded)
+    sp = jnp.pad(scale, (0, xp.shape[0] - m), constant_values=1.0)
+    q, r = _quant.quantize_2d(xp, sp.reshape(-1, 1), up, bits=bits,
+                              interpret=interpret)
+    return (q[:m, :n].reshape(x.shape), scale,
+            r[:m, :n].reshape(x.shape).astype(x.dtype))
+
+
+def dequantize_leaf(q, scale, shape, dtype, *, interpret: bool | None = None):
+    """Inverse wire map for one leaf: int8 values + (m,) scale -> (m, ...)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m = q.shape[0]
+    qp, _, n = _pad_client_planes(q, _quant.COL_TILE)
+    sp = jnp.pad(scale, (0, qp.shape[0] - m), constant_values=1.0)
+    y = _quant.dequantize_2d(qp, sp.reshape(-1, 1), out_dtype=dtype,
+                             interpret=interpret)
+    return y[:m, :n].reshape(shape)
 
 
 def selective_scan(x, dt, a_log, b, c, dskip, h0=None, *,

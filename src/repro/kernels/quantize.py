@@ -1,0 +1,79 @@
+"""Fused quantize/dequantize kernels for compressed gossip messages.
+
+The wire-compression hot loop of ``repro.core.comm.QuantizeCodec``:
+per-client stochastic rounding of the (m, N) flattened message against a
+per-client scale, fused with the error-feedback residual computation —
+one read of the f32 message produces both the int8 wire values and the
+residual that feeds the next round, instead of three separate
+elementwise passes (quantize, dequantize, subtract).
+
+Layout mirrors ``gossip_matmul``: the client axis m is tiny (padded to
+the sublane multiple by the ops wrapper) and the flattened parameter
+axis N streams through in column tiles, with the (m, 1) scale resident
+for the whole grid.  Randomness rides in as a precomputed uniform plane
+so the kernel stays deterministic, differentiable-free elementwise math
+that is exact in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL_TILE = 512
+
+
+def _quant_kernel(x_ref, scale_ref, u_ref, q_ref, r_ref, *, qmax):
+    x = x_ref[...].astype(jnp.float32)
+    s = scale_ref[...].astype(jnp.float32)          # (m, 1), broadcasts
+    # stochastic rounding: E[floor(y + u)] = y for u ~ U[0, 1)
+    q = jnp.floor(x / s + u_ref[...])
+    q = jnp.clip(q, -qmax, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    r_ref[...] = (x - q * s).astype(r_ref.dtype)
+
+
+def quantize_2d(x, scale, u, *, bits: int = 8, interpret: bool = True,
+                col_tile: int = COL_TILE):
+    """x: (m, N); scale: (m, 1) f32 (> 0); u: (m, N) f32 uniform [0, 1).
+
+    Returns ``(q int8, residual x.dtype)`` with
+    ``q = clip(floor(x/scale + u), -qmax, qmax)`` and
+    ``residual = x - q * scale`` (the error-feedback carry).
+    """
+    m, n = x.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    grid = (pl.cdiv(n, col_tile),)
+    spec = pl.BlockSpec((m, col_tile), lambda j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[spec, pl.BlockSpec((m, 1), lambda j: (0, 0)), spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.int8),
+                   jax.ShapeDtypeStruct(x.shape, x.dtype)],
+        interpret=interpret,
+    )(x, scale, u)
+
+
+def _dequant_kernel(q_ref, scale_ref, y_ref):
+    s = scale_ref[...].astype(jnp.float32)
+    y_ref[...] = (q_ref[...].astype(jnp.float32) * s).astype(y_ref.dtype)
+
+
+def dequantize_2d(q, scale, *, out_dtype=jnp.float32, interpret: bool = True,
+                  col_tile: int = COL_TILE):
+    """q: (m, N) int8; scale: (m, 1) f32 -> (m, N) ``out_dtype``."""
+    m, n = q.shape
+    grid = (pl.cdiv(n, col_tile),)
+    spec = pl.BlockSpec((m, col_tile), lambda j: (0, j))
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[spec, pl.BlockSpec((m, 1), lambda j: (0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, out_dtype),
+        interpret=interpret,
+    )(q, scale)

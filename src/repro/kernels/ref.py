@@ -16,6 +16,21 @@ def scale_add(x, g, scale):
     return x + (scale * g.astype(jnp.float32)).astype(x.dtype)
 
 
+def quantize_stochastic(x, scale, u, *, bits=8):
+    """Oracle for ``quantize.quantize_2d``: x/u (m, N); scale (m, 1) f32.
+    Returns (q int8, residual x.dtype)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    xf = x.astype(jnp.float32)
+    sf = scale.astype(jnp.float32)
+    q = jnp.clip(jnp.floor(xf / sf + u.astype(jnp.float32)), -qmax, qmax)
+    return q.astype(jnp.int8), (xf - q * sf).astype(x.dtype)
+
+
+def dequantize(q, scale, *, out_dtype=jnp.float32):
+    """Oracle for ``quantize.dequantize_2d``."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(out_dtype)
+
+
 def gossip_matmul(w, z):
     return jnp.einsum("ij,jn->in", w.astype(jnp.float32),
                       z.astype(jnp.float32)).astype(z.dtype)

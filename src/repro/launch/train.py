@@ -8,6 +8,16 @@ real TPU mesh the same driver scales via the sharding rules.
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
       --algorithm dfedadmm_sam --rounds 30 --m 8 --k 5
+
+Communication layer (``repro.core.comm``): ``--transport`` selects how
+messages move (``dense`` einsum, ``ppermute`` neighbour exchange,
+``pushsum`` for directed topologies like ``dring``) and ``--codec`` what
+goes on the wire.  Compressed gossip over a one-directional ring, 4-bit
+messages with error feedback (~8x less uplink than f32):
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --topology dring --transport pushsum --codec int8 --codec-bits 4 \
+      --rounds 30 --m 8 --k 5
 """
 from __future__ import annotations
 
@@ -45,6 +55,17 @@ def main(argv=None) -> int:
     ap.add_argument("--lam", type=float, default=0.1)
     ap.add_argument("--rho", type=float, default=0.1)
     ap.add_argument("--topology", default="random")
+    ap.add_argument("--transport", default="dense",
+                    choices=("dense", "ppermute", "pushsum"),
+                    help="communication transport (pushsum for directed "
+                         "topologies: dring, drandom)")
+    ap.add_argument("--codec", default="identity",
+                    choices=("identity", "int8", "topk"),
+                    help="wire codec for gossip messages")
+    ap.add_argument("--codec-bits", type=int, default=8,
+                    help="int8 codec: bits per value (2..8)")
+    ap.add_argument("--codec-k", type=int, default=64,
+                    help="topk codec: kept entries per leaf")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="grad-accumulation splits per inner step")
     ap.add_argument("--participation", default="full",
@@ -85,6 +106,8 @@ def main(argv=None) -> int:
     dfl_cfg = DFLConfig(algorithm=args.algorithm, m=args.m, K=args.k,
                         lr=args.lr, lam=args.lam, rho=args.rho,
                         topology=args.topology,
+                        transport=args.transport, codec=args.codec,
+                        codec_bits=args.codec_bits, codec_k=args.codec_k,
                         microbatches=args.microbatches,
                         participation=part)
     sampler = _make_sampler(cfg, args)
@@ -102,9 +125,11 @@ def main(argv=None) -> int:
                               eval_every=max(args.rounds // 10, 1),
                               verbose=True)
     dt = time.time() - t0
+    wire_mb = sum(history["wire_bytes"]) / 1e6
     print(f"[train] {args.rounds} rounds in {dt:.1f}s  "
           f"final loss={history['loss'][-1]:.4f}  "
-          f"eval={history['eval'].get('eval_loss', ['n/a'])[-1]}")
+          f"eval={history['eval'].get('eval_loss', ['n/a'])[-1]}  "
+          f"uplink={wire_mb:.1f}MB ({args.codec})")
 
     if args.ckpt_dir:
         path = save_pytree(args.ckpt_dir, args.rounds,

@@ -1,0 +1,527 @@
+"""Communication layer: Transport/MessageCodec API, push-sum weight
+correction, codec round-trips + error feedback, quantize kernel vs
+oracle, and bit-identity of the refactored paths against the seed
+behaviour."""
+import functools
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, gossip, mixing
+from repro.core.dfl import DFLConfig, init_state, make_train_round, simulate
+from repro.core.participation import ParticipationSpec
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def _tree(seed=0, m=6, shapes=((3, 4), (7,))):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": jnp.asarray(rng.normal(size=(m,) + s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+# ---------------------------------------------------------------------------
+# Directed gossip matrices
+# ---------------------------------------------------------------------------
+
+def test_directed_ring_is_column_stochastic_not_symmetric():
+    spec = gossip.make_gossip("dring", 8)
+    gossip.validate_column_stochastic(spec.matrix)
+    assert not np.allclose(spec.matrix, spec.matrix.T)
+    with pytest.raises(ValueError):
+        gossip.validate_gossip_matrix(spec.matrix)  # not symmetric
+
+
+def test_directed_random_has_unequal_out_degrees():
+    spec = gossip.make_gossip("drandom", 12, degree=3, seed=0)
+    gossip.validate_column_stochastic(spec.matrix)
+    row_sums = spec.matrix.sum(axis=1)
+    assert not np.allclose(row_sums, 1.0)       # genuinely not doubly stoch.
+
+
+def test_as_column_stochastic_conventions():
+    # irregular digraph: column- but NOT row-stochastic, so the two
+    # conventions are distinguishable
+    p = gossip.make_gossip("drandom", 9, degree=3, seed=5).matrix
+    assert not np.allclose(p.sum(axis=1), 1.0)
+    np.testing.assert_array_equal(gossip.as_column_stochastic(p), p)
+    # row-stochastic input is re-expressed in the sender convention
+    np.testing.assert_array_equal(gossip.as_column_stochastic(p.T), p)
+    # doubly stochastic passes through unchanged
+    w = gossip.make_gossip("ring", 6).matrix
+    np.testing.assert_array_equal(gossip.as_column_stochastic(w), w)
+    with pytest.raises(ValueError):
+        gossip.as_column_stochastic(np.eye(4) * 0.5)
+
+
+def test_mask_and_renormalize_columns_properties():
+    p = gossip.make_gossip("drandom", 10, degree=3, seed=1).matrix
+    active = np.ones(10, dtype=bool)
+    active[[2, 5, 6]] = False
+    pm = gossip.mask_and_renormalize_columns(p, active)
+    gossip.validate_column_stochastic(pm)
+    for i in np.flatnonzero(~active):
+        e = np.zeros(10)
+        e[i] = 1.0
+        np.testing.assert_array_equal(pm[i], e)
+        np.testing.assert_array_equal(pm[:, i], e)
+    with pytest.raises(ValueError):
+        gossip.mask_and_renormalize_columns(p, active[:4])
+
+
+def test_directed_topology_requires_pushsum():
+    with pytest.raises(ValueError):
+        DFLConfig(topology="dring")             # dense transport -> biased
+    cfg = DFLConfig(topology="dring", transport="pushsum")
+    assert cfg.transport == "pushsum"
+
+
+# ---------------------------------------------------------------------------
+# Config surface
+# ---------------------------------------------------------------------------
+
+def test_config_transport_resolution_and_alias():
+    assert DFLConfig().transport == "dense"
+    assert DFLConfig(mixing="ppermute").transport == "ppermute"
+    assert DFLConfig(transport="pushsum", topology="dring").mixing == "pushsum"
+    for bad in (dict(transport="smoke-signals"), dict(codec="gzip"),
+                dict(codec_bits=1), dict(codec_bits=9), dict(codec_k=0),
+                dict(transport="dense", mixing="ppermute")):
+        with pytest.raises(ValueError):
+            DFLConfig(**bad)
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+def test_identity_codec_is_bit_exact_passthrough():
+    z = _tree()
+    codec = comm.IdentityCodec()
+    wire, resid = codec.encode(z, None, None)
+    assert codec.decode(wire) is z and resid is None
+    assert codec.bytes_per_client({"a": jnp.zeros((3, 4))}) == 12 * 4
+
+
+def test_int8_roundtrip_error_bound():
+    """|decode(encode(z)) - z| < scale = absmax / qmax, per client."""
+    z = _tree(seed=1)
+    codec = comm.QuantizeCodec(bits=8)
+    wire, _ = codec.encode(z, codec.init_state(z), jax.random.PRNGKey(0))
+    zh = codec.decode(wire)
+    for k in z:
+        scale = np.asarray(wire[k]["scale"])          # (m,)
+        err = np.abs(np.asarray(zh[k]) - np.asarray(z[k]))
+        bound = scale.reshape((-1,) + (1,) * (z[k].ndim - 1))
+        assert (err <= bound + 1e-7).all()
+        assert zh[k].dtype == z[k].dtype
+
+
+def test_low_bit_quantization_coarser_than_int8():
+    z = _tree(seed=2)
+    err = {}
+    for bits in (8, 4):
+        codec = comm.QuantizeCodec(bits=bits)
+        wire, _ = codec.encode(z, None, jax.random.PRNGKey(0))
+        zh = codec.decode(wire)
+        err[bits] = max(float(jnp.max(jnp.abs(zh[k] - z[k]))) for k in z)
+    assert err[4] > err[8]
+
+
+def test_topk_roundtrip_keeps_largest_entries():
+    z = _tree(seed=3)
+    codec = comm.TopKCodec(k=5)
+    wire, _ = codec.encode(z, None, None)
+    zh = codec.decode(wire)
+    for k in z:
+        m = z[k].shape[0]
+        flat = np.asarray(z[k]).reshape(m, -1)
+        dec = np.asarray(zh[k]).reshape(m, -1)
+        kk = min(5, flat.shape[1])
+        for i in range(m):
+            nz = np.flatnonzero(dec[i])
+            assert len(nz) <= kk
+            np.testing.assert_allclose(dec[i, nz], flat[i, nz], rtol=1e-6)
+            # kept entries are the largest-magnitude ones
+            thresh = np.sort(np.abs(flat[i]))[-kk]
+            assert (np.abs(flat[i, nz]) >= thresh - 1e-6).all()
+
+
+@pytest.mark.parametrize("codec_fn", [
+    lambda: comm.QuantizeCodec(bits=4),
+    lambda: comm.TopKCodec(k=3),
+])
+def test_error_feedback_telescopes(codec_fn):
+    """sum_t decode(wire_t) == sum_t z_t + (r_0 - r_T): the compressed
+    stream's running sum tracks the uncompressed one to within one
+    residual, so the per-round compression error does not accumulate."""
+    codec = codec_fn()
+    rng = np.random.default_rng(4)
+    key = jax.random.PRNGKey(1)
+    resid = None
+    sum_true = np.zeros((4, 6))
+    sum_dec = np.zeros((4, 6))
+    for t in range(25):
+        z = {"p": jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)}
+        key, sub = jax.random.split(key)
+        wire, resid = codec.encode(z, resid, sub)
+        sum_true += np.asarray(z["p"])
+        sum_dec += np.asarray(codec.decode(wire)["p"])
+    final_resid = np.asarray(resid["p"])
+    np.testing.assert_allclose(sum_dec + final_resid, sum_true,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_codec_wire_bytes_accounting():
+    params = {"a": jnp.zeros((100,), jnp.float32),
+              "b": jnp.zeros((10, 10), jnp.float32)}
+    assert comm.IdentityCodec().bytes_per_client(params) == 200 * 4
+    assert comm.QuantizeCodec(bits=8).bytes_per_client(params) == 2 * (100 + 4)
+    assert comm.QuantizeCodec(bits=4).bytes_per_client(params) == 2 * (50 + 4)
+    assert comm.TopKCodec(k=16).bytes_per_client(params) == 2 * 16 * 8
+    # >= 3x reduction for int8 on f32 leaves (the acceptance criterion)
+    assert (comm.IdentityCodec().bytes_per_client(params)
+            >= 3 * comm.QuantizeCodec(bits=8).bytes_per_client(params))
+
+
+# ---------------------------------------------------------------------------
+# Quantize kernel vs oracle
+# ---------------------------------------------------------------------------
+
+QSHAPES = [(4, 16), (8, 128), (3, 5, 17), (2, 513, 31)]
+
+
+@pytest.mark.parametrize("shape", QSHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_kernel_matches_ref(shape, dtype):
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    u = jnp.asarray(rng.random(size=shape), jnp.float32)
+    q, scale, r = ops.quantize_leaf(x, u, bits=8)
+    m = shape[0]
+    sb = scale.reshape((m,) + (1,) * (len(shape) - 1))
+    qr, rr = ref.quantize_stochastic(x, sb, u, bits=8)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    # bf16 residuals may differ by one ulp where XLA contracts x - q*s
+    # into an FMA on one of the two paths
+    tol = dict(rtol=1e-2, atol=1e-4) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(rr, np.float32), **tol)
+    y = ops.dequantize_leaf(q, scale, shape, dtype)
+    yr = ref.dequantize(q.reshape(m, -1),
+                        scale.reshape(-1, 1)).reshape(shape).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(yr, np.float32))
+
+
+def test_quantize_codec_kernel_path_matches_jnp_path():
+    z = _tree(seed=5)
+    key = jax.random.PRNGKey(7)
+    wires, decs = [], []
+    for use_kernel in (False, True):
+        codec = comm.QuantizeCodec(bits=8, use_kernel=use_kernel)
+        wire, resid = codec.encode(z, codec.init_state(z), key)
+        wires.append(wire)
+        decs.append(codec.decode(wire))
+    for k in z:
+        np.testing.assert_array_equal(np.asarray(wires[0][k]["q"]),
+                                      np.asarray(wires[1][k]["q"]))
+        np.testing.assert_allclose(np.asarray(decs[0][k]),
+                                   np.asarray(decs[1][k]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Push-sum transport
+# ---------------------------------------------------------------------------
+
+def test_pushsum_weights_converge_to_uniform_on_directed_ring():
+    """On a directed ring the column-stochastic matrix is doubly
+    stochastic, so the Perron vector is uniform: the per-client push-sum
+    weight converges to (stays at) exactly 1/m."""
+    m = 8
+    spec = gossip.make_gossip("dring", m)
+    t = comm.PushSumTransport()
+    plan = t.prepare(spec)
+    aux = t.init_aux(m)
+    x = _tree(seed=6, m=m, shapes=((3,),))
+    target = np.asarray(x["l0"]).mean(0)
+    for _ in range(120):
+        x, aux = t.mix(x, plan, aux)
+    np.testing.assert_allclose(np.asarray(aux), 1.0 / m, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(x["l0"]),
+                               np.broadcast_to(target, (m, 3)), atol=1e-4)
+
+
+def test_pushsum_reaches_true_average_on_irregular_digraph():
+    """The point of the weight correction: on a digraph with unequal
+    out-degrees, weight-less mixing converges to a Perron-weighted
+    average, push-sum to the true uniform average."""
+    m = 10
+    spec = gossip.make_gossip("drandom", m, degree=3, seed=2)
+    t = comm.PushSumTransport()
+    plan = t.prepare(spec)
+    x = _tree(seed=7, m=m, shapes=((4,),))
+    target = np.asarray(x["l0"]).mean(0)
+    aux = t.init_aux(m)
+    xn = {"l0": x["l0"]}
+    p = np.asarray(spec.matrix)
+    naive = np.asarray(x["l0"]).copy()
+    for _ in range(300):
+        xn, aux = t.mix(xn, plan, aux)
+        naive = p @ naive
+    assert not np.allclose(np.asarray(aux), 1.0 / m)   # non-uniform Perron
+    np.testing.assert_allclose(np.asarray(xn["l0"]),
+                               np.broadcast_to(target, (m, 4)), atol=1e-4)
+    # the uncorrected iteration is measurably biased
+    assert np.abs(naive - target[None]).max() > 1e-2
+
+
+def test_pushsum_with_doubly_stochastic_matrix_is_plain_mixing():
+    """Symmetric gossip under push-sum: weights stay exactly uniform and
+    the step equals the dense einsum."""
+    m = 6
+    spec = gossip.make_gossip("exp", m)
+    t = comm.PushSumTransport()
+    plan = t.prepare(spec)
+    z = _tree(seed=8, m=m)
+    x, aux = t.mix(z, plan, t.init_aux(m))
+    ref = mixing.mix_dense(jnp.asarray(spec.matrix, jnp.float32), z)
+    for k in z:
+        np.testing.assert_allclose(np.asarray(x[k]), np.asarray(ref[k]),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(aux), 1.0 / m, rtol=1e-6)
+
+
+def test_pushsum_mix_requires_aux():
+    spec = gossip.make_gossip("dring", 4)
+    t = comm.PushSumTransport()
+    with pytest.raises(ValueError):
+        t.mix(_tree(m=4), t.prepare(spec), None)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end rounds
+# ---------------------------------------------------------------------------
+
+def _lin_setup(m=4, K=3, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(5, 2)) / 2, jnp.float32)}
+    batches = {"x": jnp.asarray(rng.normal(size=(m, K, 8, 5)), jnp.float32),
+               "y": jnp.asarray(rng.normal(size=(m, K, 8, 2)), jnp.float32)}
+
+    def loss(p, batch, r):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    def sampler(t):
+        r = np.random.default_rng(100 + t)
+        return {"x": jnp.asarray(r.normal(size=(m, K, 8, 5)), jnp.float32),
+                "y": jnp.asarray(r.normal(size=(m, K, 8, 2)), jnp.float32)}
+
+    return params, batches, loss, sampler
+
+
+def test_quantized_pushsum_round_smoke():
+    """Fast-tier smoke: one jitted quantized push-sum round end-to-end."""
+    m, K = 4, 3
+    params, batches, loss, _ = _lin_setup(m, K)
+    cfg = DFLConfig(algorithm="dfedadmm", m=m, K=K, lam=0.2,
+                    topology="dring", transport="pushsum", codec="int8",
+                    codec_bits=4)
+    spec = gossip.make_gossip("dring", m)
+    state = init_state(params, cfg, seed=0)
+    assert set(state.comm) == {"ps_weight", "residual"}
+    round_fn = jax.jit(make_train_round(loss, cfg, spec=spec,
+                                        metrics="light"))
+    plan = comm.PushSumTransport().prepare(spec)
+    new_state, metrics = round_fn(state, batches, plan)
+    assert np.isfinite(float(metrics["loss"]))
+    assert not np.array_equal(np.asarray(new_state.params["w"]),
+                              np.asarray(state.params["w"]))
+    # weights stay uniform on the directed ring (doubly stochastic)
+    np.testing.assert_allclose(np.asarray(new_state.comm["ps_weight"]),
+                               1.0 / m, rtol=1e-6)
+    # residual state engaged
+    assert any(float(jnp.max(jnp.abs(l))) > 0
+               for l in jax.tree.leaves(new_state.comm["residual"]))
+
+
+def test_dense_identity_bit_identical_to_seed_path():
+    """transport='dense' + codec='identity' through the comm API is the
+    pre-PR mixing path bit for bit (same jitted computation)."""
+    m, K = 4, 3
+    params, _, loss, sampler = _lin_setup(m, K)
+    base = dict(algorithm="dfedadmm", m=m, K=K, lam=0.2, topology="ring")
+    s_a, h_a = simulate(loss, None, params, DFLConfig(**base), sampler,
+                        rounds=5)
+    s_b, h_b = simulate(loss, None, params,
+                        DFLConfig(**base, transport="dense",
+                                  codec="identity"), sampler, rounds=5)
+    s_c, h_c = simulate(loss, None, params,
+                        DFLConfig(**base, mixing="dense"), sampler, rounds=5)
+    for s in (s_b, s_c):
+        np.testing.assert_array_equal(np.asarray(s_a.params["w"]),
+                                      np.asarray(s.params["w"]))
+    np.testing.assert_array_equal(np.asarray(h_a["loss"]),
+                                  np.asarray(h_b["loss"]))
+
+
+def test_ppermute_identity_bit_identical_to_dense_fallback():
+    """transport='ppermute' without a mesh takes the dense fallback
+    against the static circulant matrix — the seed behaviour."""
+    m, K = 4, 2
+    params, batches, loss, _ = _lin_setup(m, K)
+    spec = gossip.make_gossip("ring", m)
+    outs = {}
+    for name in ("dense", "ppermute"):
+        cfg = DFLConfig(algorithm="dfedavg", m=m, K=K, topology="ring",
+                        transport=name)
+        round_fn = jax.jit(make_train_round(loss, cfg, spec=spec,
+                                            metrics="light"))
+        state = init_state(params, cfg, seed=0)
+        plan = comm.make_transport(cfg, spec=spec).prepare(spec)
+        st, _ = round_fn(state, batches, plan)
+        outs[name] = np.asarray(st.params["w"])
+    np.testing.assert_array_equal(outs["dense"], outs["ppermute"])
+
+
+def test_ppermute_prepare_rejects_foreign_matrix():
+    """The invariant holds below simulate() too: feeding a different
+    round matrix straight into PpermuteTransport.prepare raises instead
+    of silently gossiping over the construction-time graph."""
+    m = 8
+    spec0 = gossip.make_gossip("random", m, degree=3, seed=0)
+    if not spec0.is_circulant():
+        spec_ring = gossip.make_gossip("ring", m)
+        t = comm.PpermuteTransport(spec_ring)
+        with pytest.raises(ValueError, match="cannot realize"):
+            t.prepare(spec0)
+    # same matrix (fresh spec object) is fine
+    t = comm.PpermuteTransport(gossip.make_gossip("ring", m))
+    assert t.prepare(gossip.make_gossip("ring", m)) is None
+
+
+def test_simulate_rejects_time_varying_ppermute():
+    """Regression for the silent specs[0]-reuse bug: random topology +
+    ppermute must raise instead of gossiping over round 0's graph."""
+    m, K = 4, 2
+    params, _, loss, sampler = _lin_setup(m, K)
+    cfg = DFLConfig(algorithm="dfedavg", m=m, K=K, topology="random",
+                    mixing="ppermute")
+    with pytest.raises(ValueError, match="static neighbour pattern"):
+        simulate(loss, None, params, cfg, sampler, rounds=3)
+
+
+def test_wire_bytes_history_scales_with_participation():
+    m, K = 6, 2
+    params, _, loss, sampler = _lin_setup(m, K)
+    cfg = DFLConfig(algorithm="dfedavg", m=m, K=K, topology="full",
+                    codec="int8",
+                    participation=ParticipationSpec(mode="fraction", p=0.5))
+    _, hist = simulate(loss, None, params, cfg, sampler, rounds=3)
+    bpc = comm.QuantizeCodec(bits=8).bytes_per_client(params)
+    assert hist["wire_bytes"] == [bpc * 3] * 3      # 3 of 6 clients active
+
+
+def test_masked_quantized_round_holds_inactive_state():
+    """Compression noise must not leak into inactive clients: their
+    parameters and codec residuals stay bitwise frozen."""
+    m, K = 6, 2
+    params, batches, loss, _ = _lin_setup(m, K)
+    cfg = DFLConfig(algorithm="dfedavg", m=m, K=K, topology="full",
+                    codec="int8",
+                    participation=ParticipationSpec(mode="fraction", p=0.5))
+    spec = gossip.make_gossip("full", m)
+    state = init_state(params, cfg, seed=0)
+    active = np.array([True, False, True, False, True, True])
+    steps = np.where(active, K, 0).astype(np.int32)
+    round_fn = jax.jit(make_train_round(loss, cfg, spec=spec,
+                                        metrics="light"))
+    plan = comm.DenseTransport().prepare(spec, active)
+    st, _ = round_fn(state, batches, plan, jnp.asarray(active),
+                     jnp.asarray(steps))
+    for i in np.flatnonzero(~active):
+        np.testing.assert_array_equal(np.asarray(st.params["w"][i]),
+                                      np.asarray(state.params["w"][i]))
+        np.testing.assert_array_equal(
+            np.asarray(st.comm["residual"]["w"][i]),
+            np.asarray(state.comm["residual"]["w"][i]))
+
+
+@pytest.mark.slow
+def test_pushsum_converges_like_symmetric_gossip():
+    """Acceptance: a directed-ring push-sum run converges to the same
+    loss as symmetric ring gossip within tolerance."""
+    m, K = 8, 3
+    params, _, loss, sampler = _lin_setup(m, K)
+    _, h_sym = simulate(loss, None, params,
+                        DFLConfig(algorithm="dfedadmm", m=m, K=K, lam=0.2,
+                                  topology="ring"), sampler, rounds=15)
+    _, h_ps = simulate(loss, None, params,
+                       DFLConfig(algorithm="dfedadmm", m=m, K=K, lam=0.2,
+                                 topology="dring", transport="pushsum"),
+                       sampler, rounds=15)
+    assert h_ps["loss"][-1] < h_ps["loss"][0]
+    assert abs(h_ps["loss"][-1] - h_sym["loss"][-1]) \
+        <= 0.1 * abs(h_sym["loss"][-1]) + 0.05
+
+
+@pytest.mark.slow
+def test_quantized_gossip_still_converges():
+    """Error feedback keeps the compressed run within tolerance of the
+    uncompressed one at equal rounds."""
+    m, K = 8, 3
+    params, _, loss, sampler = _lin_setup(m, K)
+    base = dict(algorithm="dfedadmm", m=m, K=K, lam=0.2, topology="ring")
+    _, h_id = simulate(loss, None, params, DFLConfig(**base), sampler,
+                       rounds=15)
+    _, h_q = simulate(loss, None, params,
+                      DFLConfig(**base, codec="int8", codec_bits=4),
+                      sampler, rounds=15)
+    assert h_q["loss"][-1] < h_q["loss"][0]
+    assert h_q["loss"][-1] <= 1.2 * h_id["loss"][-1] + 0.05
+
+
+_MASKED_PPERMUTE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.core import gossip, mixing
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+for topo in ("ring", "exp", "full"):
+    spec = gossip.make_gossip(topo, 8)
+    active = np.array([True, False, True, True, False, True, True, True])
+    z = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(8, 4, 6)),
+                          jnp.float32)}
+    wm = gossip.mask_and_renormalize(spec.matrix, active)
+    dense = mixing.mix_dense(jnp.asarray(wm, jnp.float32), z)
+    gates, self_w = mixing.ppermute_gates(spec, active)
+    pp = mixing.mix_ppermute_masked(z, jnp.asarray(gates),
+                                    jnp.asarray(self_w), spec, mesh, "data")
+    np.testing.assert_allclose(np.asarray(pp["a"]), np.asarray(dense["a"]),
+                               rtol=1e-5, atol=1e-6)
+print("MASKED_PPERMUTE_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not _HAS_AXIS_TYPE,
+                    reason="jax.sharding.AxisType unavailable in this jax")
+def test_masked_ppermute_equals_masked_dense_subprocess():
+    """Gated permute sends realize mask_and_renormalize on the sharded
+    substrate (the ROADMAP item: participation on the ppermute path)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _MASKED_PPERMUTE_SCRIPT],
+                       env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "MASKED_PPERMUTE_OK" in r.stdout

@@ -34,6 +34,39 @@ def test_dense_mix_preserves_mean():
                                atol=1e-6)
 
 
+def test_dense_mix_bf16_contracts_in_f32():
+    """Numerics regression: bf16 leaves must mix against the f32 matrix
+    with f32 accumulation — casting W down to the leaf dtype de-normalizes
+    its rows (a bf16 gossip matrix is no longer doubly stochastic to
+    machine precision), silently drifting the client-mean every round."""
+    m = 16
+    spec = gossip.make_gossip("exp", m)
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.normal(size=(m, 257)) * 100.0, jnp.bfloat16)
+
+    # the contraction itself must be f32 x f32 -> f32: the only casts in
+    # the jaxpr are the leaf up-cast and the final down-cast, never a
+    # conversion of the matrix to bf16
+    jaxpr = str(jax.make_jaxpr(
+        lambda zz: mixing.mix_dense(spec.matrix, zz))({"p": z}))
+    assert "new_dtype=bfloat16" in jaxpr          # only the output cast
+    assert jaxpr.count("new_dtype=bfloat16") == 1
+    assert "preferred_element_type=float32" in jaxpr
+
+    # numerically: every element within one bf16 rounding of the exact
+    # f64 mix, and the client-mean preserved to that same single-rounding
+    # tolerance (no accumulated row-sum bias)
+    out = mixing.mix_dense(spec.matrix, {"p": z})["p"]
+    assert out.dtype == jnp.bfloat16
+    exact = spec.matrix @ np.asarray(z, np.float64)
+    np.testing.assert_allclose(np.asarray(out, np.float32), exact,
+                               rtol=2 ** -8, atol=1e-6)
+    mean_err = np.abs(np.mean(np.asarray(out, np.float32), 0)
+                      - exact.mean(0))
+    tol = np.abs(exact).max(0) * 2 ** -8 + 1e-6
+    assert (mean_err <= tol).all()
+
+
 def test_full_topology_mix_is_average():
     spec = gossip.make_gossip("full", 6)
     z = jnp.asarray(np.random.default_rng(2).normal(size=(6, 5)), jnp.float32)

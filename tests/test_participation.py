@@ -237,10 +237,36 @@ def test_trivial_detection_and_validation():
             ParticipationSpec(**bad)
 
 
-def test_ppermute_mixing_rejected():
-    with pytest.raises(ValueError):
-        DFLConfig(mixing="ppermute",
-                  participation=ParticipationSpec(mode="uniform", p=0.5))
+def test_ppermute_participation_now_supported():
+    """The ppermute transport accepts partial participation since the
+    comm-layer redesign: `Transport.prepare` gates the permute sends
+    instead of materializing the non-circulant masked matrix."""
+    cfg = DFLConfig(mixing="ppermute", topology="ring",
+                    participation=ParticipationSpec(mode="uniform", p=0.5))
+    assert cfg.transport == "ppermute"
+
+
+def test_ppermute_gates_realize_masked_matrix():
+    """ppermute_gates(spec, active) @ z == mask_and_renormalize(W) @ z:
+    the gated circulant exchange is the masked matrix, offset by offset."""
+    from repro.core import mixing
+    m = 8
+    spec = make_gossip("exp", m)
+    active = np.array([True, False, True, True, False, True, True, True])
+    gates, self_w = mixing.ppermute_gates(spec, active)
+    wm = mask_and_renormalize(spec.matrix, active)
+    # reassemble the dense matrix from the gated circulant pattern
+    pattern = [(off, wgt) for off, wgt in mixing._circulant_pattern(spec)
+               if off != 0]
+    rebuilt = np.diag(self_w.astype(np.float64))
+    for col, (off, wgt) in enumerate(pattern):
+        for i in range(m):
+            rebuilt[i, (i - off) % m] += wgt * gates[i, col]
+    np.testing.assert_allclose(rebuilt, wm, atol=1e-6)
+    # inactive clients: gate row zero, self weight exactly 1
+    for i in np.flatnonzero(~active):
+        assert self_w[i] == 1.0
+        np.testing.assert_array_equal(gates[i], 0.0)
 
 
 # ---------------------------------------------------------------------------
