@@ -15,13 +15,14 @@ the final accuracy, and rounds until the eval accuracy first reaches
 ``target``.  The acceptance bar for the comm redesign: int8 cuts wire
 bytes >= 3x without degrading rounds-to-target by more than 20%.
 """
-from benchmarks.common import emit, rounds_from_history, run_dfl
+from benchmarks.common import emit, rounds_from_history, run_cfl, run_dfl
 
 CODEC_POINTS = (
     ("identity", dict()),
     ("int8", dict(codec="int8", codec_bits=8)),
     ("int4", dict(codec="int8", codec_bits=4)),
     ("top32", dict(codec="topk", codec_k=32)),
+    ("rand32", dict(codec="randk", codec_k=32)),
 )
 
 
@@ -52,6 +53,14 @@ def run(rounds: int = 20, m: int = 16, algo: str = "dfedadmm",
         emit(f"comm/transport/{name}", us,
              f"bytes_per_round={hist['wire_bytes'][0]};acc={acc:.4f};"
              f"rounds_to_{target:g}={rt if rt is not None else f'>{rounds}'}")
+
+    # centralized baselines through the same history schema: simulate_cfl
+    # now records wire bytes (cohort x f32 message) like simulate does, so
+    # these rows land in the same table with no renderer special-casing
+    for cfl_algo in ("fedavg", "fedpd"):
+        acc, hist, us = run_cfl(cfl_algo, rounds=rounds, alpha=0.3, m=m)
+        emit(f"comm/cfl/{cfl_algo}", us,
+             f"bytes_per_round={hist['wire_bytes'][0]};acc={acc:.4f}")
 
 
 if __name__ == "__main__":

@@ -141,7 +141,6 @@ def rounds_from_history(hist, target):
 
 def rounds_to_accuracy(algo, target, *, alpha, max_rounds, kind="dfl", **kw):
     """Paper Tables 3-5 metric: rounds until test accuracy >= target."""
-    task = fl_task()
     if kind == "dfl":
         _, hist, _ = run_dfl(algo, rounds=max_rounds, alpha=alpha,
                              eval_every=2, **kw)

@@ -1,6 +1,6 @@
 """Paper Tables 3-5: rounds needed to reach a target accuracy (the
 convergence-speed comparison)."""
-from benchmarks.common import emit, fl_task, run_dfl
+from benchmarks.common import emit, run_dfl
 
 ALGOS = ("dpsgd", "dfedavg", "dfedavgm", "dfedsam", "dfedadmm",
          "dfedadmm_sam")

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DFLConfig, make_gossip, mean_params, simulate
+from repro.core import DFLConfig, mean_params, simulate
 from repro.data.synthetic import SyntheticClassification
 
 

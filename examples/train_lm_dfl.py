@@ -9,15 +9,13 @@ Presets:
     PYTHONPATH=src python examples/train_lm_dfl.py --preset tiny
 """
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import DFLConfig, mean_params, simulate
+from repro.core import DFLConfig, simulate
 from repro.data.synthetic import make_dfl_lm_sampler, make_model_batch
 from repro.models import build_model
 

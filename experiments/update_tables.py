@@ -120,7 +120,9 @@ def participation_table(rows):
             continue
         if "acc" not in f:
             continue
-        scenario = f"{parts[0]}:{parts[2]}"
+        # keep the middle segment: "comm:cfl/fedavg" must stay
+        # distinguishable from the codec row "comm:codec/identity"
+        scenario = f"{parts[0]}:{parts[1]}/{parts[2]}"
         rt_key = next((k for k in f if k.startswith("rounds_to")), None)
         rt = (f"{f[rt_key]} (acc {rt_key[len('rounds_to_'):]})"
               if rt_key else "-")

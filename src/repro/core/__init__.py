@@ -17,13 +17,16 @@ from repro.core.gossip import (DIRECTED_TOPOLOGIES, GossipSpec, TOPOLOGIES,
                                validate_gossip_matrix)
 from repro.core.comm import (CODECS, TRANSPORTS, DenseTransport,
                              IdentityCodec, MessageCodec, PpermuteTransport,
-                             PushSumTransport, QuantizeCodec, TopKCodec,
-                             Transport, init_comm_state, make_codec,
-                             make_transport)
+                             PushSumTransport, QuantizeCodec, RandKCodec,
+                             TopKCodec, Transport, init_comm_state,
+                             make_codec, make_transport)
 from repro.core.participation import (ParticipationSpec, RoundParticipation,
                                       participation_schedule,
                                       round_participation)
 from repro.core.mixing import mix, mix_dense, mix_ppermute, mix_ppermute_local
 from repro.core.sam import global_norm, perturb, sam_grad_fn, sam_value_and_grad
+from repro.core.solvers import (SOLVERS, ADMMSolver, AdaptiveADMMSolver,
+                                LocalSolver, MomentumSGDSolver, SGDSolver,
+                                make_solver, register_solver, solver_names)
 from repro.core.baselines import (CFLConfig, CFLState, init_cfl_state,
                                   make_cfl_round, simulate_cfl)

@@ -6,6 +6,12 @@ Decentralized baselines (D-PSGD, DFedAvg, DFedAvgM, DFedSAM) live in
 
 These are intentionally simple single-device simulators (vmap over the
 sampled cohort); they exist for the faithful-reproduction experiments.
+The inner loops are NOT re-implemented here: ``client_update`` drives
+the same ``LocalSolver`` objects (``core/solvers.py``) the decentralized
+round uses — FedPD's ADMM step is ``ADMMSolver`` with the FedPD server
+message (Eq. 5, new dual), FedAvg/FedSAM are the stateless
+``SGDSolver`` — so an algorithm ported to the solver registry runs on
+both substrates for free.
 """
 from __future__ import annotations
 
@@ -15,14 +21,14 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import admm, sam
+from repro.core import comm as comm_lib, sam, solvers as solvers_lib
 
 PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
 class CFLConfig:
-    algorithm: str = "fedavg"     # fedavg | fedsam | fedpd
+    algorithm: str = "fedavg"     # any solver registered under the "cfl" scope
     m: int = 100                  # total clients
     participation: float = 0.1    # cohort fraction per round
     K: int = 5
@@ -33,6 +39,12 @@ class CFLConfig:
     lam: float = 0.1              # fedpd
     weight_decay: float = 5e-4
 
+    def __post_init__(self):
+        if self.algorithm not in solvers_lib.solver_names("cfl"):
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; registered CFL "
+                f"solvers: {solvers_lib.solver_names('cfl')}")
+
     @property
     def cohort(self) -> int:
         return max(1, int(round(self.m * self.participation)))
@@ -42,15 +54,30 @@ class CFLConfig:
 @dataclasses.dataclass
 class CFLState:
     global_params: PyTree
-    dual: PyTree                  # (m, ...) — fedpd only (zeros otherwise)
+    solver: PyTree                # (m, ...) solver-owned per-client state
+                                  # ({"dual": ...} for fedpd, None otherwise)
     rng: jax.Array
     round: jax.Array
 
+    @property
+    def dual(self) -> PyTree:
+        """DEPRECATED: read ``state.solver["dual"]`` (fedpd only)."""
+        import warnings
+        warnings.warn(
+            "CFLState.dual is deprecated: solver state lives in "
+            "CFLState.solver (state.solver['dual'] for fedpd)",
+            DeprecationWarning, stacklevel=2)
+        if isinstance(self.solver, dict) and "dual" in self.solver:
+            return self.solver["dual"]
+        raise AttributeError("this state's solver carries no dual variable")
+
 
 def init_cfl_state(params: PyTree, cfg: CFLConfig, seed: int = 0) -> CFLState:
-    dual = jax.tree.map(
-        lambda x: jnp.zeros((cfg.m,) + x.shape, x.dtype), params)
-    return CFLState(global_params=params, dual=dual,
+    solver = solvers_lib.make_solver(cfg)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.m,) + x.shape), params)
+    return CFLState(global_params=params,
+                    solver=solver.init_state(cfg, stacked),
                     rng=jax.random.PRNGKey(seed),
                     round=jnp.zeros((), jnp.int32))
 
@@ -62,51 +89,35 @@ def make_cfl_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
     ``cohort_ids``: (cohort,) int32 client indices sampled by the caller.
     ``batches`` leaves: (cohort, K, ...).
     """
-    rho = cfg.rho if cfg.algorithm == "fedsam" else 0.0
-    loss_and_grad = sam.sam_value_and_grad(loss_fn, rho)
-    use_wd = cfg.algorithm in ("fedavg", "fedsam")
+    solver = solvers_lib.make_solver(cfg)
+    loss_and_grad = sam.sam_value_and_grad(loss_fn, solver.sam_rho)
 
-    def client_update(x0, dual_i, batches_k, rng, lr_t):
-        if cfg.algorithm == "fedpd":
-            def body(carry, batch):
-                params, rng_ = carry
-                rng_, sub = jax.random.split(rng_)
-                l, g = loss_and_grad(params, batch, sub)
-                params = admm.local_step(params, g, dual_i, x0,
-                                         lr=lr_t, lam=cfg.lam)
-                return (params, rng_), l
-
-            (xk, _), losses = jax.lax.scan(body, (x0, rng), batches_k)
-            new_dual = admm.dual_update(dual_i, xk, x0, lam=cfg.lam)
-            # FedPD Eq. 5 server message: x_i - lam * g_hat_i^{t+1}
-            msg = jax.tree.map(lambda p, d: p - cfg.lam * d, xk, new_dual)
-            return msg, new_dual, jnp.mean(losses)
-
+    def client_update(x0, sstate_i, batches_k, rng, lr_t):
         def body(carry, batch):
-            params, rng_ = carry
+            params, st, rng_ = carry
             rng_, sub = jax.random.split(rng_)
             l, g = loss_and_grad(params, batch, sub)
-            if use_wd and cfg.weight_decay:
-                g = jax.tree.map(lambda gi, p: gi + cfg.weight_decay * p,
-                                 g, params)
-            params = jax.tree.map(lambda p, gi: p - lr_t * gi, params, g)
-            return (params, rng_), l
+            params, st = solver.step(params, g, st, x0, lr_t)
+            return (params, st, rng_), l
 
-        (xk, _), losses = jax.lax.scan(body, (x0, rng), batches_k)
-        return xk, dual_i, jnp.mean(losses)
+        (xk, st_K, _), losses = jax.lax.scan(
+            body, (x0, sstate_i, rng), batches_k)
+        new_st, msg = solver.finalize(xk, st_K, x0)
+        return msg, new_st, jnp.mean(losses)
 
     def round_fn(state: CFLState, cohort_ids: jax.Array, batches: PyTree):
         lr_t = cfg.lr * (cfg.lr_decay ** state.round.astype(jnp.float32))
         rng, *subs = jax.random.split(state.rng, cfg.cohort + 1)
         subs = jnp.stack(subs)
-        cohort_dual = jax.tree.map(lambda d: d[cohort_ids], state.dual)
+        cohort_state = jax.tree.map(lambda d: d[cohort_ids], state.solver)
 
-        msgs, new_duals, losses = jax.vmap(
+        msgs, new_states, losses = jax.vmap(
             client_update, in_axes=(None, 0, 0, 0, None)
-        )(state.global_params, cohort_dual, batches, subs, lr_t)
+        )(state.global_params, cohort_state, batches, subs, lr_t)
 
         mean_msg = jax.tree.map(lambda z: jnp.mean(z, axis=0), msgs)
-        if cfg.algorithm == "fedpd":
+        if solver.is_admm:
+            # FedPD: the mean client message IS the next global model
             new_global = mean_msg
         else:
             # server step: x0 + global_lr * (mean(x_i) - x0)
@@ -114,10 +125,10 @@ def make_cfl_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                 lambda x0, z: x0 + cfg.global_lr * (z - x0),
                 state.global_params, mean_msg)
 
-        dual = jax.tree.map(lambda d, nd: d.at[cohort_ids].set(nd),
-                            state.dual, new_duals)
-        new_state = CFLState(global_params=new_global, dual=dual, rng=rng,
-                             round=state.round + 1)
+        new_solver = jax.tree.map(lambda d, nd: d.at[cohort_ids].set(nd),
+                                  state.solver, new_states)
+        new_state = CFLState(global_params=new_global, solver=new_solver,
+                             rng=rng, round=state.round + 1)
         return new_state, {"loss": jnp.mean(losses), "lr": lr_t}
 
     return round_fn
@@ -126,18 +137,29 @@ def make_cfl_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
 def simulate_cfl(loss_fn, eval_fn, params: PyTree, cfg: CFLConfig,
                  sample_batches: Callable[[int, Any], PyTree], rounds: int,
                  seed: int = 0, eval_every: int = 10):
-    """sample_batches(t, cohort_ids) -> leaves (cohort, K, ...)."""
+    """sample_batches(t, cohort_ids) -> leaves (cohort, K, ...).
+
+    The history shares the DFL ``simulate`` schema (``round``, ``loss``,
+    ``lr``, ``wire_bytes``, ``eval``) so downstream table renderers
+    (``experiments/update_tables.py``) handle DFL and CFL runs
+    uniformly; ``wire_bytes`` models the uplink as cohort clients each
+    sending one full-precision parameter message per round.
+    """
     import numpy as np
     round_fn = jax.jit(make_cfl_round(loss_fn, cfg))
     state = init_cfl_state(params, cfg, seed=seed)
     rng = np.random.default_rng(seed)
-    history: dict[str, list] = {"round": [], "loss": [], "eval": {}}
+    bytes_per_client = comm_lib.IdentityCodec().bytes_per_client(params)
+    history: dict[str, list] = {"round": [], "loss": [], "lr": [],
+                                "wire_bytes": [], "eval": {}}
     for t in range(rounds):
         ids = rng.choice(cfg.m, size=cfg.cohort, replace=False)
         batches = sample_batches(t, ids)
         state, metrics = round_fn(state, jnp.asarray(ids), batches)
         history["round"].append(t)
         history["loss"].append(float(metrics["loss"]))
+        history["lr"].append(float(metrics["lr"]))
+        history["wire_bytes"].append(bytes_per_client * cfg.cohort)
         if eval_fn is not None and ((t + 1) % eval_every == 0 or t == rounds - 1):
             ev = eval_fn(state.global_params)
             history["eval"].setdefault("round", []).append(t)

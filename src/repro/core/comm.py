@@ -69,7 +69,7 @@ from repro.core.gossip import (GossipSpec, as_column_stochastic,
 PyTree = Any
 
 TRANSPORTS = ("dense", "ppermute", "pushsum")
-CODECS = ("identity", "int8", "topk")
+CODECS = ("identity", "int8", "topk", "randk")
 
 
 # ---------------------------------------------------------------------------
@@ -349,12 +349,15 @@ class QuantizeCodec(MessageCodec):
         return int(total)
 
 
-class TopKCodec(MessageCodec):
-    """Magnitude top-k sparsification with error feedback.
+class _SparseCodec(MessageCodec):
+    """Shared scaffolding for index/value sparsifiers: error-feedback
+    residuals, per-leaf meta capture, and the scatter decode.
 
-    Per client and per leaf the ``k`` largest-|.| entries of the
-    error-compensated message go on the wire as (index, value) pairs;
-    everything else accumulates into the residual.
+    Subclasses implement ``_select(flat, key) -> (idx, val)`` — ``idx``
+    either (m, k) per-client rows or (k,) shared across clients — and
+    ``bytes_per_client``.  Everything else (the residual algebra, the
+    inactive-client gating, the wire layout) is identical between the
+    sparsifiers and lives here exactly once.
     """
 
     stateful = True
@@ -362,7 +365,6 @@ class TopKCodec(MessageCodec):
     def __init__(self, k: int = 64):
         if k < 1:
             raise ValueError(f"codec_k must be >= 1, got {k}")
-        self.name = f"topk[{k}]"
         self.k = k
         self._meta = None
 
@@ -370,21 +372,30 @@ class TopKCodec(MessageCodec):
         return jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), stacked_params)
 
+    def _select(self, flat, key):
+        raise NotImplementedError
+
+    @staticmethod
+    def _scatter(flat_zeros, idx, val):
+        if idx.ndim == 1:                          # shared columns
+            return flat_zeros.at[:, idx].set(val)
+        m = flat_zeros.shape[0]                    # per-client rows
+        return flat_zeros.at[jnp.arange(m)[:, None], idx].set(val)
+
     def encode(self, z, resid=None, rng=None, active=None):
         leaves, treedef = jax.tree.flatten(z)
         self._meta = ([(l.shape, l.dtype) for l in leaves], treedef)
         rleaves = jax.tree.leaves(resid) if resid is not None else \
             [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+        keys = _leaf_rngs(rng, leaves) if rng is not None else \
+            [None] * len(leaves)
         wire_leaves, new_resid = [], []
-        for leaf, r in zip(leaves, rleaves):
+        for leaf, r, key in zip(leaves, rleaves, keys):
             m = leaf.shape[0]
             e = leaf.astype(jnp.float32) + r
             flat = e.reshape(m, -1)
-            k = min(self.k, flat.shape[1])
-            _, idx = jax.lax.top_k(jnp.abs(flat), k)
-            val = jnp.take_along_axis(flat, idx, axis=1)
-            dec = jnp.zeros_like(flat).at[
-                jnp.arange(m)[:, None], idx].set(val)
+            idx, val = self._select(flat, key)
+            dec = self._scatter(jnp.zeros_like(flat), idx, val)
             rr = e - dec.reshape(e.shape)
             if active is not None:
                 rr = _gate_tree(active, rr, r)
@@ -400,16 +411,74 @@ class TopKCodec(MessageCodec):
         for w, (shape, dtype) in zip(leaves, metas):
             m = shape[0]
             n = int(np.prod(shape[1:], dtype=np.int64)) if len(shape) > 1 else 1
-            flat = jnp.zeros((m, n), jnp.float32).at[
-                jnp.arange(m)[:, None], w["idx"]].set(w["val"])
+            flat = self._scatter(jnp.zeros((m, n), jnp.float32),
+                                 w["idx"], w["val"])
             out.append(flat.reshape(shape).astype(dtype))
         return jax.tree.unflatten(treedef, out)
+
+
+class TopKCodec(_SparseCodec):
+    """Magnitude top-k sparsification with error feedback.
+
+    Per client and per leaf the ``k`` largest-|.| entries of the
+    error-compensated message go on the wire as (index, value) pairs;
+    everything else accumulates into the residual.
+    """
+
+    def __init__(self, k: int = 64):
+        super().__init__(k)
+        self.name = f"topk[{k}]"
+
+    def _select(self, flat, key):
+        k = min(self.k, flat.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return idx, jnp.take_along_axis(flat, idx, axis=1)
 
     def bytes_per_client(self, params_single: PyTree) -> int:
         total = 0
         for leaf in jax.tree.leaves(params_single):
             k = min(self.k, leaf.size)
             total += k * (4 + 4)                   # int32 index + f32 value
+        return int(total)
+
+
+class RandKCodec(_SparseCodec):
+    """Random-k sparsification with error feedback.
+
+    Per leaf, ``k`` coordinates are drawn uniformly each round from the
+    round's shared codec PRNG — the SAME indices for every client, so
+    the decoded messages stay mixable and, unlike top-k, no per-client
+    magnitude sort runs on the accelerator (rand-k is the cheap
+    sparsifier on TPU: one gather vs a full ``top_k``).  Only the values
+    go on the wire; receivers regenerate the indices from the shared
+    round seed, so the modeled message is ~half a top-k message at equal
+    ``k``.  The skipped mass accumulates in the same per-client
+    error-feedback residual state the other lossy codecs use
+    (``DFLState.comm["residual"]``).
+    """
+
+    def __init__(self, k: int = 64):
+        super().__init__(k)
+        self.name = f"randk[{k}]"
+
+    def encode(self, z, resid=None, rng=None, active=None):
+        if rng is None:
+            raise ValueError("randk needs the round's codec PRNG key "
+                             "(clients must agree on the sampled indices)")
+        return super().encode(z, resid, rng, active)
+
+    def _select(self, flat, key):
+        n = flat.shape[1]
+        k = min(self.k, n)
+        idx = jax.random.choice(key, n, shape=(k,), replace=False)
+        return idx, flat[:, idx]
+
+    def bytes_per_client(self, params_single: PyTree) -> int:
+        # values only: the indices are regenerated from the shared round
+        # seed (modeled as one 4-byte seed per leaf)
+        total = 0
+        for leaf in jax.tree.leaves(params_single):
+            total += min(self.k, leaf.size) * 4 + 4
         return int(total)
 
 
@@ -422,6 +491,8 @@ def make_codec(cfg) -> MessageCodec:
         return QuantizeCodec(bits=cfg.codec_bits, use_kernel=cfg.use_kernel)
     if name == "topk":
         return TopKCodec(k=cfg.codec_k)
+    if name == "randk":
+        return RandKCodec(k=cfg.codec_k)
     raise ValueError(f"unknown codec {name!r}; expected one of {CODECS}")
 
 

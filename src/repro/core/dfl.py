@@ -13,18 +13,22 @@ State layout: every leaf carries a leading client axis of size ``m``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import admm, comm as comm_lib, sam
-from repro.core.gossip import DIRECTED_TOPOLOGIES, GossipSpec, make_gossip
+from repro.core import comm as comm_lib, sam, solvers as solvers_lib
+from repro.core.gossip import DIRECTED_TOPOLOGIES, GossipSpec
 from repro.core.participation import ParticipationSpec
 
 PyTree = Any
 
+# The paper's six decentralized algorithms.  The source of truth for what
+# is runnable is the solver registry (``solvers.SOLVERS``): anything
+# registered under the "dfl" scope — including algorithms added from user
+# code via ``solvers.register_solver`` — is accepted by ``DFLConfig``.
 ALGORITHMS = ("dfedadmm", "dfedadmm_sam", "dpsgd", "dfedavg", "dfedavgm",
               "dfedsam")
 
@@ -46,9 +50,10 @@ class DFLConfig:
     mixing: str = ""             # DEPRECATED alias for ``transport``
     transport: str = ""          # "dense" | "ppermute" | "pushsum"
                                  # ("" resolves to mixing, then "dense")
-    codec: str = "identity"      # wire codec: "identity" | "int8" | "topk"
+    codec: str = "identity"      # wire codec: "identity" | "int8" |
+                                 # "topk" | "randk"
     codec_bits: int = 8          # int8 codec: bits per value (2..8)
-    codec_k: int = 64            # topk codec: kept entries per leaf
+    codec_k: int = 64            # topk/randk codecs: kept entries per leaf
     use_kernel: bool = False     # fused Pallas inner update + codec kernel
     microbatches: int = 1        # grad-accumulation splits per inner step
                                  # (exact for SGD; SAM perturbs per split)
@@ -58,8 +63,10 @@ class DFLConfig:
                                  # takes the exact paper code path
 
     def __post_init__(self):
-        if self.algorithm not in ALGORITHMS:
-            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.algorithm not in solvers_lib.solver_names("dfl"):
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; registered DFL "
+                f"solvers: {solvers_lib.solver_names('dfl')}")
         eff = self.transport or self.mixing or "dense"
         if eff not in comm_lib.TRANSPORTS:
             raise ValueError(
@@ -88,37 +95,64 @@ class DFLConfig:
                 "transport='pushsum' (plain mixing with a non-doubly-"
                 "stochastic matrix converges to a biased average)")
 
-    @property
-    def is_admm(self) -> bool:
-        return self.algorithm.startswith("dfedadmm")
-
-    @property
-    def sam_rho(self) -> float:
-        return self.rho if self.algorithm in ("dfedadmm_sam", "dfedsam") else 0.0
+    def make_solver(self) -> "solvers_lib.LocalSolver":
+        """The LocalSolver this config resolves to (algorithm facts like
+        ``is_admm`` / ``sam_rho`` live on the solver object now)."""
+        return solvers_lib.make_solver(self)
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DFLState:
     params: PyTree               # (m, ...) per leaf
-    dual: PyTree                 # (m, ...) — zeros for non-ADMM algorithms
-    momentum: PyTree             # (m, ...) — zeros unless dfedavgm
+    solver: PyTree               # solver-owned per-client state allocated by
+                                 # LocalSolver.init_state: {"dual": ...} for
+                                 # the ADMM family, {"momentum": ...} for
+                                 # DFedAvgM, None for the stateless SGD
+                                 # solvers — nothing is allocated for buffers
+                                 # an algorithm does not use
     rng: jax.Array               # (m, 2) per-client PRNG keys
     round: jax.Array             # scalar int32
     comm: PyTree = None          # communication state (comm.init_comm_state):
                                  # push-sum weights / codec residuals; None
                                  # for the stateless seed configuration
 
+    @property
+    def dual(self) -> PyTree:
+        """DEPRECATED: solver state is solver-owned; read
+        ``state.solver["dual"]`` (ADMM-family solvers only)."""
+        warnings.warn(
+            "DFLState.dual is deprecated: solver state lives in "
+            "DFLState.solver (state.solver['dual'] for ADMM solvers)",
+            DeprecationWarning, stacklevel=2)
+        if isinstance(self.solver, dict) and "dual" in self.solver:
+            return self.solver["dual"]
+        raise AttributeError(
+            "this state's solver carries no dual variable")
+
+    @property
+    def momentum(self) -> PyTree:
+        """DEPRECATED: read ``state.solver["momentum"]`` (DFedAvgM only)."""
+        warnings.warn(
+            "DFLState.momentum is deprecated: solver state lives in "
+            "DFLState.solver (state.solver['momentum'] for DFedAvgM)",
+            DeprecationWarning, stacklevel=2)
+        if isinstance(self.solver, dict) and "momentum" in self.solver:
+            return self.solver["momentum"]
+        raise AttributeError(
+            "this state's solver carries no momentum buffer")
+
 
 def init_state(params_single: PyTree, cfg: DFLConfig, seed: int = 0) -> DFLState:
     """Broadcast one parameter pytree to m identical clients (paper: common
-    init x^0), zero duals (g_hat^{-1} = 0)."""
+    init x^0); the solver allocates its own state (zero duals g_hat^{-1}
+    for the ADMM family, nothing for stateless solvers)."""
     m = cfg.m
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape),
                            params_single)
-    zeros = jax.tree.map(jnp.zeros_like, stacked)
+    solver = solvers_lib.make_solver(cfg)
     keys = jax.random.split(jax.random.PRNGKey(seed), m)
-    return DFLState(params=stacked, dual=zeros, momentum=zeros,
+    return DFLState(params=stacked, solver=solver.init_state(cfg, stacked),
                     rng=keys, round=jnp.zeros((), jnp.int32),
                     comm=comm_lib.init_comm_state(cfg, stacked))
 
@@ -187,9 +221,10 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                                         client_axis=client_axis,
                                         inner_specs=param_inner_specs)
     codec = comm_lib.make_codec(cfg)
+    solver = solvers_lib.make_solver(cfg)
     masked = not cfg.participation.is_trivial
 
-    loss_and_grad = sam.sam_value_and_grad(loss_fn, cfg.sam_rho,
+    loss_and_grad = sam.sam_value_and_grad(loss_fn, solver.sam_rho,
                                            use_kernel=cfg.use_kernel)
 
     if cfg.microbatches > 1:
@@ -222,95 +257,59 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
     def _tree_where(pred, a, b):
         return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
-    def client_local(anchor, dual, mom, batches_k, rng, lr_t,
+    def client_local(anchor, sstate, batches_k, rng, lr_t,
                      active_i=None, n_steps=None):
-        """K local steps for ONE client -> (params_K, new_dual, new_mom, z, loss).
+        """K local steps for ONE client -> (params_K, new_sstate, z, loss).
 
-        In the masked (partial-participation) path ``active_i`` is this
-        client's scalar bool and ``n_steps`` its local-iteration budget:
-        iterations past ``n_steps`` are computed but discarded via
-        ``jnp.where`` (keeping one fixed-shape scan), inactive clients
-        freeze all state, and their gossip message degenerates to their
-        own parameters so the identity row of the masked matrix holds
-        them in place.
+        One generic scan over ``solver.step`` for every registered
+        algorithm — the seed's ``if cfg.is_admm / else`` fork lives in
+        the solver objects now.  In the masked (partial-participation)
+        path ``active_i`` is this client's scalar bool and ``n_steps``
+        its local-iteration budget: iterations past ``n_steps`` are
+        computed but discarded via ``jnp.where`` (keeping one
+        fixed-shape scan), inactive clients freeze all state, and their
+        gossip message degenerates to their own parameters so the
+        identity row of the masked matrix holds them in place.
         """
-        if cfg.is_admm:
-            def body(carry, inp):
-                params, rng_ = carry
-                batch, k = inp if masked else (inp, None)
-                rng_, sub = jax.random.split(rng_)
-                l, g = loss_and_grad(params, batch, sub)
-                new_params = admm.local_step(params, g, dual, anchor,
-                                             lr=lr_t, lam=cfg.lam,
-                                             use_kernel=cfg.use_kernel)
-                if masked:
-                    take = k < n_steps
-                    new_params = _tree_where(take, new_params, params)
-                    l = jnp.where(take, l, 0.0)
-                return (new_params, rng_), l
-
-            xs = (batches_k, jnp.arange(cfg.K)) if masked else batches_k
-            (params_K, _), losses = jax.lax.scan(body, (anchor, rng), xs)
-            new_dual = admm.dual_update(dual, params_K, anchor, lam=cfg.lam)
-            z = admm.message(params_K, dual, lam=cfg.lam)
-            if masked:
-                new_dual = _tree_where(active_i, new_dual, dual)
-                z = _tree_where(active_i, z, anchor)
-                # mean over the n_steps completed iterations, written as
-                # the static mean rescaled by K/n_steps so that a fully
-                # participating client (n_steps == K, scale == exactly
-                # 1.0) reproduces the seed path's jnp.mean bit for bit
-                loss = jnp.mean(losses) * (
-                    jnp.float32(cfg.K)
-                    / jnp.maximum(n_steps.astype(jnp.float32), 1.0))
-            else:
-                loss = jnp.mean(losses)
-            return params_K, new_dual, mom, z, loss
-
-        # --- SGD-family baselines -----------------------------------------
-        wd = cfg.weight_decay
+        steps = solver.inner_steps(cfg.K)
 
         def body(carry, inp):
-            params, mom_, rng_ = carry
+            params, st, rng_ = carry
             batch, k = inp if masked else (inp, None)
             rng_, sub = jax.random.split(rng_)
             l, g = loss_and_grad(params, batch, sub)
-            if wd:
-                g = jax.tree.map(lambda gi, p: gi + wd * p, g, params)
-            if cfg.algorithm == "dfedavgm":
-                new_mom = jax.tree.map(
-                    lambda mi, gi: (cfg.momentum * mi + gi).astype(mi.dtype),
-                    mom_, g)
-                upd = new_mom
-            else:
-                new_mom = mom_
-                upd = g
-            new_params = jax.tree.map(
-                lambda p, u: (p.astype(jnp.float32)
-                              - lr_t * u.astype(jnp.float32)).astype(p.dtype),
-                params, upd)
+            new_params, new_st = solver.step(params, g, st, anchor, lr_t)
             if masked:
                 take = k < n_steps
                 new_params = _tree_where(take, new_params, params)
-                new_mom = _tree_where(take, new_mom, mom_)
+                new_st = _tree_where(take, new_st, st)
                 l = jnp.where(take, l, 0.0)
-            return (new_params, new_mom, rng_), l
+            return (new_params, new_st, rng_), l
 
-        steps = 1 if cfg.algorithm == "dpsgd" else cfg.K
-        bk = jax.tree.map(lambda b: b[:steps], batches_k)
+        bk = batches_k if steps == cfg.K else \
+            jax.tree.map(lambda b: b[:steps], batches_k)
         xs = (bk, jnp.arange(steps)) if masked else bk
-        (params_K, mom, _), losses = jax.lax.scan(body, (anchor, mom, rng), xs)
+        (params_K, st_K, _), losses = jax.lax.scan(
+            body, (anchor, sstate, rng), xs)
+        new_sstate, z = solver.finalize(params_K, st_K, anchor)
         if masked:
-            # inactive clients (n_steps == 0) took no step: params_K is
-            # already the anchor and the message z = params_K holds them.
-            # Static mean rescaled by a runtime factor that is exactly 1.0
-            # at full participation (bitwise identity with the seed path).
+            # an inactive client (n_steps == 0) froze every per-step
+            # quantity, but finalize may still move round-level state
+            # (the ADMM dual update): gate it, and pin the message to
+            # the anchor so the identity row of the masked matrix holds
+            # the client in place
+            new_sstate = _tree_where(active_i, new_sstate, sstate)
+            z = _tree_where(active_i, z, anchor)
+            # mean over the completed iterations, written as the static
+            # mean rescaled by a runtime factor that is exactly 1.0 for
+            # a fully participating client — reproducing the seed
+            # path's jnp.mean bit for bit at full participation
             done = jnp.minimum(n_steps, steps).astype(jnp.float32)
             loss = jnp.mean(losses) * (jnp.float32(steps)
                                        / jnp.maximum(done, 1.0))
         else:
             loss = jnp.mean(losses)
-        return params_K, dual, mom, params_K, loss
+        return params_K, new_sstate, z, loss
 
     def round_fn(state: DFLState, batches: PyTree, plan,
                  active: jax.Array | None = None,
@@ -323,14 +322,14 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                     "cfg.participation is non-trivial: round_fn needs the "
                     "per-round (active, steps) arrays from "
                     "participation.round_participation")
-            params_K, new_dual, new_mom, z, losses = jax.vmap(
-                client_local, in_axes=(0, 0, 0, 0, 0, None, 0, 0)
-            )(state.params, state.dual, state.momentum, batches, rngs, lr_t,
+            params_K, new_solver, z, losses = jax.vmap(
+                client_local, in_axes=(0, 0, 0, 0, None, 0, 0)
+            )(state.params, state.solver, batches, rngs, lr_t,
               active, steps)
         else:
-            params_K, new_dual, new_mom, z, losses = jax.vmap(
-                client_local, in_axes=(0, 0, 0, 0, 0, None)
-            )(state.params, state.dual, state.momentum, batches, rngs, lr_t)
+            params_K, new_solver, z, losses = jax.vmap(
+                client_local, in_axes=(0, 0, 0, 0, None)
+            )(state.params, state.solver, batches, rngs, lr_t)
 
         aux = state.comm if state.comm is not None else {}
         if codec.stateful:
@@ -379,9 +378,11 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             out_metrics = {"loss": jnp.mean(losses), "lr": lr_t}
         if metrics == "full":
             out_metrics["consensus_sq"] = consensus_distance(new_params)
-            out_metrics["dual_norm"] = sam.global_norm(new_dual)
-        new_state = DFLState(params=new_params, dual=new_dual,
-                             momentum=new_mom, rng=state.rng,
+            d = solver.dual_tree(new_solver)
+            out_metrics["dual_norm"] = sam.global_norm(d) if d is not None \
+                else jnp.zeros((), jnp.float32)
+        new_state = DFLState(params=new_params, solver=new_solver,
+                             rng=state.rng,
                              round=state.round + 1, comm=new_comm)
         return new_state, out_metrics
 
@@ -438,8 +439,9 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     sched = None if trivial else participation_schedule(
         cfg.participation, cfg.m, rounds, cfg.K)
 
-    history: dict[str, list] = {"round": [], "loss": [], "consensus_sq": [],
-                                "dual_norm": [], "wire_bytes": []}
+    history: dict[str, list] = {"round": [], "loss": [], "lr": [],
+                                "consensus_sq": [], "dual_norm": [],
+                                "wire_bytes": []}
     if not trivial:
         history["participation"] = []
     eval_hist: dict[str, list] = {}
@@ -459,7 +461,7 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
             n_active = int(rp.active.sum())
         history["wire_bytes"].append(bytes_per_client * n_active)
         history["round"].append(t)
-        for k in ("loss", "consensus_sq", "dual_norm"):
+        for k in ("loss", "lr", "consensus_sq", "dual_norm"):
             history[k].append(float(metrics[k]))
         if eval_fn is not None and ((t + 1) % eval_every == 0 or t == rounds - 1):
             ev = eval_fn(mean_params(state.params))

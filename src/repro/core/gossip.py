@@ -162,7 +162,6 @@ def column_stochastic_weights(adj: np.ndarray) -> np.ndarray:
 
     ``adj[i, j]`` means j -> i.  ``P[i, j] = 1 / (1 + outdeg(j))`` for
     each out-edge, with the same share kept on the diagonal."""
-    m = adj.shape[0]
     adj = adj.copy()
     np.fill_diagonal(adj, False)
     outdeg = adj.sum(axis=0)                       # receivers of column j
@@ -249,7 +248,6 @@ def metropolis_weights(adj: np.ndarray) -> np.ndarray:
 
 def uniform_weights(adj: np.ndarray) -> np.ndarray:
     """w_ij = 1/(deg_max+1) for neighbours, rest on the diagonal."""
-    m = adj.shape[0]
     deg_max = int(adj.sum(axis=1).max())
     w = adj.astype(np.float64) / (deg_max + 1)
     np.fill_diagonal(w, 1.0 - w.sum(axis=1))

@@ -1,0 +1,336 @@
+"""Pluggable local-solver layer: the algorithm zoo behind one protocol.
+
+The paper's contributions are *algorithms* — DFedADMM's dual-controlled
+local solve and its SAM variant — yet the seed code hardcoded them as an
+``if cfg.is_admm / else`` fork inside ``dfl.py:client_local`` and then
+re-implemented the same inner loops a second time for the centralized
+simulators in ``baselines.py``.  This module mirrors the comm-layer
+design (``core/comm.py``): a small protocol, a registry, and one generic
+round loop that works for every entry.
+
+``LocalSolver`` — what one client does between gossip steps::
+
+    sstate          = solver.init_state(cfg, stacked_params)   # (m, ...) or None
+    params', st'    = solver.step(params, grad, st, anchor, lr)  # per inner iter
+    st'', z         = solver.finalize(params_K, st', anchor)     # message to wire
+
+* ``init_state`` allocates the solver-owned per-client state with a
+  leading client axis (``DFLState.solver``).  Solvers that need nothing
+  return ``None`` — no more dead parameter-sized zero buffers riding
+  through every round (at 405B scale an unused momentum tree alone is a
+  full parameter-sized allocation).
+* ``step`` is one inner iterate given the already-computed (possibly
+  SAM-perturbed) gradient.  Inside the round it runs under ``vmap``, so
+  it sees ONE client's slice of the state.
+* ``finalize`` turns the K-step result into the next round-start state
+  and the gossip message ``z`` (Alg. 1 line 17 for ADMM; the plain
+  parameters for the SGD family).
+
+SAM is orthogonal to the solver: it only changes the gradient oracle,
+so solvers expose ``sam_rho`` and the round loop builds
+``sam.sam_value_and_grad`` once (``rho = 0`` is a plain gradient).
+
+``SOLVERS`` maps algorithm names to ``(factory, scopes)``; ``scopes``
+says which simulators may run it (``"dfl"`` — the gossip round in
+``dfl.py``; ``"cfl"`` — the server round in ``baselines.py``).  Register
+a new algorithm with :func:`register_solver` and it becomes selectable
+through ``DFLConfig(algorithm=...)`` / the train CLI without touching
+the round loop — e.g. ``dfedadmm_adaptive`` below (FedADMM-style,
+arXiv:2204.03529) is a ~40-line solver, not a ``dfl.py`` surgery.
+
+``use_kernel`` routes each solver's fused Pallas update through the same
+interface: the ADMM inner iterate via ``kernels/admm_update.py`` and the
+SGD-family update via the scale-add kernel in ``kernels/sam_scale.py``
+(``ops.sgd_update``, scale = -lr).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm, sam
+
+PyTree = Any
+
+
+class LocalSolver:
+    """Protocol for one client's local optimization between gossip steps.
+
+    Subclasses override :meth:`step` (required) plus any of the hooks;
+    attributes:
+
+    * ``name``     — registry name (set by :func:`make_solver`).
+    * ``sam_rho``  — SAM radius for the gradient oracle (0 = plain).
+    * ``is_admm``  — carries an ADMM dual variable (drives the
+      ``dual_norm`` metric and the FedPD-style server aggregation).
+    """
+
+    name: str = ""
+    sam_rho: float = 0.0
+    is_admm: bool = False
+
+    def init_state(self, cfg, stacked_params: PyTree) -> PyTree | None:
+        """Solver state with a leading (m,) client axis, or None."""
+        return None
+
+    def inner_steps(self, K: int) -> int:
+        """Local iterations per round (D-PSGD does one)."""
+        return K
+
+    def step(self, params: PyTree, grads: PyTree, state: PyTree | None,
+             anchor: PyTree, lr) -> tuple[PyTree, PyTree | None]:
+        """One inner iterate for ONE client -> (params', state')."""
+        raise NotImplementedError
+
+    def finalize(self, params_K: PyTree, state: PyTree | None,
+                 anchor: PyTree) -> tuple[PyTree | None, PyTree]:
+        """End-of-round hook for ONE client -> (state', message_z)."""
+        return state, params_K
+
+    def dual_tree(self, state: PyTree | None) -> PyTree | None:
+        """The ADMM dual variable inside ``state`` (telemetry), or None."""
+        return None
+
+    def state_specs(self, param_specs: PyTree, client_axis: str):
+        """PartitionSpec pytree mirroring :meth:`init_state`'s structure
+        (param-shaped buffers share the stacked param specs)."""
+        return None
+
+
+class SGDSolver(LocalSolver):
+    """Plain (decentralized) SGD with weight decay: DFedAvg / DFedSAM /
+    FedAvg / FedSAM, and D-PSGD via ``one_step``.  Stateless — no
+    parameter-sized buffers are ever allocated."""
+
+    def __init__(self, weight_decay: float = 0.0, rho: float = 0.0,
+                 one_step: bool = False, use_kernel: bool = False):
+        self.weight_decay = weight_decay
+        self.sam_rho = rho
+        self.one_step = one_step
+        self.use_kernel = use_kernel
+
+    def inner_steps(self, K: int) -> int:
+        return 1 if self.one_step else K
+
+    def _decayed(self, grads, params):
+        wd = self.weight_decay
+        if wd:
+            return jax.tree.map(lambda gi, p: gi + wd * p, grads, params)
+        return grads
+
+    def _apply(self, params, upd, lr):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            return jax.tree.map(lambda p, u: kops.sgd_update(p, u, lr=lr),
+                                params, upd)
+        return jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32)
+                          - lr * u.astype(jnp.float32)).astype(p.dtype),
+            params, upd)
+
+    def step(self, params, grads, state, anchor, lr):
+        return self._apply(params, self._decayed(grads, params), lr), state
+
+
+class MomentumSGDSolver(SGDSolver):
+    """DFedAvgM: heavy-ball momentum on top of the SGD step.  The only
+    SGD-family member that owns a parameter-sized buffer."""
+
+    def __init__(self, momentum: float = 0.9, weight_decay: float = 0.0,
+                 use_kernel: bool = False):
+        super().__init__(weight_decay=weight_decay, use_kernel=use_kernel)
+        self.momentum = momentum
+
+    def init_state(self, cfg, stacked_params):
+        return {"momentum": jax.tree.map(jnp.zeros_like, stacked_params)}
+
+    def step(self, params, grads, state, anchor, lr):
+        g = self._decayed(grads, params)
+        new_mom = jax.tree.map(
+            lambda mi, gi: (self.momentum * mi + gi).astype(mi.dtype),
+            state["momentum"], g)
+        return self._apply(params, new_mom, lr), {"momentum": new_mom}
+
+    def state_specs(self, param_specs, client_axis):
+        return {"momentum": param_specs}
+
+
+class ADMMSolver(LocalSolver):
+    """DFedADMM(-SAM) / FedPD: the dual-controlled local solve.
+
+    State is the dual variable g_hat (Alg. 1).  ``message_dual`` selects
+    which dual enters the wire message: DFedADMM sends
+    ``x_K - lam * g_hat^{t-1}`` (the OLD dual, Alg. 1 line 17) while
+    FedPD's server message uses the NEW dual (Eq. 5).
+    """
+
+    is_admm = True
+
+    def __init__(self, lam: float, rho: float = 0.0,
+                 use_kernel: bool = False, message_dual: str = "old"):
+        if message_dual not in ("old", "new"):
+            raise ValueError(f"message_dual must be 'old' or 'new', "
+                             f"got {message_dual!r}")
+        self.lam = lam
+        self.sam_rho = rho
+        self.use_kernel = use_kernel
+        self.message_dual = message_dual
+
+    def init_state(self, cfg, stacked_params):
+        return {"dual": jax.tree.map(jnp.zeros_like, stacked_params)}
+
+    def _lam(self, state):
+        return self.lam
+
+    def step(self, params, grads, state, anchor, lr):
+        new_params = admm.local_step(params, grads, state["dual"], anchor,
+                                     lr=lr, lam=self._lam(state),
+                                     use_kernel=self.use_kernel)
+        return new_params, state
+
+    def finalize(self, params_K, state, anchor):
+        lam = self._lam(state)
+        new_dual = admm.dual_update(state["dual"], params_K, anchor, lam=lam)
+        src = new_dual if self.message_dual == "new" else state["dual"]
+        z = admm.message(params_K, src, lam=lam)
+        return dict(state, dual=new_dual), z
+
+    def dual_tree(self, state):
+        return state["dual"]
+
+    def state_specs(self, param_specs, client_axis):
+        return {"dual": param_specs}
+
+
+class AdaptiveADMMSolver(ADMMSolver):
+    """FedADMM-style per-client adaptive penalty (arXiv:2204.03529).
+
+    Each client carries a scalar ``lam_scale`` multiplying the global
+    penalty ``lam`` and rebalances it once per round from its residuals:
+    with primal residual r = ||x_K - anchor|| (local drift this round)
+    and dual magnitude d = lam_i * ||g_hat|| (the restoring force of the
+    dual constraint), a client whose drift dominates (r > mu * d)
+    tightens the penalty (lam_i /= tau — recall the penalty term is
+    (x - anchor)^2 / 2lam, so smaller lam pulls harder) and one whose
+    dual force dominates relaxes it (lam_i *= tau).  ``lam_scale`` is
+    clipped to [1/bound, bound] so the solve stays in the regime the
+    paper's lemmas assume (lr/lam < 1).
+    """
+
+    MU = 10.0       # rebalance only on an order-of-magnitude imbalance
+    TAU = 2.0       # multiplicative update per rebalance
+    BOUND = 8.0     # lam_scale stays in [1/BOUND, BOUND]
+
+    def init_state(self, cfg, stacked_params):
+        m = jax.tree.leaves(stacked_params)[0].shape[0]
+        return {"dual": jax.tree.map(jnp.zeros_like, stacked_params),
+                "lam_scale": jnp.ones((m,), jnp.float32)}
+
+    def _lam(self, state):
+        return self.lam * state["lam_scale"]
+
+    def finalize(self, params_K, state, anchor):
+        new_state, z = super().finalize(params_K, state, anchor)
+        lam = self._lam(state)
+        drift = jax.tree.map(lambda xk, a: xk - a, params_K, anchor)
+        r = sam.global_norm(drift)
+        d = lam * sam.global_norm(new_state["dual"])
+        scale = state["lam_scale"]
+        scale = jnp.where(r > self.MU * d, scale / self.TAU,
+                          jnp.where(d > self.MU * r, scale * self.TAU,
+                                    scale))
+        scale = jnp.clip(scale, 1.0 / self.BOUND, self.BOUND)
+        return dict(new_state, lam_scale=scale), z
+
+    def state_specs(self, param_specs, client_axis):
+        from jax.sharding import PartitionSpec as P
+        return {"dual": param_specs, "lam_scale": P(client_axis)}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverEntry:
+    factory: Callable[[Any], LocalSolver]
+    scopes: tuple[str, ...]
+
+
+SOLVERS: dict[str, SolverEntry] = {}
+
+
+def register_solver(name: str, factory: Callable[[Any], LocalSolver],
+                    scopes: tuple[str, ...] = ("dfl",),
+                    overwrite: bool = False) -> None:
+    """Register ``factory(cfg) -> LocalSolver`` under ``name``.
+
+    ``scopes`` lists the simulators allowed to run it: ``"dfl"`` (the
+    decentralized gossip round) and/or ``"cfl"`` (the centralized server
+    round).  Registration is all it takes — the config validators, the
+    round builders, and the train CLI all resolve through this table.
+    """
+    if name in SOLVERS and not overwrite:
+        raise ValueError(f"solver {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    SOLVERS[name] = SolverEntry(factory=factory, scopes=tuple(scopes))
+
+
+def solver_names(scope: str | None = None) -> tuple[str, ...]:
+    """Registered algorithm names, optionally filtered by scope."""
+    return tuple(n for n, e in SOLVERS.items()
+                 if scope is None or scope in e.scopes)
+
+
+def make_solver(cfg) -> LocalSolver:
+    """Build the solver named by ``cfg.algorithm``."""
+    name = cfg.algorithm
+    if name not in SOLVERS:
+        raise ValueError(f"unknown algorithm {name!r}; registered solvers: "
+                         f"{solver_names()}")
+    solver = SOLVERS[name].factory(cfg)
+    solver.name = name
+    return solver
+
+
+def _uk(cfg) -> bool:
+    return getattr(cfg, "use_kernel", False)
+
+
+# The paper's six DFL algorithms ...
+register_solver("dfedadmm",
+                lambda cfg: ADMMSolver(lam=cfg.lam, use_kernel=_uk(cfg)))
+register_solver("dfedadmm_sam",
+                lambda cfg: ADMMSolver(lam=cfg.lam, rho=cfg.rho,
+                                       use_kernel=_uk(cfg)))
+register_solver("dpsgd",
+                lambda cfg: SGDSolver(weight_decay=cfg.weight_decay,
+                                      one_step=True, use_kernel=_uk(cfg)))
+register_solver("dfedavg",
+                lambda cfg: SGDSolver(weight_decay=cfg.weight_decay,
+                                      use_kernel=_uk(cfg)))
+register_solver("dfedavgm",
+                lambda cfg: MomentumSGDSolver(momentum=cfg.momentum,
+                                              weight_decay=cfg.weight_decay,
+                                              use_kernel=_uk(cfg)))
+register_solver("dfedsam",
+                lambda cfg: SGDSolver(weight_decay=cfg.weight_decay,
+                                      rho=cfg.rho, use_kernel=_uk(cfg)))
+# ... the adaptive-penalty demo ...
+register_solver("dfedadmm_adaptive",
+                lambda cfg: AdaptiveADMMSolver(lam=cfg.lam,
+                                               use_kernel=_uk(cfg)))
+# ... and the centralized baselines the paper compares against.
+register_solver("fedavg",
+                lambda cfg: SGDSolver(weight_decay=cfg.weight_decay),
+                scopes=("cfl",))
+register_solver("fedsam",
+                lambda cfg: SGDSolver(weight_decay=cfg.weight_decay,
+                                      rho=cfg.rho),
+                scopes=("cfl",))
+register_solver("fedpd",
+                lambda cfg: ADMMSolver(lam=cfg.lam, message_dual="new"),
+                scopes=("cfl",))

@@ -109,6 +109,13 @@ def sam_scale(x, g, scale, *, interpret: bool | None = None):
     return _from_planes(yp, n, x.shape, x.dtype)
 
 
+def sgd_update(x, g, *, lr, interpret: bool | None = None):
+    """Fused y = x - lr*g for one leaf: the SGD-family solvers' inner
+    update routed through the scale-add kernel (scale = -lr, traced)."""
+    return sam_scale(x, g, -jnp.asarray(lr, jnp.float32),
+                     interpret=interpret)
+
+
 def gossip_mix_leaf(w, z, *, interpret: bool | None = None):
     """z: (m, ...) one stacked leaf; returns W @ z over the client axis."""
     interpret = _interpret_default() if interpret is None else interpret

@@ -28,7 +28,7 @@ from repro.configs import get_bundle, input_specs, shape_applicable
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.configs.shapes import SHAPES
 from repro.core import DFLConfig, make_gossip, make_train_round
-from repro.core.dfl import DFLState
+from repro.core import dfl as dfl_lib
 from repro.launch import mesh as mesh_lib
 from repro.models import model as model_lib
 from repro.sharding import partition
@@ -97,11 +97,6 @@ def resolve(arch_id: str, variant: DryrunVariant,
 # Step builders (lowered, never executed at production size)
 # ---------------------------------------------------------------------------
 
-def _stack_client(tree: PyTree, m: int) -> PyTree:
-    return jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct((m,) + tuple(x.shape), x.dtype), tree)
-
-
 def build_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
                      shape_name: str, metrics: str = "full"):
     """DFL train round (the paper's technique) ready to lower."""
@@ -121,16 +116,16 @@ def build_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
         client_axis=par.client_axis, param_inner_specs=pspecs,
         metrics=metrics)
 
-    state_sds = DFLState(
-        params=_stack_client(param_sh, m),
-        dual=_stack_client(param_sh, m),
-        momentum=_stack_client(param_sh, m),
-        rng=jax.ShapeDtypeStruct((m, 2), jnp.uint32),
-        round=jax.ShapeDtypeStruct((), jnp.int32))
+    # the solver allocates its own state slot: abstractly evaluate
+    # init_state so the stand-in tree matches whatever the algorithm's
+    # LocalSolver carries (dual for ADMM, nothing for SGD, ...)
+    state_sds = jax.eval_shape(
+        lambda p: dfl_lib.init_state(p, dfl_cfg, seed=0), param_sh)
     batch_sds = input_specs(cfg, par, shape_name)
     w_sds = jax.ShapeDtypeStruct((m, m), jnp.float32)
 
-    state_specs = partition.dfl_state_specs(param_sh, cfg, par)
+    state_specs = partition.dfl_state_specs(param_sh, cfg, par,
+                                            algorithm=dfl_cfg.algorithm)
     batch_specs = partition.train_batch_specs(batch_sds, par)
     in_shardings = (partition.to_shardings(state_specs, mesh),
                     partition.to_shardings(batch_specs, mesh),
@@ -161,7 +156,6 @@ def build_prefill_step(cfg: ModelConfig, par: ParallelConfig, mesh,
 def build_decode_step(cfg: ModelConfig, par: ParallelConfig, mesh,
                       shape_name: str, multi_pod: bool,
                       flash_decode: bool = False, kv_shard: str = ""):
-    shape = SHAPES[shape_name]
     long_ctx = shape_name == "long_500k"
     flash_axis = "data" if (flash_decode and long_ctx) else None
 

@@ -28,15 +28,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None) -> int:
-    from repro.checkpoint import latest_step, restore_pytree, save_pytree
+    from repro.checkpoint import save_pytree
     from repro.configs import ARCH_IDS, get_model_config, get_smoke_config
-    from repro.core import (DFLConfig, ParticipationSpec, mean_params,
-                            simulate)
-    from repro.data.synthetic import make_dfl_lm_sampler
+    from repro.core import (CODECS, TRANSPORTS, DFLConfig,
+                            ParticipationSpec, mean_params, simulate,
+                            solver_names)
     from repro.models import build_model
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -44,8 +43,10 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--algorithm", default="dfedadmm",
-                    choices=("dfedadmm", "dfedadmm_sam", "dpsgd", "dfedavg",
-                             "dfedavgm", "dfedsam"))
+                    choices=sorted(solver_names("dfl")),
+                    help="local solver from the repro.core.solvers registry "
+                         "(dfedadmm_adaptive = per-client adaptive-lambda "
+                         "penalty, FedADMM-style)")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--m", type=int, default=8)
     ap.add_argument("--k", type=int, default=5)
@@ -55,17 +56,16 @@ def main(argv=None) -> int:
     ap.add_argument("--lam", type=float, default=0.1)
     ap.add_argument("--rho", type=float, default=0.1)
     ap.add_argument("--topology", default="random")
-    ap.add_argument("--transport", default="dense",
-                    choices=("dense", "ppermute", "pushsum"),
+    ap.add_argument("--transport", default="dense", choices=TRANSPORTS,
                     help="communication transport (pushsum for directed "
                          "topologies: dring, drandom)")
-    ap.add_argument("--codec", default="identity",
-                    choices=("identity", "int8", "topk"),
-                    help="wire codec for gossip messages")
+    ap.add_argument("--codec", default="identity", choices=CODECS,
+                    help="wire codec for gossip messages (randk: shared-"
+                         "seed random-k sparsification, cheaper than topk)")
     ap.add_argument("--codec-bits", type=int, default=8,
                     help="int8 codec: bits per value (2..8)")
     ap.add_argument("--codec-k", type=int, default=64,
-                    help="topk codec: kept entries per leaf")
+                    help="topk/randk codecs: kept entries per leaf")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="grad-accumulation splits per inner step")
     ap.add_argument("--participation", default="full",

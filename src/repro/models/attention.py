@@ -3,9 +3,6 @@ KV cache decode path (incl. a shard_map flash-decode for long contexts).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

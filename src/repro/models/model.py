@@ -16,7 +16,6 @@ Design notes
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, NamedTuple
 
@@ -62,11 +61,14 @@ def init_params(cfg: ModelConfig, rng: jax.Array) -> PyTree:
     layer_keys = jax.random.split(k_layers, cfg.num_layers)
 
     if cfg.arch_type in ("dense", "vlm", "audio"):
-        layer_init = lambda k: _init_attn_block(k, cfg, dtype, with_moe=False)
+        def layer_init(k):
+            return _init_attn_block(k, cfg, dtype, with_moe=False)
     elif cfg.arch_type == "moe":
-        layer_init = lambda k: _init_attn_block(k, cfg, dtype, with_moe=True)
+        def layer_init(k):
+            return _init_attn_block(k, cfg, dtype, with_moe=True)
     else:  # ssm / hybrid
-        layer_init = lambda k: _init_ssm_block(k, cfg, dtype)
+        def layer_init(k):
+            return _init_ssm_block(k, cfg, dtype)
 
     params: dict = {
         "layers": jax.vmap(layer_init)(layer_keys),
@@ -297,7 +299,6 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_seq: int):
     else:  # hybrid
         every = cfg.hybrid_attn_every
         shared = params.get("shared_attn")
-        napps = cfg.num_layers // max(every, 1)
 
         def body(carry, lp):
             xc, idx, app, ck, cv = carry
@@ -356,7 +357,6 @@ def decode_step(params, cfg: ModelConfig, cache: PyTree, token: jax.Array,
     else:
         x = params["embed"][token][:, None] if token.ndim == 1 else \
             params["embed"][token]
-    B = x.shape[0]
     windows = layer_windows(cfg) if cfg.uses_attention else None
 
     def attn_decode(lp, xc, ck, cv, win):

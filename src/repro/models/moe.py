@@ -38,7 +38,6 @@ def router_topk(logits: jax.Array, k: int):
 
 def load_balance_loss(probs: jax.Array, top_i: jax.Array, num_experts: int):
     """Switch-Transformer aux loss: E * sum_e f_e * p_e."""
-    t = probs.shape[0]
     assign = jax.nn.one_hot(top_i[:, 0], num_experts, dtype=jnp.float32)
     f = jnp.mean(assign, axis=0)            # fraction routed (top-1 proxy)
     p = jnp.mean(probs, axis=0)             # mean router prob

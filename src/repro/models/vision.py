@@ -12,12 +12,10 @@ data is the synthetic stand-in (see DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 PyTree = Any
 

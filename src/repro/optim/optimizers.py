@@ -5,8 +5,7 @@ inner loop implements its own update rules (Eq. 6) in ``core/admm.py``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -107,12 +107,19 @@ def param_specs(shapes: PyTree, cfg: ModelConfig, par: ParallelConfig,
 
 
 def dfl_state_specs(param_tree: PyTree, cfg: ModelConfig,
-                    par: ParallelConfig) -> Any:
-    """Specs for core.dfl.DFLState with stacked (m, ...) leaves."""
-    from repro.core.dfl import DFLState
+                    par: ParallelConfig, algorithm: str = "dfedadmm") -> Any:
+    """Specs for core.dfl.DFLState with stacked (m, ...) leaves.
+
+    The solver-owned state slot (``DFLState.solver``) takes its structure
+    from the algorithm's ``LocalSolver.state_specs`` — param-shaped
+    buffers (duals, momentum) share the stacked param specs, and solvers
+    without state contribute no specs at all."""
+    from repro.core import solvers as solvers_lib
+    from repro.core.dfl import DFLConfig, DFLState
     ps = param_specs(param_tree, cfg, par, stacked_client=True)
-    return DFLState(params=ps, dual=ps,
-                    momentum=ps,
+    solver = solvers_lib.make_solver(DFLConfig(algorithm=algorithm))
+    return DFLState(params=ps,
+                    solver=solver.state_specs(ps, par.client_axis),
                     rng=P(par.client_axis, None),
                     round=P())
 

@@ -4,8 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import CFLConfig, init_cfl_state, make_cfl_round, simulate_cfl
-from repro.data.synthetic import SyntheticClassification
-from tests.test_fl_system import _loss, _mlp_init, _mlp_logits, _acc, _task
+from tests.test_fl_system import _loss, _mlp_init, _acc, _task
 
 
 def _run_cfl(algo, rounds=20, alpha=0.3, seed=0):
@@ -43,6 +42,7 @@ def test_fedpd_dual_state_updates():
              "y": jnp.asarray(task.y_train[:4 * 3 * 8].reshape(4, 3, 8))}
     new_state, metrics = round_fn(state, ids, batch)
     dn = float(sum(jnp.sum(jnp.abs(x)) for x in
-                   (new_state.dual["w1"], new_state.dual["w2"])))
+                   (new_state.solver["dual"]["w1"],
+                    new_state.solver["dual"]["w2"])))
     assert dn > 0.0
     assert np.isfinite(float(metrics["loss"]))

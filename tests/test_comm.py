@@ -2,7 +2,6 @@
 correction, codec round-trips + error feedback, quantize kernel vs
 oracle, and bit-identity of the refactored paths against the seed
 behaviour."""
-import functools
 import os
 import subprocess
 import sys
@@ -156,6 +155,7 @@ def test_topk_roundtrip_keeps_largest_entries():
 @pytest.mark.parametrize("codec_fn", [
     lambda: comm.QuantizeCodec(bits=4),
     lambda: comm.TopKCodec(k=3),
+    lambda: comm.RandKCodec(k=3),
 ])
 def test_error_feedback_telescopes(codec_fn):
     """sum_t decode(wire_t) == sum_t z_t + (r_0 - r_T): the compressed
@@ -178,6 +178,44 @@ def test_error_feedback_telescopes(codec_fn):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_randk_shared_indices_roundtrip():
+    """All clients keep the SAME randomly drawn coordinates (shared round
+    seed — that is what keeps the sparsified messages mixable and the
+    wire free of per-client index lists), and kept entries round-trip
+    exactly."""
+    z = _tree(seed=9)
+    codec = comm.RandKCodec(k=4)
+    wire, _ = codec.encode(z, codec.init_state(z), jax.random.PRNGKey(3))
+    zh = codec.decode(wire)
+    for k in z:
+        idx = np.asarray(wire[k]["idx"])
+        assert idx.ndim == 1 and len(set(idx.tolist())) == len(idx)
+        m = z[k].shape[0]
+        flat = np.asarray(z[k]).reshape(m, -1)
+        dec = np.asarray(zh[k]).reshape(m, -1)
+        kk = min(4, flat.shape[1])
+        assert len(idx) == kk
+        np.testing.assert_allclose(dec[:, idx], flat[:, idx], rtol=1e-6)
+        # everything off the shared support is zero for every client
+        mask = np.ones(flat.shape[1], bool)
+        mask[idx] = False
+        assert (dec[:, mask] == 0).all()
+
+
+def test_randk_indices_change_with_round_key():
+    z = _tree(seed=10, shapes=((64,),))
+    codec = comm.RandKCodec(k=4)
+    w1, _ = codec.encode(z, None, jax.random.PRNGKey(0))
+    w2, _ = codec.encode(z, None, jax.random.PRNGKey(1))
+    assert not np.array_equal(np.asarray(w1["l0"]["idx"]),
+                              np.asarray(w2["l0"]["idx"]))
+
+
+def test_randk_requires_rng():
+    with pytest.raises(ValueError, match="codec PRNG"):
+        comm.RandKCodec(k=2).encode(_tree(), None, None)
+
+
 def test_codec_wire_bytes_accounting():
     params = {"a": jnp.zeros((100,), jnp.float32),
               "b": jnp.zeros((10, 10), jnp.float32)}
@@ -185,6 +223,10 @@ def test_codec_wire_bytes_accounting():
     assert comm.QuantizeCodec(bits=8).bytes_per_client(params) == 2 * (100 + 4)
     assert comm.QuantizeCodec(bits=4).bytes_per_client(params) == 2 * (50 + 4)
     assert comm.TopKCodec(k=16).bytes_per_client(params) == 2 * 16 * 8
+    # rand-k ships values + one shared seed: ~half of top-k at equal k
+    assert comm.RandKCodec(k=16).bytes_per_client(params) == 2 * (16 * 4 + 4)
+    assert (comm.RandKCodec(k=16).bytes_per_client(params)
+            < comm.TopKCodec(k=16).bytes_per_client(params))
     # >= 3x reduction for int8 on f32 leaves (the acceptance criterion)
     assert (comm.IdentityCodec().bytes_per_client(params)
             >= 3 * comm.QuantizeCodec(bits=8).bytes_per_client(params))

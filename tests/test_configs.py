@@ -1,5 +1,4 @@
 """Assigned-architecture configs: exact spec values + analytic sizes."""
-import numpy as np
 import pytest
 
 from repro.configs import (ARCH_IDS, get_bundle, get_model_config,

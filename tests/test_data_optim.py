@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data.federated import (dirichlet_partition, iid_partition,
+from repro.data.federated import (dirichlet_partition,
                                   partition_stats)
 from repro.data.synthetic import (SyntheticClassification, SyntheticLM,
                                   make_dfl_lm_sampler, make_model_batch)

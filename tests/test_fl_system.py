@@ -5,9 +5,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
-from repro.core import DFLConfig, make_gossip, mean_params, simulate
+from repro.core import DFLConfig, mean_params, simulate
 from repro.data.synthetic import SyntheticClassification
 
 

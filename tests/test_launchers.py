@@ -38,6 +38,18 @@ def test_train_cli_microbatch_sam():
     assert "final loss=" in out
 
 
+def test_train_cli_adaptive_solver_and_randk():
+    """--algorithm resolves via the solver registry (the adaptive-lambda
+    demo ships as a registered solver, not a dfl.py branch) and the
+    rand-k codec is selectable on the wire."""
+    out = _run("repro.launch.train", "--arch", "llama3-8b", "--smoke",
+               "--algorithm", "dfedadmm_adaptive", "--rounds", "2",
+               "--m", "2", "--k", "1", "--batch", "2", "--seq", "16",
+               "--codec", "randk", "--codec-k", "32")
+    assert "final loss=" in out
+    assert "randk" in out
+
+
 def test_serve_cli_smoke():
     out = _run("repro.launch.serve", "--arch", "falcon-mamba-7b", "--smoke",
                "--batch", "2", "--prompt-len", "16", "--gen", "4")

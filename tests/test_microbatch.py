@@ -46,6 +46,7 @@ def test_microbatch_dual_matches():
     rf2, s2, b2, _ = _setup(2)
     out1, _ = rf1(s1, b1, w)
     out2, _ = rf2(s2, b2, w)
-    for a, c in zip(jax.tree.leaves(out1.dual), jax.tree.leaves(out2.dual)):
+    for a, c in zip(jax.tree.leaves(out1.solver["dual"]),
+                    jax.tree.leaves(out2.solver["dual"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(c),
                                    rtol=1e-5, atol=1e-6)

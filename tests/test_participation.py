@@ -367,8 +367,9 @@ def test_inactive_clients_hold_state_one_round():
     for i in np.flatnonzero(~active):
         np.testing.assert_array_equal(np.asarray(new_state.params["w"][i]),
                                       np.asarray(state.params["w"][i]))
-        np.testing.assert_array_equal(np.asarray(new_state.dual["w"][i]),
-                                      np.asarray(state.dual["w"][i]))
+        np.testing.assert_array_equal(
+            np.asarray(new_state.solver["dual"]["w"][i]),
+            np.asarray(state.solver["dual"]["w"][i]))
     for i in np.flatnonzero(active):   # active clients did move
         assert not np.array_equal(np.asarray(new_state.params["w"][i]),
                                   np.asarray(state.params["w"][i]))

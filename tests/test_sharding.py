@@ -1,5 +1,4 @@
 """Partition-rule unit tests (pure spec logic, no devices needed)."""
-import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_bundle, get_model_config

@@ -1,0 +1,395 @@
+"""Local-solver layer: bit-identity of the generic solver round against
+the seed implementation, the SOLVERS registry, solver-owned state
+allocation, and the adaptive-lambda demo solver."""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm, mixing, sam, solvers
+from repro.core.dfl import (ALGORITHMS, DFLConfig, consensus_distance,
+                            init_state, make_train_round, simulate)
+from repro.core.gossip import make_gossip, mask_and_renormalize
+from repro.core.participation import ParticipationSpec
+
+M, K = 4, 3
+
+
+def _setup(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w1": jnp.asarray(rng.normal(size=(5, 4)) / 3, jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    batches = {"x": jnp.asarray(rng.normal(size=(M, K, 8, 5)), jnp.float32),
+               "y": jnp.asarray(rng.normal(size=(M, K, 8, 4)), jnp.float32)}
+
+    def loss(p, batch, r):
+        return jnp.mean((batch["x"] @ p["w1"] + p["b"] - batch["y"]) ** 2)
+
+    return params, batches, loss
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: the generic solver scan vs the seed implementation
+# ---------------------------------------------------------------------------
+#
+# ``_seed_round`` is a faithful copy of the pre-refactor
+# ``dfl.py:client_local`` / ``round_fn`` pair — the hardcoded
+# ``if is_admm / else`` fork over duals and momentum buffers, dense
+# transport, identity codec.  Every ALGORITHMS entry must reproduce it
+# bit for bit through the solver layer, at full participation AND on the
+# masked path.
+
+def _seed_round(cfg, loss_fn):
+    masked = not cfg.participation.is_trivial
+    rho = cfg.rho if cfg.algorithm in ("dfedadmm_sam", "dfedsam") else 0.0
+    is_admm = cfg.algorithm.startswith("dfedadmm")
+    loss_and_grad = sam.sam_value_and_grad(loss_fn, rho)
+
+    def _tree_where(pred, a, b):
+        return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+    def client_local(anchor, dual, mom, batches_k, rng, lr_t,
+                     active_i=None, n_steps=None):
+        if is_admm:
+            def body(carry, inp):
+                params, rng_ = carry
+                batch, k = inp if masked else (inp, None)
+                rng_, sub = jax.random.split(rng_)
+                l, g = loss_and_grad(params, batch, sub)
+                new_params = admm.local_step(params, g, dual, anchor,
+                                             lr=lr_t, lam=cfg.lam)
+                if masked:
+                    take = k < n_steps
+                    new_params = _tree_where(take, new_params, params)
+                    l = jnp.where(take, l, 0.0)
+                return (new_params, rng_), l
+
+            xs = (batches_k, jnp.arange(cfg.K)) if masked else batches_k
+            (params_K, _), losses = jax.lax.scan(body, (anchor, rng), xs)
+            new_dual = admm.dual_update(dual, params_K, anchor, lam=cfg.lam)
+            z = admm.message(params_K, dual, lam=cfg.lam)
+            if masked:
+                new_dual = _tree_where(active_i, new_dual, dual)
+                z = _tree_where(active_i, z, anchor)
+                loss = jnp.mean(losses) * (
+                    jnp.float32(cfg.K)
+                    / jnp.maximum(n_steps.astype(jnp.float32), 1.0))
+            else:
+                loss = jnp.mean(losses)
+            return params_K, new_dual, mom, z, loss
+
+        wd = cfg.weight_decay
+
+        def body(carry, inp):
+            params, mom_, rng_ = carry
+            batch, k = inp if masked else (inp, None)
+            rng_, sub = jax.random.split(rng_)
+            l, g = loss_and_grad(params, batch, sub)
+            if wd:
+                g = jax.tree.map(lambda gi, p: gi + wd * p, g, params)
+            if cfg.algorithm == "dfedavgm":
+                new_mom = jax.tree.map(
+                    lambda mi, gi: (cfg.momentum * mi + gi).astype(mi.dtype),
+                    mom_, g)
+                upd = new_mom
+            else:
+                new_mom = mom_
+                upd = g
+            new_params = jax.tree.map(
+                lambda p, u: (p.astype(jnp.float32)
+                              - lr_t * u.astype(jnp.float32)).astype(p.dtype),
+                params, upd)
+            if masked:
+                take = k < n_steps
+                new_params = _tree_where(take, new_params, params)
+                new_mom = _tree_where(take, new_mom, mom_)
+                l = jnp.where(take, l, 0.0)
+            return (new_params, new_mom, rng_), l
+
+        steps = 1 if cfg.algorithm == "dpsgd" else cfg.K
+        bk = jax.tree.map(lambda b: b[:steps], batches_k)
+        xs = (bk, jnp.arange(steps)) if masked else bk
+        (params_K, mom, _), losses = jax.lax.scan(body, (anchor, mom, rng), xs)
+        if masked:
+            done = jnp.minimum(n_steps, steps).astype(jnp.float32)
+            loss = jnp.mean(losses) * (jnp.float32(steps)
+                                       / jnp.maximum(done, 1.0))
+        else:
+            loss = jnp.mean(losses)
+        return params_K, dual, mom, params_K, loss
+
+    def round_fn(params, dual, momentum, state_rng, state_round, batches,
+                 plan, active=None, steps=None):
+        lr_t = cfg.lr * (cfg.lr_decay ** state_round.astype(jnp.float32))
+        rngs = jax.vmap(lambda k: jax.random.fold_in(k, state_round))(
+            state_rng)
+        if masked:
+            params_K, new_dual, new_mom, z, losses = jax.vmap(
+                client_local, in_axes=(0, 0, 0, 0, 0, None, 0, 0)
+            )(params, dual, momentum, batches, rngs, lr_t, active, steps)
+        else:
+            params_K, new_dual, new_mom, z, losses = jax.vmap(
+                client_local, in_axes=(0, 0, 0, 0, 0, None)
+            )(params, dual, momentum, batches, rngs, lr_t)
+        new_params = mixing.mix_dense(plan, z)
+        if masked:
+            af = active.astype(jnp.float32)
+            n_active = jnp.sum(af)
+            mean_loss = jnp.mean(losses * af) * (
+                jnp.float32(cfg.m) / jnp.maximum(n_active, 1.0))
+            out = {"loss": jnp.where(n_active > 0, mean_loss, jnp.nan),
+                   "lr": lr_t, "participation": jnp.mean(af)}
+        else:
+            out = {"loss": jnp.mean(losses), "lr": lr_t}
+        out["consensus_sq"] = consensus_distance(new_params)
+        out["dual_norm"] = sam.global_norm(new_dual)
+        return new_params, new_dual, new_mom, out
+
+    return jax.jit(round_fn)
+
+
+def _solver_buffers(state, key, params):
+    """The refactored state's dual/momentum, or seed-layout zeros."""
+    if isinstance(state.solver, dict) and key in state.solver:
+        return state.solver[key]
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_full_participation_bit_identical_to_seed(algo):
+    params, batches, loss = _setup()
+    cfg = DFLConfig(algorithm=algo, m=M, K=K, lam=0.2, topology="ring")
+    spec = make_gossip("ring", M)
+    plan = jnp.asarray(spec.matrix, jnp.float32)
+
+    state = init_state(params, cfg, seed=0)
+    rf = jax.jit(make_train_round(loss, cfg, spec=spec))
+    st, met = rf(state, batches, plan)
+
+    dual0 = jax.tree.map(jnp.zeros_like, state.params)
+    mom0 = jax.tree.map(jnp.zeros_like, state.params)
+    ref_params, ref_dual, ref_mom, ref_met = _seed_round(cfg, loss)(
+        state.params, dual0, mom0, state.rng, jnp.zeros((), jnp.int32),
+        batches, plan)
+
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), ref_params, st.params)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        ref_dual, _solver_buffers(st, "dual", state.params))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        ref_mom, _solver_buffers(st, "momentum", state.params))
+    for k in ref_met:
+        np.testing.assert_array_equal(np.asarray(ref_met[k]),
+                                      np.asarray(met[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_masked_round_bit_identical_to_seed(algo):
+    """The masked path (a real mask with an inactive client and a
+    straggler) through the solver layer vs the seed masked machinery."""
+    params, batches, loss = _setup()
+    cfg = DFLConfig(algorithm=algo, m=M, K=K, lam=0.2, topology="ring",
+                    participation=ParticipationSpec(mode="fraction", p=0.5))
+    spec = make_gossip("ring", M)
+    active = np.array([True, False, True, False])
+    steps = np.array([K, 0, 1, 0], np.int32)
+    plan = jnp.asarray(mask_and_renormalize(spec.matrix, active), jnp.float32)
+
+    state = init_state(params, cfg, seed=0)
+    rf = jax.jit(make_train_round(loss, cfg, spec=spec))
+    st, met = rf(state, batches, plan, jnp.asarray(active),
+                 jnp.asarray(steps))
+
+    dual0 = jax.tree.map(jnp.zeros_like, state.params)
+    mom0 = jax.tree.map(jnp.zeros_like, state.params)
+    ref_params, ref_dual, ref_mom, ref_met = _seed_round(cfg, loss)(
+        state.params, dual0, mom0, state.rng, jnp.zeros((), jnp.int32),
+        batches, plan, jnp.asarray(active), jnp.asarray(steps))
+
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), ref_params, st.params)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        ref_dual, _solver_buffers(st, "dual", state.params))
+    for k in ref_met:
+        np.testing.assert_array_equal(np.asarray(ref_met[k]),
+                                      np.asarray(met[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Solver-owned state: no dead parameter-sized buffers
+# ---------------------------------------------------------------------------
+
+def test_init_state_allocates_only_what_the_solver_uses():
+    """Regression for the seed over-allocation: every algorithm used to
+    carry BOTH a dual and a momentum tree of full (m, ...) zeros."""
+    params, _, _ = _setup()
+
+    st = init_state(params, DFLConfig(algorithm="dfedadmm", m=M, K=K))
+    assert set(st.solver) == {"dual"}          # no momentum buffer
+
+    st = init_state(params, DFLConfig(algorithm="dfedavg", m=M, K=K))
+    assert st.solver is None                   # no dual, no momentum
+    # the whole state is params + rng + round — nothing else allocated
+    assert len(jax.tree.leaves(st)) == len(jax.tree.leaves(st.params)) + 2
+
+    st = init_state(params, DFLConfig(algorithm="dfedavgm", m=M, K=K))
+    assert set(st.solver) == {"momentum"}      # no dual buffer
+
+    st = init_state(params, DFLConfig(algorithm="dfedadmm_adaptive",
+                                      m=M, K=K))
+    assert set(st.solver) == {"dual", "lam_scale"}
+    assert st.solver["lam_scale"].shape == (M,)
+
+
+def test_deprecated_dual_momentum_properties():
+    params, _, _ = _setup()
+    st = init_state(params, DFLConfig(algorithm="dfedadmm", m=M, K=K))
+    with pytest.warns(DeprecationWarning):
+        d = st.dual
+    assert d is st.solver["dual"]
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(AttributeError):
+            st.momentum                        # ADMM carries no momentum
+
+
+# ---------------------------------------------------------------------------
+# Registry: a solver registered from user code runs end-to-end
+# ---------------------------------------------------------------------------
+
+class _ToySignSGD(solvers.LocalSolver):
+    """sign-SGD with a per-client step counter — exercises non-param-
+    shaped solver state through the full round loop."""
+
+    def init_state(self, cfg, stacked_params):
+        m = jax.tree.leaves(stacked_params)[0].shape[0]
+        return {"count": jnp.zeros((m,), jnp.int32)}
+
+    def step(self, params, grads, state, anchor, lr):
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * jnp.sign(g.astype(jnp.float32))
+                          ).astype(p.dtype), params, grads)
+        return new_params, {"count": state["count"] + 1}
+
+
+def test_registered_toy_solver_runs_through_simulate():
+    solvers.register_solver("toy_signsgd", lambda cfg: _ToySignSGD(),
+                            overwrite=True)
+    try:
+        params, _, loss = _setup()
+
+        def sampler(t):
+            r = np.random.default_rng(100 + t)
+            return {"x": jnp.asarray(r.normal(size=(M, K, 8, 5)),
+                                     jnp.float32),
+                    "y": jnp.asarray(r.normal(size=(M, K, 8, 4)),
+                                     jnp.float32)}
+
+        cfg = DFLConfig(algorithm="toy_signsgd", m=M, K=K, lr=0.01,
+                        topology="ring")
+        state, hist = simulate(loss, None, params, cfg, sampler, rounds=3)
+        assert np.isfinite(hist["loss"]).all()
+        # the counter advanced K steps per round on every client
+        np.testing.assert_array_equal(np.asarray(state.solver["count"]),
+                                      np.full((M,), 3 * K, np.int32))
+        # dual_norm telemetry degrades gracefully for dual-less solvers
+        assert hist["dual_norm"] == [0.0] * 3
+    finally:
+        del solvers.SOLVERS["toy_signsgd"]     # keep the registry hermetic
+
+
+def test_unknown_algorithm_lists_registry():
+    with pytest.raises(ValueError, match="registered DFL solvers"):
+        DFLConfig(algorithm="smoke-signals")
+    # CFL-scoped solvers are not silently runnable on the gossip round
+    with pytest.raises(ValueError):
+        DFLConfig(algorithm="fedavg")
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-lambda demo solver
+# ---------------------------------------------------------------------------
+
+def test_adaptive_admm_learns_and_keeps_lam_bounded():
+    params, _, loss = _setup()
+
+    def sampler(t):
+        r = np.random.default_rng(100 + t)
+        return {"x": jnp.asarray(r.normal(size=(M, K, 8, 5)), jnp.float32),
+                "y": jnp.asarray(r.normal(size=(M, K, 8, 4)), jnp.float32)}
+
+    cfg = DFLConfig(algorithm="dfedadmm_adaptive", m=M, K=K, lam=0.2,
+                    topology="ring")
+    state, hist = simulate(loss, None, params, cfg, sampler, rounds=8)
+    assert hist["loss"][-1] < hist["loss"][0]
+    scale = np.asarray(state.solver["lam_scale"])
+    bound = solvers.AdaptiveADMMSolver.BOUND
+    assert ((scale >= 1.0 / bound) & (scale <= bound)).all()
+    assert np.isfinite(hist["dual_norm"]).all()
+
+
+def test_adaptive_admm_matches_fixed_lam_until_rebalance():
+    """With an untriggered rebalance margin the adaptive solver IS
+    DFedADMM: lam_scale stays 1 and the round is bit-identical."""
+    params, batches, loss = _setup()
+    spec = make_gossip("ring", M)
+    plan = jnp.asarray(spec.matrix, jnp.float32)
+    outs = {}
+    for algo in ("dfedadmm", "dfedadmm_adaptive"):
+        cfg = DFLConfig(algorithm=algo, m=M, K=K, lam=0.2, topology="ring")
+        state = init_state(params, cfg, seed=0)
+        rf = jax.jit(make_train_round(loss, cfg, spec=spec))
+        st, _ = rf(state, batches, plan)
+        outs[algo] = st
+    adaptive = outs["dfedadmm_adaptive"]
+    scale = np.asarray(adaptive.solver["lam_scale"])
+    if (scale == 1.0).all():                   # no rebalance fired round 0
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+            outs["dfedadmm"].params, adaptive.params)
+
+
+# ---------------------------------------------------------------------------
+# CFL reuse + kernel routing
+# ---------------------------------------------------------------------------
+
+def test_baselines_has_no_duplicated_inner_loops():
+    """Acceptance: the ADMM/SGD/SAM inner-loop bodies live in solvers.py
+    only — baselines.py drives solver objects instead of re-implementing
+    them."""
+    import repro.core.baselines as baselines
+    src = inspect.getsource(baselines)
+    for needle in ("local_step", "dual_update", "admm.message",
+                   "weight_decay * p", "momentum * mi"):
+        assert needle not in src, needle
+    assert "solvers_lib.make_solver" in src
+
+
+def test_cfl_solver_states():
+    from repro.core import CFLConfig, init_cfl_state
+    params, _, _ = _setup()
+    st = init_cfl_state(params, CFLConfig(algorithm="fedavg", m=8))
+    assert st.solver is None
+    st = init_cfl_state(params, CFLConfig(algorithm="fedpd", m=8))
+    assert set(st.solver) == {"dual"}
+    assert jax.tree.leaves(st.solver["dual"])[0].shape[0] == 8
+    with pytest.raises(ValueError, match="registered CFL solvers"):
+        CFLConfig(algorithm="dfedadmm")
+
+
+def test_sgd_solver_kernel_path_matches_jnp():
+    params, _, _ = _setup()
+    rng = np.random.default_rng(3)
+    g = jax.tree.map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), jnp.float32), params)
+    ref_solver = solvers.SGDSolver(weight_decay=5e-4)
+    ker_solver = solvers.SGDSolver(weight_decay=5e-4, use_kernel=True)
+    p_ref, _ = ref_solver.step(params, g, None, params, 0.1)
+    p_ker, _ = ker_solver.step(params, g, None, params, 0.1)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7), p_ref, p_ker)

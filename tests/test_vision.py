@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import DFLConfig, simulate
-from repro.models.vision import (BACKBONES, build_vision, group_norm,
+from repro.models.vision import (build_vision, group_norm,
                                  vision_loss_fn)
 
 pytestmark = pytest.mark.slow  # jit/subprocess-heavy: excluded from the fast tier
