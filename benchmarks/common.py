@@ -76,12 +76,14 @@ def accuracy(params, task) -> float:
 def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
             lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5,
             participation=None, transport="", codec="identity",
-            codec_bits=8, codec_k=64):
+            codec_bits=8, codec_k=64, network=None):
     """Run a DFL algorithm on the synthetic federated task; returns
     (final_acc, history, us_per_round).  ``participation`` is an optional
     ``repro.core.ParticipationSpec`` scenario (default: every client,
     every round); ``transport``/``codec`` select the communication layer
-    (``repro.core.comm``) — the history carries per-round wire bytes."""
+    (``repro.core.comm``) — the history carries per-round wire bytes —
+    and ``network`` a cost-model preset (``repro.core.network``) — the
+    history then also carries per-round modeled wall-clock seconds."""
     from repro.core import (DFLConfig, ParticipationSpec, mean_params,
                             simulate)
     task = fl_task()
@@ -96,7 +98,8 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
                     lam=lam, rho=rho, degree=min(10, m - 1),
                     transport=transport, codec=codec,
                     codec_bits=codec_bits, codec_k=codec_k,
-                    participation=participation or ParticipationSpec())
+                    participation=participation or ParticipationSpec(),
+                    network=network)
     params = mlp_init(task.dim, task.n_classes, seed=seed)
 
     def eval_fn(p):
@@ -137,6 +140,20 @@ def rounds_from_history(hist, target):
         if a >= target:
             return r + 1
     return None
+
+
+def time_from_history(hist, target):
+    """Modeled wall-clock seconds (cumulative ``sim_time``) until the
+    eval accuracy first reaches ``target`` — the metric rounds and bytes
+    cannot see (None if the run has no network model or never gets
+    there)."""
+    sim = hist.get("sim_time")
+    if sim is None:
+        return None
+    r = rounds_from_history(hist, target)
+    if r is None:
+        return None
+    return float(sum(sim[:r]))
 
 
 def rounds_to_accuracy(algo, target, *, alpha, max_rounds, kind="dfl", **kw):

@@ -1,0 +1,83 @@
+"""Network cost model: time-to-target-accuracy across codecs and presets.
+
+The comm suite (``comm_bench``) measures *bytes* vs *rounds*; this suite
+measures what heterogeneous real networks actually cost — *time*.  Each
+row runs one (algorithm, codec, network preset) point through the
+``repro.core.network`` cost model and reports:
+
+* rounds until the eval accuracy reaches ``target`` (the old metric),
+* modeled wall-clock seconds until target (cumulative per-round
+  ``sim_time``: K x compute + the slowest active in-neighbour link), and
+* the modeled bytes per round.
+
+The point of the suite: on a bandwidth-starved preset the time-to-target
+ranking *reorders* the rounds-to-target ranking — a codec that pays a
+round-count penalty for its compression can still win the wall-clock
+race, which is invisible to rounds and bytes alone (e.g. on ``wan-lan``
+the 4-bit codec loses a round to the identity wire at the 0.8 target
+and still finishes ~3x sooner on the modeled clock).
+
+The deadline rows close the loop: ``ParticipationSpec(mode="deadline")``
+masks the clients whose modeled transfer misses the round deadline, so
+slow links cause partial participation (arXiv:2107.12048's
+communication/computing balancing, composed with the masked round).
+"""
+from benchmarks.common import (emit, rounds_from_history, run_dfl,
+                               time_from_history)
+
+from repro.core import ParticipationSpec
+
+PRESETS = ("uniform", "lognormal", "wan-lan")
+
+CODEC_POINTS = (
+    ("identity", dict()),
+    ("int8", dict(codec="int8", codec_bits=8)),
+    ("int4", dict(codec="int8", codec_bits=4)),
+    ("rand256", dict(codec="randk", codec_k=256)),
+)
+
+
+def _fmt(v, suffix=""):
+    return "-" if v is None else f"{v:.3f}{suffix}"
+
+
+def run(rounds: int = 20, m: int = 16, target: float = 0.8,
+        deadline: float = 0.08):
+    for algo in ("dfedadmm", "dfedavg"):
+        for preset in PRESETS:
+            for cname, kw in CODEC_POINTS:
+                acc, hist, us = run_dfl(algo, rounds=rounds, alpha=0.3, m=m,
+                                        topology="ring", eval_every=1,
+                                        network=preset, **kw)
+                rt = rounds_from_history(hist, target)
+                tt = time_from_history(hist, target)
+                emit(f"net/{algo}/{cname}/{preset}", us,
+                     f"acc={acc:.4f};"
+                     f"rounds_to_{target:g}="
+                     f"{rt if rt is not None else f'>{rounds}'};"
+                     f"time_to_{target:g}={_fmt(tt, 's')};"
+                     f"sim_s_per_round={sum(hist['sim_time']) / rounds:.4f};"
+                     f"bytes_per_round={hist['wire_bytes'][0]}")
+
+    # deadline participation: the network model *drives* the mask — on the
+    # heterogeneous presets the slow-linked clients sit rounds out
+    for preset in ("lognormal", "wan-lan"):
+        part = ParticipationSpec(mode="deadline", deadline=deadline)
+        acc, hist, us = run_dfl("dfedadmm", rounds=rounds, alpha=0.3, m=m,
+                                topology="ring", eval_every=1,
+                                network=preset, participation=part)
+        rt = rounds_from_history(hist, target)
+        tt = time_from_history(hist, target)
+        mean_p = sum(hist["participation"]) / rounds
+        emit(f"net/deadline{deadline:g}s/identity/{preset}", us,
+             f"acc={acc:.4f};"
+             f"rounds_to_{target:g}={rt if rt is not None else f'>{rounds}'};"
+             f"time_to_{target:g}={_fmt(tt, 's')};"
+             f"sim_s_per_round={sum(hist['sim_time']) / rounds:.4f};"
+             f"bytes_per_round={int(sum(hist['wire_bytes']) / rounds)};"
+             f"participation={mean_p:.2f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

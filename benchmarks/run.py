@@ -11,7 +11,7 @@ import sys
 
 
 SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
-          "roofline", "participation", "comm")
+          "roofline", "participation", "comm", "net")
 
 
 def main(argv=None) -> int:
@@ -53,6 +53,10 @@ def main(argv=None) -> int:
         from benchmarks import comm_bench
         comm_bench.run(rounds=10 if args.quick else 20,
                        target=0.5 if args.quick else 0.6)
+    if "net" in suites:
+        from benchmarks import net_bench
+        net_bench.run(rounds=10 if args.quick else 20,
+                      target=0.5 if args.quick else 0.8)
     return 0
 
 

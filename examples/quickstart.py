@@ -2,6 +2,15 @@
 
 Runs in ~1 minute on CPU:
     PYTHONPATH=src python examples/quickstart.py
+
+``DFLConfig`` is the single declaration point for all four pluggable
+layers (docs/architecture.md): ``algorithm`` resolves through the
+solver registry (``repro.core.solvers``), ``transport``/``codec``
+select the communication layer (``repro.core.comm``), ``network``
+attaches the per-link cost model (``repro.core.network``), and
+``participation`` the scenario engine.  The last run below composes
+them: 8-bit error-feedback messages, a WAN/LAN network model, and the
+modeled wall-clock (``history["sim_time"]``) that int8 buys back.
 """
 import jax
 import jax.numpy as jnp
@@ -59,6 +68,20 @@ def main():
               f"loss={hist['loss'][-1]:.3f}")
     print("\nUnder strong heterogeneity the dual-corrected local steps lift "
           "accuracy and speed up convergence (paper Tables 1 & 3-5).")
+
+    # the layers compose: quantized gossip over a slow WAN/LAN network —
+    # same algorithm, ~4x less uplink, and the cost model turns the saved
+    # bytes into saved (modeled) wall-clock seconds
+    print("\n== dfedadmm + comm/network layers (wan-lan preset) ==")
+    for codec in ("identity", "int8"):
+        cfg = DFLConfig(algorithm="dfedadmm", m=m, K=K, topology="ring",
+                        lam=1.0, codec=codec, network="wan-lan")
+        state, hist = simulate(loss_fn, eval_fn, params, cfg, sampler,
+                               rounds=rounds, eval_every=10)
+        acc = eval_fn(mean_params(state.params))["acc"]
+        print(f"codec={codec:9s} final acc={acc:.3f} "
+              f"uplink={sum(hist['wire_bytes']) / 1e6:.2f}MB "
+              f"sim_time={sum(hist['sim_time']):.2f}s")
 
 
 if __name__ == "__main__":

@@ -155,11 +155,68 @@ def update_participation(text):
     return text
 
 
+def network_table(rows):
+    """(algorithm, codec) x network preset -> time-to-target vs
+    rounds-to-target — the wall-clock view the bytes column of the
+    participation table cannot express (a codec that loses the rounds
+    race can still win the clock on a slow network)."""
+    lines = [
+        "| algo | codec | network | acc | rounds-to-target | "
+        "time-to-target | sim s/round | bytes/round |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for name, us, f in rows:
+        parts = name.split("/")
+        if len(parts) != 4 or parts[0] != "net" or "acc" not in f:
+            continue
+        _, algo, codec, preset = parts
+        rt_key = next((k for k in f if k.startswith("rounds_to")), None)
+        tt_key = next((k for k in f if k.startswith("time_to")), None)
+        extra = (f" (part. {f['participation']})"
+                 if "participation" in f else "")
+        lines.append(
+            f"| {algo}{extra} | {codec} | {preset} | {f['acc']} | "
+            f"{f[rt_key] if rt_key else '-'} | "
+            f"{f[tt_key] if tt_key else '-'} | "
+            f"{f.get('sim_s_per_round', '-')} | "
+            f"{f.get('bytes_per_round', '-')} |")
+    if len(lines) == 2:
+        return None
+    return "\n".join(lines)
+
+
+def update_network(text):
+    path = os.path.join(ART_DIR, "network.csv")
+    if not os.path.exists(path):
+        print(f"no {path}; skipping network time-to-target table "
+              "(generate it with: PYTHONPATH=src python -m benchmarks.run "
+              "--suite net > " + path + ")")
+        return text
+    table = network_table(_parse_bench_csv(path))
+    if table is None:
+        print(f"{path} has no net rows; skipping")
+        return text
+    body = ("Time-to-target accuracy under the per-link network cost "
+            "model (``repro.core.network``): modeled wall-clock seconds "
+            "until the eval accuracy first reaches the target, next to "
+            "the rounds-to-target the repo measured before — regenerate "
+            "via ``PYTHONPATH=src python -m benchmarks.run --suite net`` "
+            "and ``experiments/update_tables.py``.  The deadline rows "
+            "couple the model back into participation: clients whose "
+            "modeled transfer misses the round deadline sit the round "
+            "out.\n\n" + table)
+    text = _replace_section(text, "<!-- NETWORK_TIME -->",
+                            r"\n<!-- |\n## |\Z", body)
+    print("network time-to-target table updated")
+    return text
+
+
 def main():
     text = open(MD_PATH).read() if os.path.exists(MD_PATH) else \
         "# EXPERIMENTS\n"
     text = update_roofline(text)
     text = update_participation(text)
+    text = update_network(text)
     open(MD_PATH, "w").write(text)
 
 

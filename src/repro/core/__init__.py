@@ -18,8 +18,11 @@ from repro.core.gossip import (DIRECTED_TOPOLOGIES, GossipSpec, TOPOLOGIES,
 from repro.core.comm import (CODECS, TRANSPORTS, DenseTransport,
                              IdentityCodec, MessageCodec, PpermuteTransport,
                              PushSumTransport, QuantizeCodec, RandKCodec,
-                             TopKCodec, Transport, init_comm_state,
-                             make_codec, make_transport)
+                             TopKCodec, Transport, codec_names,
+                             init_comm_state, make_codec, make_transport,
+                             register_codec)
+from repro.core.network import (NETWORKS, NetworkModel, make_network,
+                                network_names, register_network)
 from repro.core.participation import (ParticipationSpec, RoundParticipation,
                                       participation_schedule,
                                       round_participation)

@@ -1,0 +1,38 @@
+"""Shared name -> factory registry scaffolding for the pluggable layers.
+
+The codec layer (``comm.register_codec``) and the network layer
+(``network.register_network``) both extend a fixed set of builtin names
+with user-registered factories; the duplicate-name check, the
+``overwrite`` escape hatch, and the builtins-plus-registered name
+listing live here exactly once.  (The solver layer keeps its own table
+— ``solvers.SOLVERS`` — because its entries also carry simulator
+scopes.)
+"""
+from __future__ import annotations
+
+
+class FactoryRegistry:
+    """Names -> factories, layered over a tuple of builtin names that the
+    owning module resolves itself (``kind`` only flavors error text)."""
+
+    def __init__(self, kind: str, builtins: tuple[str, ...]):
+        self.kind = kind
+        self.builtins = builtins
+        self._factories: dict[str, object] = {}
+
+    def register(self, name: str, factory, overwrite: bool = False) -> None:
+        if name in self.names() and not overwrite:
+            raise ValueError(f"{self.kind} {name!r} already registered "
+                             "(pass overwrite=True to replace)")
+        self._factories[name] = factory
+
+    def names(self) -> tuple[str, ...]:
+        """Builtin names plus registered ones, builtins first."""
+        return self.builtins + tuple(n for n in self._factories
+                                     if n not in self.builtins)
+
+    def __contains__(self, name) -> bool:
+        return name in self._factories
+
+    def build(self, name: str, *args):
+        return self._factories[name](*args)

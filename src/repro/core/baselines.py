@@ -38,12 +38,22 @@ class CFLConfig:
     rho: float = 0.1              # fedsam
     lam: float = 0.1              # fedpd
     weight_decay: float = 5e-4
+    network: Any = None           # repro.core.network preset name /
+                                  # NetworkModel; models the cohort's
+                                  # upload wall-clock (history["sim_time"])
 
     def __post_init__(self):
         if self.algorithm not in solvers_lib.solver_names("cfl"):
             raise ValueError(
                 f"unknown algorithm {self.algorithm!r}; registered CFL "
                 f"solvers: {solvers_lib.solver_names('cfl')}")
+        from repro.core.network import NetworkModel, network_names
+        if self.network is not None and not isinstance(
+                self.network, NetworkModel) and \
+                self.network not in network_names():
+            raise ValueError(
+                f"unknown network preset {self.network!r}; expected a "
+                f"NetworkModel or one of {network_names()}")
 
     @property
     def cohort(self) -> int:
@@ -143,15 +153,24 @@ def simulate_cfl(loss_fn, eval_fn, params: PyTree, cfg: CFLConfig,
     ``lr``, ``wire_bytes``, ``eval``) so downstream table renderers
     (``experiments/update_tables.py``) handle DFL and CFL runs
     uniformly; ``wire_bytes`` models the uplink as cohort clients each
-    sending one full-precision parameter message per round.
+    sending one full-precision parameter message per round.  With
+    ``cfg.network`` set, ``history["sim_time"]`` records each round's
+    modeled wall-clock: K local compute steps plus the slowest cohort
+    member's upload (``NetworkModel.uplink_seconds``) — the server waits
+    for the whole cohort.
     """
     import numpy as np
+    from repro.core.network import make_network
     round_fn = jax.jit(make_cfl_round(loss_fn, cfg))
     state = init_cfl_state(params, cfg, seed=seed)
     rng = np.random.default_rng(seed)
     bytes_per_client = comm_lib.IdentityCodec().bytes_per_client(params)
+    net = None if cfg.network is None else \
+        make_network(cfg.network, cfg.m, seed=seed)
     history: dict[str, list] = {"round": [], "loss": [], "lr": [],
                                 "wire_bytes": [], "eval": {}}
+    if net is not None:
+        history["sim_time"] = []
     for t in range(rounds):
         ids = rng.choice(cfg.m, size=cfg.cohort, replace=False)
         batches = sample_batches(t, ids)
@@ -160,6 +179,10 @@ def simulate_cfl(loss_fn, eval_fn, params: PyTree, cfg: CFLConfig,
         history["loss"].append(float(metrics["loss"]))
         history["lr"].append(float(metrics["lr"]))
         history["wire_bytes"].append(bytes_per_client * cfg.cohort)
+        if net is not None:
+            up = net.uplink_seconds(bytes_per_client, t)
+            history["sim_time"].append(
+                cfg.K * net.compute_s + float(up[ids].max()))
         if eval_fn is not None and ((t + 1) % eval_every == 0 or t == rounds - 1):
             ev = eval_fn(state.global_params)
             history["eval"].setdefault("round", []).append(t)

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mixing
+from repro.core._registry import FactoryRegistry
 from repro.core.gossip import (GossipSpec, as_column_stochastic,
                                mask_and_renormalize,
                                mask_and_renormalize_columns)
@@ -83,12 +84,20 @@ class Transport:
     kind: str = ""
 
     def prepare(self, spec: GossipSpec, active: np.ndarray | None = None):
+        """Host-side, once per round: fold this round's gossip ``spec``
+        and optional (m,) ``active`` mask into a *plan* — a pytree of
+        arrays the jitted round consumes as data."""
         raise NotImplementedError
 
     def mix(self, z: PyTree, plan, aux=None):
+        """Inside jit: mix the (m, ...)-stacked messages ``z`` under
+        ``plan``; ``aux`` is this transport's persistent per-client
+        state (``DFLState.comm`` slot).  Returns ``(x, aux')``."""
         raise NotImplementedError
 
     def init_aux(self, m: int):
+        """Initial persistent per-client state for ``m`` clients (None
+        for stateless transports)."""
         return None
 
 
@@ -213,7 +222,13 @@ class PushSumTransport(Transport):
 def make_transport(cfg, spec: GossipSpec | None = None, mesh=None,
                    client_axis: str = "data",
                    inner_specs: PyTree | None = None) -> Transport:
-    """Build the transport named by ``cfg.transport``."""
+    """Build the transport named by ``cfg.transport``.
+
+    Args: ``spec`` — static GossipSpec (required by ppermute, which
+    bakes the neighbour pattern into the compiled round); ``mesh`` /
+    ``client_axis`` / ``inner_specs`` — the sharded-substrate layout
+    for the on-mesh ppermute path (None = single-device simulation).
+    """
     name = cfg.transport
     if name == "dense":
         return DenseTransport()
@@ -237,15 +252,29 @@ class MessageCodec:
     stateful = False
 
     def init_state(self, stacked_params: PyTree):
+        """Per-client codec state shaped like ``stacked_params`` (the
+        error-feedback residuals for lossy codecs), or None."""
         return None
 
     def encode(self, z: PyTree, resid=None, rng=None, active=None):
+        """Compress the (m, ...)-stacked messages ``z`` for the wire.
+
+        Args: ``resid`` — the per-client residual state (or None),
+        ``rng`` — the round's shared codec PRNG key, ``active`` — (m,)
+        bool mask (inactive clients transmit nothing, so their residual
+        must pass through untouched).  Returns ``(wire, resid')``.
+        """
         return z, resid
 
     def decode(self, wire):
+        """Reconstruct the (m, ...)-stacked message estimates from the
+        wire representation produced by :meth:`encode`."""
         return wire
 
     def bytes_per_client(self, params_single: PyTree) -> int:
+        """Modeled wire size of one client's message, in bytes — the
+        number consumed by ``history["wire_bytes"]`` and the network
+        cost model (``repro.core.network``)."""
         return int(sum(leaf.size * leaf.dtype.itemsize
                        for leaf in jax.tree.leaves(params_single)))
 
@@ -482,9 +511,33 @@ class RandKCodec(_SparseCodec):
         return int(total)
 
 
+# user-registered codec factories (register_codec); the builtin names in
+# ``CODECS`` are resolved by the if-chain in make_codec
+_CODEC_REGISTRY = FactoryRegistry("codec", CODECS)
+
+
+def register_codec(name: str, factory, overwrite: bool = False) -> None:
+    """Register ``factory(cfg) -> MessageCodec`` under ``name``.
+
+    Mirrors ``solvers.register_solver``: once registered the codec is
+    selectable via ``DFLConfig(codec=name)`` (config validation resolves
+    through :func:`codec_names`) with no round-loop changes.  ``cfg`` is
+    the full config, so factories may read ``codec_bits`` / ``codec_k``
+    / any field they need.
+    """
+    _CODEC_REGISTRY.register(name, factory, overwrite)
+
+
+def codec_names() -> tuple[str, ...]:
+    """All selectable codec names: builtins plus registered ones."""
+    return _CODEC_REGISTRY.names()
+
+
 def make_codec(cfg) -> MessageCodec:
-    """Build the codec named by ``cfg.codec``."""
+    """Build the codec named by ``cfg.codec`` (builtin or registered)."""
     name = cfg.codec
+    if name in _CODEC_REGISTRY:
+        return _CODEC_REGISTRY.build(name, cfg)
     if name == "identity":
         return IdentityCodec()
     if name == "int8":
@@ -493,7 +546,8 @@ def make_codec(cfg) -> MessageCodec:
         return TopKCodec(k=cfg.codec_k)
     if name == "randk":
         return RandKCodec(k=cfg.codec_k)
-    raise ValueError(f"unknown codec {name!r}; expected one of {CODECS}")
+    raise ValueError(
+        f"unknown codec {name!r}; expected one of {codec_names()}")
 
 
 def init_comm_state(cfg, stacked_params: PyTree):

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import comm as comm_lib, sam, solvers as solvers_lib
 from repro.core.gossip import DIRECTED_TOPOLOGIES, GossipSpec
+from repro.core.network import (NetworkModel, make_network, network_names)
 from repro.core.participation import ParticipationSpec
 
 PyTree = Any
@@ -61,6 +62,10 @@ class DFLConfig:
                                  # partial-participation scenario; the
                                  # default (full, no dropout/stragglers)
                                  # takes the exact paper code path
+    network: Any = None          # network cost model: a preset name from
+                                 # repro.core.network.NETWORKS, a
+                                 # NetworkModel, or None (no wall-clock
+                                 # modeling; history has no "sim_time")
 
     def __post_init__(self):
         if self.algorithm not in solvers_lib.solver_names("dfl"):
@@ -80,10 +85,10 @@ class DFLConfig:
         # and new cfg.transport reads agree
         object.__setattr__(self, "transport", eff)
         object.__setattr__(self, "mixing", eff)
-        if self.codec not in comm_lib.CODECS:
+        if self.codec not in comm_lib.codec_names():
             raise ValueError(
                 f"unknown codec {self.codec!r}; expected one of "
-                f"{comm_lib.CODECS}")
+                f"{comm_lib.codec_names()}")
         if not 2 <= self.codec_bits <= 8:
             raise ValueError(f"codec_bits must be in [2, 8], "
                              f"got {self.codec_bits}")
@@ -94,11 +99,30 @@ class DFLConfig:
                 f"directed topology {self.topology!r} is only sound under "
                 "transport='pushsum' (plain mixing with a non-doubly-"
                 "stochastic matrix converges to a biased average)")
+        if self.network is not None and not isinstance(
+                self.network, NetworkModel):
+            if self.network not in network_names():
+                raise ValueError(
+                    f"unknown network preset {self.network!r}; expected a "
+                    f"NetworkModel or one of {network_names()}")
+        if self.participation.mode == "deadline" and self.network is None:
+            raise ValueError(
+                "participation mode 'deadline' is driven by the network "
+                "cost model: set DFLConfig.network to a preset from "
+                f"{network_names()} (or a NetworkModel)")
 
     def make_solver(self) -> "solvers_lib.LocalSolver":
         """The LocalSolver this config resolves to (algorithm facts like
         ``is_admm`` / ``sam_rho`` live on the solver object now)."""
         return solvers_lib.make_solver(self)
+
+    def make_network_model(self, seed: int = 0) -> NetworkModel | None:
+        """The NetworkModel this config resolves to: a preset name is
+        built for ``m`` clients with ``seed``, an explicit NetworkModel
+        passes through (after an m check), None stays None."""
+        if self.network is None:
+            return None
+        return make_network(self.network, self.m, seed=seed)
 
 
 @jax.tree_util.register_dataclass
@@ -414,6 +438,16 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     ppermute transport compiles one static neighbour pattern, so it
     rejects the time-varying random topologies instead of silently
     reusing round 0's graph.
+
+    ``cfg.network`` attaches the per-link cost model
+    (``repro.core.network``): ``history["sim_time"]`` then records each
+    round's modeled wall-clock (K x compute_s + the slowest active
+    in-neighbour link for the codec's message size — the critical path).
+    With ``participation.mode == "deadline"`` the model also *drives*
+    participation: clients whose modeled transfer misses
+    ``participation.deadline`` are masked exactly like sampled-out
+    clients, through the same per-round (active, steps) arrays and
+    masked plan — the round stays one jitted computation.
     """
     from repro.core.participation import participation_schedule
     from repro.core.gossip import time_varying_specs
@@ -435,15 +469,25 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     codec = comm_lib.make_codec(cfg)
     bytes_per_client = codec.bytes_per_client(params_single)
 
+    net = cfg.make_network_model(seed=seed)
+    # only the deadline mode consumes per-round transfer times; other
+    # participation modes ignore them, so don't draw the jitter for them
+    transfer = None if net is None or \
+        cfg.participation.mode != "deadline" else [
+        net.transfer_times(s.matrix, bytes_per_client, t)
+        for t, s in enumerate(specs)]
+
     trivial = cfg.participation.is_trivial
     sched = None if trivial else participation_schedule(
-        cfg.participation, cfg.m, rounds, cfg.K)
+        cfg.participation, cfg.m, rounds, cfg.K, transfer_times=transfer)
 
     history: dict[str, list] = {"round": [], "loss": [], "lr": [],
                                 "consensus_sq": [], "dual_norm": [],
                                 "wire_bytes": []}
     if not trivial:
         history["participation"] = []
+    if net is not None:
+        history["sim_time"] = []
     eval_hist: dict[str, list] = {}
     for t in range(rounds):
         batches = sample_batches(t)
@@ -460,6 +504,10 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
             history["participation"].append(float(metrics["participation"]))
             n_active = int(rp.active.sum())
         history["wire_bytes"].append(bytes_per_client * n_active)
+        if net is not None:
+            history["sim_time"].append(net.round_time(
+                specs[t].matrix, bytes_per_client, t, cfg.K,
+                active=None if trivial else sched[t].active))
         history["round"].append(t)
         for k in ("loss", "lr", "consensus_sq", "dual_norm"):
             history[k].append(float(metrics[k]))

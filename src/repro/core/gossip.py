@@ -216,6 +216,8 @@ def mask_and_renormalize_columns(p: np.ndarray, active: np.ndarray) -> np.ndarra
 
 
 def adjacency(topology: str, m: int, *, degree: int = 10, seed: int = 0) -> np.ndarray:
+    """(m, m) bool adjacency (no self loops) for a symmetric ``topology``
+    from ``TOPOLOGIES``; ``degree``/``seed`` apply to "random" only."""
     if topology == "ring":
         return ring_adjacency(m)
     if topology == "grid":
@@ -319,6 +321,8 @@ class GossipSpec:
 
 
 def spectral_psi(w: np.ndarray) -> float:
+    """psi = max(|lambda_2|, |lambda_m|) of the symmetrized matrix — the
+    paper's mixing constant; the spectral gap is ``1 - psi``."""
     eig = np.linalg.eigvalsh((w + w.T) / 2.0)
     eig = np.sort(np.abs(eig))[::-1]
     # largest eigenvalue is 1 (within fp error); psi is the second largest
@@ -327,6 +331,12 @@ def spectral_psi(w: np.ndarray) -> float:
 
 def make_gossip(topology: str, m: int, *, weights: str = "metropolis",
                 degree: int = 10, seed: int = 0) -> GossipSpec:
+    """Build the validated ``GossipSpec`` for ``topology`` over ``m``
+    clients: Definition-1 (symmetric doubly-stochastic) matrices for the
+    undirected ``TOPOLOGIES`` under the ``weights`` scheme
+    ("metropolis" | "uniform"), column-stochastic push-sum matrices for
+    the ``DIRECTED_TOPOLOGIES``; ``degree``/``seed`` shape the random
+    graphs."""
     if topology in DIRECTED_TOPOLOGIES:
         # directed graphs take sender-normalized (column-stochastic)
         # weights regardless of the ``weights`` scheme; they are only

@@ -1,0 +1,254 @@
+"""Network cost model: per-link bandwidth/latency -> simulated wall-clock.
+
+The repo measured communication in *rounds* and *bytes*; heterogeneous
+real networks cost *time* (the communication/computing cost-balancing
+analysis of arXiv:2107.12048, and the asymmetric-link setting of
+arXiv:2310.05093 whose directed topologies the push-sum transport
+already supports).  This module is the fourth pluggable layer next to
+transport / codec / solver: a declarative per-link cost model that
+composes with every ``Transport.prepare`` plan.
+
+``NetworkModel`` holds two (m, m) host-side numpy matrices — like the
+gossip matrices, they are tiny and never enter jit:
+
+* ``bandwidth[i, j]`` — bytes/second of the link j -> i (the same
+  receive convention as the gossip matrices: row i lists who i hears);
+* ``latency[i, j]``   — seconds of fixed per-message latency on j -> i.
+
+Given this round's effective communication graph (the matrix behind the
+transport's plan — symmetric, masked, or column-stochastic push-sum
+alike: any nonzero off-diagonal ``w[i, j]`` means a message j -> i) and
+the codec's modeled message size (``MessageCodec.bytes_per_client``),
+the model yields per-client transfer times and the critical-path round
+time recorded by ``simulate`` as ``history["sim_time"]``::
+
+    link_seconds(i, j) = jitter_t[i, j] * (latency[i, j] + nbytes / bandwidth[i, j])
+    transfer_i         = max over in-neighbours j of link_seconds(i, j)
+    sim_time           = K * compute_s + max over active i of transfer_i
+
+``jitter_t`` is a per-round, per-link multiplicative lognormal draw with
+mean 1, regenerated from ``(seed, t)`` exactly like the participation
+masks — schedules are reproducible without carrying RNG state.
+
+The model also closes the loop back into the scenario engine:
+``ParticipationSpec(mode="deadline", deadline=...)`` masks the clients
+whose modeled transfer misses the round deadline (see
+``participation.round_participation``), so slow links *cause* partial
+participation instead of it being sampled i.i.d.
+
+Presets (``make_network``):
+
+* ``uniform``       — every link identical; the degenerate control.
+* ``lognormal``     — per-link bandwidths/latencies drawn lognormal at
+  construction: heavy-tailed heterogeneity, a few very slow links.
+* ``hub-and-spoke`` — client 0 is a datacenter hub: hub links are fast,
+  spoke<->spoke links are slow (routed via the hub).
+* ``wan-lan``       — clients in LAN sites of 4: intra-site links are
+  fast, cross-site WAN links are slow and high-latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core._registry import FactoryRegistry
+
+NETWORKS = ("uniform", "lognormal", "hub-and-spoke", "wan-lan")
+
+# reference link speeds (bytes/second) and latencies (seconds)
+_FAST_BW, _FAST_LAT = 125e6, 1e-3      # ~1 Gb/s LAN / datacenter link
+_BASE_BW, _BASE_LAT = 10e6, 5e-3       # ~80 Mb/s commodity uplink
+_SLOW_BW, _SLOW_LAT = 6.4e4, 20e-3     # ~512 kb/s constrained edge uplink
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Per-link bandwidth/latency cost model for one federation of m clients.
+
+    Attributes:
+      name:      preset name (or "custom" for hand-built models).
+      bandwidth: (m, m) float64, bytes/second of link j -> i.
+      latency:   (m, m) float64, seconds of fixed latency on j -> i.
+      jitter:    sigma of the mean-1 lognormal per-round multiplicative
+                 jitter applied per link (0 disables jitter).
+      seed:      base seed; round ``t`` jitter draws from
+                 ``default_rng((seed, t))``.
+      compute_s: modeled seconds of local compute per local iteration
+                 (the "local compute estimate" term of ``sim_time``).
+    """
+
+    name: str
+    bandwidth: np.ndarray
+    latency: np.ndarray
+    jitter: float = 0.0
+    seed: int = 0
+    compute_s: float = 0.002
+
+    def __post_init__(self):
+        bw = np.asarray(self.bandwidth, dtype=np.float64)
+        lat = np.asarray(self.latency, dtype=np.float64)
+        if bw.ndim != 2 or bw.shape[0] != bw.shape[1]:
+            raise ValueError(f"bandwidth must be (m, m), got {bw.shape}")
+        if lat.shape != bw.shape:
+            raise ValueError(
+                f"latency shape {lat.shape} != bandwidth shape {bw.shape}")
+        if np.any(bw <= 0):
+            raise ValueError("link bandwidths must be positive")
+        if np.any(lat < 0):
+            raise ValueError("link latencies must be non-negative")
+        if self.jitter < 0:
+            raise ValueError(f"jitter must be >= 0, got {self.jitter}")
+        if self.compute_s < 0:
+            raise ValueError(f"compute_s must be >= 0, got {self.compute_s}")
+        object.__setattr__(self, "bandwidth", bw)
+        object.__setattr__(self, "latency", lat)
+
+    @property
+    def m(self) -> int:
+        return self.bandwidth.shape[0]
+
+    def _jitter_factor(self, t: int) -> np.ndarray:
+        """(m, m) mean-1 multiplicative jitter for round ``t`` (all-ones
+        when jitter is disabled); deterministic in ``(seed, t)``."""
+        if self.jitter == 0.0:
+            return np.ones((self.m, self.m))
+        rng = np.random.default_rng((self.seed, t))
+        return rng.lognormal(mean=-0.5 * self.jitter ** 2,
+                             sigma=self.jitter, size=(self.m, self.m))
+
+    def link_seconds(self, nbytes: int, t: int) -> np.ndarray:
+        """(m, m) modeled seconds to move one ``nbytes`` message over each
+        link j -> i in round ``t`` (latency + serialization, jittered)."""
+        base = self.latency + float(nbytes) / self.bandwidth
+        return base * self._jitter_factor(t)
+
+    def transfer_times(self, w: np.ndarray, nbytes: int, t: int,
+                       active: np.ndarray | None = None) -> np.ndarray:
+        """Per-client receive-completion times under the round's graph.
+
+        Args:
+          w:      (m, m) effective gossip matrix — any transport's plan
+                  matrix (symmetric, masked, or column-stochastic
+                  push-sum): ``w[i, j] != 0`` off the diagonal means a
+                  message j -> i this round.
+          nbytes: modeled message size (``MessageCodec.bytes_per_client``).
+          t:      round index (selects the jitter draw).
+          active: optional (m,) bool mask; only links between active
+                  pairs count, and inactive clients wait for nothing.
+
+        Returns (m,) float64: for each client, the slowest of its
+        in-neighbour links (0.0 for clients with no in-neighbours).
+        """
+        w = np.asarray(w, dtype=np.float64)
+        if w.shape != (self.m, self.m):
+            raise ValueError(
+                f"gossip matrix shape {w.shape} does not match the "
+                f"network model's m={self.m}")
+        edges = (w != 0.0)
+        np.fill_diagonal(edges, False)
+        if active is not None:
+            active = np.asarray(active, dtype=bool)
+            edges &= np.outer(active, active)
+        times = np.where(edges, self.link_seconds(nbytes, t), 0.0)
+        return times.max(axis=1)
+
+    def round_time(self, w: np.ndarray, nbytes: int, t: int, K: int,
+                   active: np.ndarray | None = None) -> float:
+        """Critical-path wall-clock of one round: ``K`` local iterations
+        of modeled compute plus the slowest active in-neighbour link
+        (every client computes in parallel; the round ends when the last
+        active client has heard all its active in-neighbours)."""
+        transfer = self.transfer_times(w, nbytes, t, active=active)
+        if active is not None:
+            transfer = transfer[np.asarray(active, dtype=bool)]
+        slowest = float(transfer.max()) if transfer.size else 0.0
+        return K * self.compute_s + slowest
+
+    def uplink_seconds(self, nbytes: int, t: int) -> np.ndarray:
+        """(m,) per-client worst outgoing-link time for one ``nbytes``
+        message — the server-upload model used by ``simulate_cfl``
+        (client j's upload is bounded by its slowest out-link)."""
+        times = self.link_seconds(nbytes, t)
+        mask = ~np.eye(self.m, dtype=bool)
+        return np.where(mask, times, 0.0).max(axis=0)
+
+
+def _lognormal_matrix(rng, center, sigma, m):
+    return center * rng.lognormal(mean=-0.5 * sigma ** 2, sigma=sigma,
+                                  size=(m, m))
+
+
+# user-registered preset builders (register_network); the builtin names
+# in ``NETWORKS`` are resolved by the if-chain in make_network
+_PRESET_REGISTRY = FactoryRegistry("network preset", NETWORKS)
+
+
+def register_network(name: str, builder, overwrite: bool = False) -> None:
+    """Register ``builder(m, seed) -> NetworkModel`` under ``name``.
+
+    Mirrors ``solvers.register_solver``: a registered preset is
+    selectable via ``DFLConfig(network=name)`` (config validation
+    resolves through :func:`network_names`).  The train CLI's
+    ``--network`` choices are fixed to the builtin presets — a CLI
+    process never imports user registration code.
+    """
+    _PRESET_REGISTRY.register(name, builder, overwrite)
+
+
+def network_names() -> tuple[str, ...]:
+    """All selectable preset names: builtins plus registered ones."""
+    return _PRESET_REGISTRY.names()
+
+
+def make_network(preset, m: int, *, seed: int = 0, jitter: float = 0.05,
+                 compute_s: float = 0.002, site: int = 4) -> NetworkModel:
+    """Build one of the ``NETWORKS`` presets for ``m`` clients.
+
+    Args:
+      preset:    preset name from ``NETWORKS``, or an existing
+                 ``NetworkModel`` (returned unchanged after an m check —
+                 lets config fields hold either form).
+      m:         number of clients.
+      seed:      seeds both the construction-time link draws and the
+                 per-round jitter stream.
+      jitter:    per-round lognormal jitter sigma (0 disables).
+      compute_s: modeled seconds per local iteration.
+      site:      LAN site size for the ``wan-lan`` preset.
+    """
+    if isinstance(preset, NetworkModel):
+        if preset.m != m:
+            raise ValueError(
+                f"network model is sized for m={preset.m}, config has m={m}")
+        return preset
+    if preset in _PRESET_REGISTRY:
+        model = _PRESET_REGISTRY.build(preset, m, seed)
+        if model.m != m:
+            raise ValueError(
+                f"registered preset {preset!r} built a model for "
+                f"m={model.m}, config has m={m}")
+        return model
+    rng = np.random.default_rng((seed, 0x4E7))   # construction-time stream
+    if preset == "uniform":
+        bw = np.full((m, m), _BASE_BW)
+        lat = np.full((m, m), _BASE_LAT)
+    elif preset == "lognormal":
+        # heavy-tailed per-link heterogeneity: the slowest few links sit
+        # orders of magnitude below the median — the straggler-link regime
+        bw = _lognormal_matrix(rng, _BASE_BW, 2.0, m)
+        lat = _lognormal_matrix(rng, _BASE_LAT, 0.5, m)
+    elif preset == "hub-and-spoke":
+        hub = np.zeros((m, m), dtype=bool)
+        hub[0, :] = hub[:, 0] = True
+        bw = np.where(hub, _FAST_BW, _SLOW_BW)
+        lat = np.where(hub, _FAST_LAT, _SLOW_LAT)
+    elif preset == "wan-lan":
+        sites = np.arange(m) // max(site, 1)
+        same = sites[:, None] == sites[None, :]
+        bw = np.where(same, _FAST_BW, _SLOW_BW)
+        lat = np.where(same, _FAST_LAT, _SLOW_LAT)
+    else:
+        raise ValueError(f"unknown network preset {preset!r}; expected "
+                         f"one of {network_names()}")
+    return NetworkModel(name=str(preset), bandwidth=bw, latency=lat,
+                        jitter=jitter, seed=seed, compute_s=compute_s)

@@ -23,14 +23,22 @@ a single jitted computation regardless of who participates.
 Everything here is plain numpy on the host — masks are (m,) vectors and
 are regenerated per round from a counter-based seed, so schedules are
 reproducible without carrying RNG state.
+
+The "deadline" mode couples participation to the network cost model
+(``repro.core.network``): the caller threads the model's per-round
+transfer times into :func:`round_participation` and clients whose
+modeled transfer exceeds the deadline are masked — slow links *cause*
+partial participation.  ``simulate`` wires this automatically when
+``DFLConfig.network`` is set.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
-MODES = ("full", "uniform", "fraction", "schedule")
+MODES = ("full", "uniform", "fraction", "schedule", "deadline")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +52,13 @@ class ParticipationSpec:
                     without replacement each round.
       "schedule"  — deterministic: ``schedule[t % len(schedule)]`` is the
                     tuple of active client ids for round ``t``.
+      "deadline"  — network-coupled: every client attempts the round, but
+                    those whose modeled transfer time (from the
+                    ``repro.core.network`` cost model, threaded in as
+                    ``transfer_times``) exceeds ``deadline`` seconds are
+                    masked out of the gossip — slow links *cause* partial
+                    participation instead of it being sampled i.i.d.
+    deadline:      round deadline in seconds for the "deadline" mode.
     dropout:       probability that a *sampled* client crashes mid-round —
                    it burns the local compute but its update is discarded
                    and it is excluded from the gossip step.
@@ -61,6 +76,7 @@ class ParticipationSpec:
     mode: str = "full"
     p: float = 1.0
     schedule: tuple = ()
+    deadline: float = 0.0
     dropout: float = 0.0
     straggler_frac: float = 0.0
     straggler_steps: int = 1
@@ -84,6 +100,9 @@ class ParticipationSpec:
             raise ValueError("min_active must be >= 0")
         if self.mode == "schedule" and not self.schedule:
             raise ValueError("schedule mode needs a non-empty schedule")
+        if self.mode == "deadline" and self.deadline <= 0.0:
+            raise ValueError("deadline mode needs a positive deadline "
+                             "(seconds of modeled round time)")
 
     @property
     def is_trivial(self) -> bool:
@@ -104,6 +123,7 @@ class RoundParticipation:
 
     @property
     def rate(self) -> float:
+        """Fraction of clients contributing to this round's gossip."""
         return float(self.active.mean())
 
     @property
@@ -132,8 +152,12 @@ def straggler_set(spec: ParticipationSpec, m: int) -> np.ndarray:
 
 
 def sample_mask(spec: ParticipationSpec, m: int, t: int) -> np.ndarray:
-    """(m,) bool mask of the clients sampled for round ``t`` (pre-dropout)."""
-    if spec.mode == "full":
+    """(m,) bool mask of the clients sampled for round ``t`` (pre-dropout).
+
+    The "deadline" mode samples everybody — whether a sampled client
+    *survives* into the gossip is decided by the network cost model in
+    :func:`round_participation`, not by this draw."""
+    if spec.mode in ("full", "deadline"):
         return np.ones(m, dtype=bool)
     if spec.mode == "schedule":
         ids = np.asarray(spec.schedule[t % len(spec.schedule)], dtype=int)
@@ -157,11 +181,44 @@ def sample_mask(spec: ParticipationSpec, m: int, t: int) -> np.ndarray:
     return mask
 
 
-def round_participation(spec: ParticipationSpec, m: int, t: int,
-                        K: int) -> RoundParticipation:
-    """Realize the spec for round ``t`` with ``K`` nominal local steps."""
+def round_participation(spec: ParticipationSpec, m: int, t: int, K: int,
+                        transfer_times: np.ndarray | None = None
+                        ) -> RoundParticipation:
+    """Realize the spec for round ``t`` with ``K`` nominal local steps.
+
+    Args:
+      spec: the participation scenario.
+      m:    number of clients.
+      t:    round index (seeds the per-round draws).
+      K:    nominal local iterations per round.
+      transfer_times: (m,) modeled per-client transfer seconds for this
+        round (``NetworkModel.transfer_times``).  Required by the
+        "deadline" mode — clients over ``spec.deadline`` are masked,
+        with the ``min_active`` floor keeping the fastest clients when
+        too few make the cut — and ignored by every other mode.
+    """
     sampled = sample_mask(spec, m, t)
     active = sampled.copy()
+    if spec.mode == "deadline":
+        if transfer_times is None:
+            raise ValueError(
+                "deadline mode needs the network model's per-round "
+                "transfer_times (set DFLConfig.network and run through "
+                "simulate, or pass NetworkModel.transfer_times here)")
+        transfer_times = np.asarray(transfer_times, dtype=np.float64)
+        if transfer_times.shape != (m,):
+            raise ValueError(
+                f"transfer_times shape {transfer_times.shape} does not "
+                f"match m={m}")
+        active &= transfer_times <= spec.deadline
+        floor = min(spec.min_active, m)
+        short = floor - int(active.sum())
+        if short > 0:
+            # too few clients beat the deadline: keep the fastest ones
+            # (deterministic — no RNG draw, the network decides)
+            pool = np.flatnonzero(~active)
+            order = pool[np.argsort(transfer_times[pool], kind="stable")]
+            active[order[:short]] = True
     if spec.dropout > 0.0:
         rng = _round_rng(spec, _DROPOUT, t)
         drops = rng.random(m) < spec.dropout
@@ -178,6 +235,18 @@ def round_participation(spec: ParticipationSpec, m: int, t: int,
 
 
 def participation_schedule(spec: ParticipationSpec, m: int, rounds: int,
-                           K: int) -> list[RoundParticipation]:
-    """One RoundParticipation per round (deterministic in ``spec.seed``)."""
-    return [round_participation(spec, m, t, K) for t in range(rounds)]
+                           K: int,
+                           transfer_times: Sequence[np.ndarray] | None = None
+                           ) -> list[RoundParticipation]:
+    """One RoundParticipation per round (deterministic in ``spec.seed``).
+
+    ``transfer_times`` — one (m,) vector per round — is required by the
+    "deadline" mode (see :func:`round_participation`)."""
+    if transfer_times is None:
+        transfer_times = [None] * rounds
+    if len(transfer_times) != rounds:
+        raise ValueError(
+            f"need one transfer_times vector per round: "
+            f"{len(transfer_times)} != {rounds}")
+    return [round_participation(spec, m, t, K, transfer_times=tt)
+            for t, tt in zip(range(rounds), transfer_times)]

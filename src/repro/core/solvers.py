@@ -256,6 +256,9 @@ class AdaptiveADMMSolver(ADMMSolver):
 
 @dataclasses.dataclass(frozen=True)
 class SolverEntry:
+    """Registry row: the solver factory and the simulators ("dfl" /
+    "cfl") allowed to run it."""
+
     factory: Callable[[Any], LocalSolver]
     scopes: tuple[str, ...]
 

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 def main(argv=None) -> int:
     from repro.checkpoint import save_pytree
     from repro.configs import ARCH_IDS, get_model_config, get_smoke_config
-    from repro.core import (CODECS, TRANSPORTS, DFLConfig,
+    from repro.core import (CODECS, NETWORKS, TRANSPORTS, DFLConfig,
                             ParticipationSpec, mean_params, simulate,
                             solver_names)
     from repro.models import build_model
@@ -68,9 +68,18 @@ def main(argv=None) -> int:
                     help="topk/randk codecs: kept entries per leaf")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="grad-accumulation splits per inner step")
+    ap.add_argument("--network", default="", choices=("",) + NETWORKS,
+                    help="per-link network cost model (repro.core.network); "
+                         "records modeled round wall-clock in "
+                         "history['sim_time']")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="round deadline in modeled seconds: clients whose "
+                         "transfer misses it sit the round out "
+                         "(participation mode 'deadline'; needs --network)")
     ap.add_argument("--participation", default="full",
                     choices=("full", "uniform", "fraction"),
-                    help="per-round client sampling mode")
+                    help="per-round client sampling mode (--deadline "
+                         "overrides this with the network-driven mode)")
     ap.add_argument("--participation-p", type=float, default=1.0,
                     help="sampling probability / kept fraction per round")
     ap.add_argument("--dropout", type=float, default=0.0,
@@ -98,18 +107,27 @@ def main(argv=None) -> int:
     print(f"[train] arch={cfg.name} algo={args.algorithm} "
           f"params={model.param_count(params):,} m={args.m} K={args.k}")
 
-    part = ParticipationSpec(mode=args.participation, p=args.participation_p,
-                             dropout=args.dropout,
-                             straggler_frac=args.straggler_frac,
-                             straggler_steps=args.straggler_steps,
-                             min_active=args.min_active, seed=args.seed)
+    part_kw = dict(dropout=args.dropout,
+                   straggler_frac=args.straggler_frac,
+                   straggler_steps=args.straggler_steps,
+                   min_active=args.min_active, seed=args.seed)
+    if args.deadline > 0.0:
+        if not args.network:
+            raise SystemExit("--deadline needs --network (the deadline is "
+                             "judged against the modeled transfer times)")
+        part = ParticipationSpec(mode="deadline", deadline=args.deadline,
+                                 **part_kw)
+    else:
+        part = ParticipationSpec(mode=args.participation,
+                                 p=args.participation_p, **part_kw)
     dfl_cfg = DFLConfig(algorithm=args.algorithm, m=args.m, K=args.k,
                         lr=args.lr, lam=args.lam, rho=args.rho,
                         topology=args.topology,
                         transport=args.transport, codec=args.codec,
                         codec_bits=args.codec_bits, codec_k=args.codec_k,
                         microbatches=args.microbatches,
-                        participation=part)
+                        participation=part,
+                        network=args.network or None)
     sampler = _make_sampler(cfg, args)
     eval_batch = _eval_batch(cfg, args)
 
@@ -126,10 +144,12 @@ def main(argv=None) -> int:
                               verbose=True)
     dt = time.time() - t0
     wire_mb = sum(history["wire_bytes"]) / 1e6
+    sim = (f"  sim_time={sum(history['sim_time']):.1f}s ({args.network})"
+           if "sim_time" in history else "")
     print(f"[train] {args.rounds} rounds in {dt:.1f}s  "
           f"final loss={history['loss'][-1]:.4f}  "
           f"eval={history['eval'].get('eval_loss', ['n/a'])[-1]}  "
-          f"uplink={wire_mb:.1f}MB ({args.codec})")
+          f"uplink={wire_mb:.1f}MB ({args.codec}){sim}")
 
     if args.ckpt_dir:
         path = save_pytree(args.ckpt_dir, args.rounds,

@@ -1,0 +1,37 @@
+"""The docs tree stays truthful: internal markdown links resolve and the
+worked examples in docs/extending.md execute against the current API
+(the same checks the CI docs job runs)."""
+import doctest
+import importlib.util
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_check_links():
+    path = os.path.join(ROOT, "tools", "check_links.py")
+    spec = importlib.util.spec_from_file_location("check_links", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_markdown_links_resolve():
+    mod = _load_check_links()
+    errors = []
+    for f in mod.doc_files(ROOT):
+        errors.extend(mod.check_file(f, ROOT))
+    assert not errors, "broken markdown links:\n" + "\n".join(errors)
+
+
+def test_docs_surfaces_exist():
+    for rel in ("README.md", "docs/architecture.md", "docs/extending.md",
+                "docs/benchmarks.md"):
+        assert os.path.exists(os.path.join(ROOT, rel)), f"missing {rel}"
+
+
+def test_extending_doctests_pass():
+    result = doctest.testfile(
+        os.path.join(ROOT, "docs", "extending.md"), module_relative=False)
+    assert result.attempted > 0
+    assert result.failed == 0

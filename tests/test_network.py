@@ -1,0 +1,245 @@
+"""Network cost-model layer: presets, timing algebra, the deadline
+participation mode, and the docs surfaces that describe them."""
+import numpy as np
+import pytest
+
+from repro.core import (DFLConfig, NetworkModel, ParticipationSpec,
+                        make_gossip, make_network, register_network,
+                        simulate)
+from repro.core.network import NETWORKS, network_names
+from repro.core.participation import (participation_schedule,
+                                      round_participation)
+
+
+def _toy_problem(m=8, K=3, seed=0):
+    import jax.numpy as jnp
+
+    def loss_fn(p, batch, rng):
+        pred = batch["x"] @ p["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 1)), jnp.float32)}
+
+    def sampler(t):
+        r = np.random.default_rng((seed, t))
+        x = r.normal(size=(m, K, 16, 6)).astype(np.float32)
+        y = x.sum(-1, keepdims=True).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    return loss_fn, params, sampler
+
+
+# ---------------------------------------------------------------------------
+# NetworkModel construction and algebra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", NETWORKS)
+def test_presets_build_and_are_deterministic(preset):
+    a = make_network(preset, 16, seed=3)
+    b = make_network(preset, 16, seed=3)
+    assert a.m == 16
+    np.testing.assert_array_equal(a.bandwidth, b.bandwidth)
+    np.testing.assert_array_equal(a.latency, b.latency)
+    # per-round jitter is a pure function of (seed, t)
+    np.testing.assert_array_equal(a.link_seconds(10_000, 7),
+                                  b.link_seconds(10_000, 7))
+    # different rounds draw different jitter (jitter > 0 in presets)
+    assert not np.array_equal(a.link_seconds(10_000, 7),
+                              a.link_seconds(10_000, 8))
+
+
+def test_network_seed_changes_draws():
+    a = make_network("lognormal", 8, seed=0)
+    b = make_network("lognormal", 8, seed=1)
+    assert not np.array_equal(a.bandwidth, b.bandwidth)
+
+
+def test_model_validation():
+    ones = np.ones((4, 4))
+    with pytest.raises(ValueError, match="positive"):
+        NetworkModel(name="x", bandwidth=np.zeros((4, 4)), latency=ones)
+    with pytest.raises(ValueError, match="shape"):
+        NetworkModel(name="x", bandwidth=ones, latency=np.ones((3, 3)))
+    with pytest.raises(ValueError, match="unknown network preset"):
+        make_network("adsl", 4)
+    with pytest.raises(ValueError, match="m="):
+        make_network(make_network("uniform", 4), 8)
+
+
+def test_transfer_times_follow_in_edges():
+    m = 6
+    net = make_network("uniform", m, seed=0, jitter=0.0)
+    ring = make_gossip("ring", m).matrix
+    times = net.transfer_times(ring, nbytes=64_000, t=0)
+    expected = net.latency[0, 1] + 64_000 / net.bandwidth[0, 1]
+    np.testing.assert_allclose(times, expected)
+    # masking: a client with no active in-neighbours waits for nothing
+    active = np.zeros(m, dtype=bool)
+    active[0] = True
+    np.testing.assert_array_equal(
+        net.transfer_times(ring, 64_000, 0, active=active), np.zeros(m))
+
+
+def test_more_bytes_cost_strictly_more_time():
+    net = make_network("wan-lan", 16, seed=1)
+    w = make_gossip("ring", 16).matrix
+    t_small = net.round_time(w, 10_000, 3, K=5)
+    t_big = net.round_time(w, 100_000, 3, K=5)
+    assert t_big > t_small
+
+
+def test_register_network_preset_roundtrip():
+    def builder(m, seed):
+        return NetworkModel(name="flat", bandwidth=np.full((m, m), 1e6),
+                            latency=np.zeros((m, m)), seed=seed)
+    register_network("flat-test", builder, overwrite=True)
+    assert "flat-test" in network_names()
+    cfg = DFLConfig(m=4, network="flat-test")
+    assert cfg.make_network_model(seed=0).name == "flat"
+
+
+# ---------------------------------------------------------------------------
+# Deadline participation
+# ---------------------------------------------------------------------------
+
+def test_deadline_mode_masks_slow_clients():
+    spec = ParticipationSpec(mode="deadline", deadline=0.1, min_active=0)
+    tt = np.array([0.01, 0.2, 0.05, 0.3])
+    rp = round_participation(spec, 4, 0, 5, transfer_times=tt)
+    np.testing.assert_array_equal(rp.active, [True, False, True, False])
+    np.testing.assert_array_equal(rp.steps, [5, 0, 5, 0])
+
+
+def test_deadline_min_active_keeps_fastest():
+    spec = ParticipationSpec(mode="deadline", deadline=0.001, min_active=2)
+    tt = np.array([0.4, 0.2, 0.5, 0.3])
+    rp = round_participation(spec, 4, 0, 5, transfer_times=tt)
+    # nobody makes the deadline; the floor keeps the two fastest
+    np.testing.assert_array_equal(rp.active, [False, True, False, True])
+
+
+def test_deadline_mode_requires_transfer_times():
+    spec = ParticipationSpec(mode="deadline", deadline=0.1)
+    with pytest.raises(ValueError, match="transfer_times"):
+        round_participation(spec, 4, 0, 5)
+
+
+def test_deadline_spec_validation():
+    with pytest.raises(ValueError, match="deadline"):
+        ParticipationSpec(mode="deadline")
+    with pytest.raises(ValueError, match="network"):
+        DFLConfig(m=4, participation=ParticipationSpec(mode="deadline",
+                                                       deadline=0.1))
+
+
+def test_deadline_schedule_deterministic():
+    net = make_network("lognormal", 8, seed=5)
+    w = make_gossip("ring", 8).matrix
+    tt = [net.transfer_times(w, 10_000, t) for t in range(6)]
+    spec = ParticipationSpec(mode="deadline", deadline=0.02)
+    a = participation_schedule(spec, 8, 6, 5, transfer_times=tt)
+    b = participation_schedule(spec, 8, 6, 5, transfer_times=tt)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.active, rb.active)
+        np.testing.assert_array_equal(ra.steps, rb.steps)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end through simulate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_deadline_round_bit_identical_to_schedule_mask():
+    """A deadline round must run through exactly the machinery of an
+    equivalent schedule mask: same active set => bit-identical state."""
+    loss_fn, params, sampler = _toy_problem()
+    net = make_network("wan-lan", 8, seed=2)
+    base = dict(algorithm="dfedadmm", m=8, K=3, topology="ring", lam=0.5)
+    rounds = 3
+
+    # 10 ms sits between the wan-lan LAN (~1 ms) and WAN (~20 ms)
+    # latencies, so exactly the site-boundary ring clients miss it
+    cfg_dl = DFLConfig(**base, network=net,
+                       participation=ParticipationSpec(mode="deadline",
+                                                       deadline=0.01))
+    state_dl, hist_dl = simulate(loss_fn, None, params, cfg_dl, sampler,
+                                 rounds=rounds, seed=0)
+
+    # reconstruct the realized masks and replay them as a schedule
+    from repro.core import make_codec
+    bytes_pc = make_codec(cfg_dl).bytes_per_client(params)
+    w = make_gossip("ring", 8).matrix
+    sched = []
+    for t in range(rounds):
+        tt = net.transfer_times(w, bytes_pc, t)
+        rp = round_participation(cfg_dl.participation, 8, t, 3,
+                                 transfer_times=tt)
+        assert 0 < rp.active.sum() < 8      # the mask actually bites
+        sched.append(tuple(np.flatnonzero(rp.active).tolist()))
+
+    cfg_sc = DFLConfig(**base, participation=ParticipationSpec(
+        mode="schedule", schedule=tuple(sched)))
+    state_sc, _ = simulate(loss_fn, None, params, cfg_sc, sampler,
+                           rounds=rounds, seed=0)
+
+    np.testing.assert_array_equal(np.asarray(state_dl.params["w"]),
+                                  np.asarray(state_sc.params["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(state_dl.solver["dual"]["w"]),
+        np.asarray(state_sc.solver["dual"]["w"]))
+    assert hist_dl["participation"][0] < 1.0
+
+
+@pytest.mark.slow
+def test_sim_time_recorded_and_int8_strictly_faster():
+    """int8 messages are smaller than identity, so on the same preset
+    every round's modeled time must be strictly smaller."""
+    loss_fn, params, sampler = _toy_problem()
+    base = dict(algorithm="dfedadmm", m=8, K=3, topology="ring",
+                network="wan-lan")
+    _, h_id = simulate(loss_fn, None, params, DFLConfig(**base), sampler,
+                       rounds=3, seed=0)
+    _, h_q = simulate(loss_fn, None, params,
+                      DFLConfig(**base, codec="int8"), sampler,
+                      rounds=3, seed=0)
+    assert len(h_id["sim_time"]) == 3
+    for a, b in zip(h_q["sim_time"], h_id["sim_time"]):
+        assert a < b
+    # and the model is deterministic: replaying identity gives the
+    # exact same modeled times
+    _, h_id2 = simulate(loss_fn, None, params, DFLConfig(**base), sampler,
+                        rounds=3, seed=0)
+    assert h_id["sim_time"] == h_id2["sim_time"]
+
+
+@pytest.mark.slow
+def test_simulate_cfl_records_sim_time():
+    """The CFL simulator shares the history schema: with a network model
+    each round records compute + the slowest cohort upload."""
+    import jax.numpy as jnp
+    from repro.core import CFLConfig, simulate_cfl
+
+    loss_fn, params, _ = _toy_problem()
+    cfg = CFLConfig(algorithm="fedavg", m=8, participation=0.5, K=3,
+                    network="hub-and-spoke")
+
+    def sampler(t, ids):
+        r = np.random.default_rng((1, t))
+        x = r.normal(size=(len(ids), 3, 16, 6)).astype(np.float32)
+        y = x.sum(-1, keepdims=True).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    _, hist = simulate_cfl(loss_fn, None, params, cfg, sampler,
+                           rounds=2, seed=0)
+    assert len(hist["sim_time"]) == 2
+    assert all(s > 0 for s in hist["sim_time"])
+
+
+@pytest.mark.slow
+def test_simulate_without_network_has_no_sim_time():
+    loss_fn, params, sampler = _toy_problem()
+    cfg = DFLConfig(algorithm="dfedavg", m=8, K=3, topology="ring")
+    _, hist = simulate(loss_fn, None, params, cfg, sampler,
+                       rounds=2, seed=0)
+    assert "sim_time" not in hist

@@ -1,0 +1,69 @@
+"""Markdown link checker for the docs tree (no dependencies, no network).
+
+Walks the repo's documentation surfaces (README.md, ROADMAP.md,
+EXPERIMENTS.md, docs/*.md) and verifies that every relative link target
+exists on disk (anchors stripped), resolved relative to the file that
+makes the link.
+
+External (http/https/mailto) links are not fetched — CI must stay
+hermetic.  Exit status 1 on any broken link, listing all of them.
+
+Usage: ``python tools/check_links.py [root]``
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — excluding images' leading ! is harmless to include
+_LINK = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+
+SURFACES = ("README.md", "ROADMAP.md", "EXPERIMENTS.md", "CHANGES.md")
+
+
+def doc_files(root: str) -> list[str]:
+    files = [os.path.join(root, f) for f in SURFACES
+             if os.path.exists(os.path.join(root, f))]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files.extend(os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                     if f.endswith(".md"))
+    return files
+
+
+def check_file(path: str, root: str) -> list[str]:
+    errors = []
+    text = open(path).read()
+    for match in _LINK.finditer(text):
+        target = match.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):              # intra-page anchor
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, root)}: broken link "
+                          f"{target!r} -> {os.path.relpath(resolved, root)}")
+    return errors
+
+
+def main(argv=None) -> int:
+    root = (argv or sys.argv[1:] or ["."])[0]
+    files = doc_files(root)
+    if not files:
+        print("check_links: no markdown surfaces found", file=sys.stderr)
+        return 1
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
