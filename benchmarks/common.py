@@ -2,7 +2,18 @@
 
 Output contract (benchmarks/run.py): one CSV line per measurement,
 ``name,us_per_call,derived`` where ``derived`` is the benchmark-specific
-quality metric (accuracy, rounds-to-target, psi, bytes, ...).
+quality metric (accuracy, rounds-to-target, psi, bytes, ...).  ``emit``
+also appends a structured record to ``ROWS`` so ``benchmarks/run.py
+--dump-json`` can persist every suite as a schema'd ``BENCH_<suite>.json``
+artifact (compared against the committed baselines by
+``tools/bench_compare.py`` in CI).
+
+Timing convention: ``time_stats`` measures median-of-N with warmup and
+reports the spread (IQR) alongside, so a single scheduler hiccup cannot
+move the number a CI gate sees; ``run_dfl``/``run_cfl`` report the
+steady-state us/round (median over post-compile rounds from
+``history["wall_us"]``), not total-wall/rounds, which was dominated by
+the one-off jit compile.
 """
 from __future__ import annotations
 
@@ -13,16 +24,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-ROWS: list[tuple[str, float, str]] = []
+# structured measurement records, appended by emit(): one dict per CSV
+# row — {"name", "us_per_call", "spread_us" (None when the measurement
+# carries no repeat statistics), "derived"}
+ROWS: list[dict] = []
 
 
-def emit(name: str, us_per_call: float, derived) -> None:
-    ROWS.append((name, us_per_call, str(derived)))
+def emit(name: str, us_per_call: float, derived,
+         spread_us: float | None = None) -> None:
+    ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                 "spread_us": None if spread_us is None else float(spread_us),
+                 "derived": str(derived)})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall-time per call in microseconds (blocking on outputs)."""
+def time_stats(fn, *args, warmup: int = 2, iters: int = 7) -> dict:
+    """Repeat-timing statistics for ``fn(*args)`` (blocking on outputs):
+    ``{"median_us", "spread_us", "min_us", "iters", "warmup"}`` with
+    ``spread_us`` the interquartile range — the noise scale a regression
+    threshold has to clear (``tools/bench_compare.py``)."""
+    if warmup < 1 or iters < 1:
+        raise ValueError(f"need warmup >= 1 and iters >= 1, "
+                         f"got {warmup=}, {iters=}")
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -30,7 +53,28 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    us = np.asarray(ts) * 1e6
+    q25, med, q75 = np.percentile(us, [25, 50, 75])
+    return {"median_us": float(med), "spread_us": float(q75 - q25),
+            "min_us": float(us.min()), "iters": iters, "warmup": warmup}
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
+    """Median wall-time per call in microseconds (median-of-``iters``
+    after ``warmup`` discarded calls; use ``time_stats`` for the spread)."""
+    return time_stats(fn, *args, warmup=warmup, iters=iters)["median_us"]
+
+
+def steady_state_us(hist: dict) -> tuple[float, float]:
+    """(median, IQR) of the post-compile per-round wall time from
+    ``history["wall_us"]`` — round 0 pays the jit compile and is
+    excluded whenever there is more than one round."""
+    wall = hist.get("wall_us") or []
+    if not wall:
+        return float("nan"), 0.0
+    steady = wall[1:] if len(wall) > 1 else wall
+    q25, med, q75 = np.percentile(np.asarray(steady), [25, 50, 75])
+    return float(med), float(q75 - q25)
 
 
 # ---------------------------------------------------------------------------
@@ -76,14 +120,18 @@ def accuracy(params, task) -> float:
 def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
             lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5,
             participation=None, transport="", codec="identity",
-            codec_bits=8, codec_k=64, network=None):
+            codec_bits=8, codec_k=64, use_kernel=False, network=None):
     """Run a DFL algorithm on the synthetic federated task; returns
-    (final_acc, history, us_per_round).  ``participation`` is an optional
-    ``repro.core.ParticipationSpec`` scenario (default: every client,
-    every round); ``transport``/``codec`` select the communication layer
-    (``repro.core.comm``) — the history carries per-round wire bytes —
-    and ``network`` a cost-model preset (``repro.core.network``) — the
-    history then also carries per-round modeled wall-clock seconds."""
+    (final_acc, history, us_per_round) — us_per_round is the
+    steady-state median over post-compile rounds (``steady_state_us``).
+    ``participation`` is an optional ``repro.core.ParticipationSpec``
+    scenario (default: every client, every round); ``transport``/
+    ``codec``/``use_kernel`` select the communication layer
+    (``repro.core.comm``; ``use_kernel`` dispatches the fused Pallas
+    round, including the fused quantized-gossip kernel on the dense
+    path) — the history carries per-round wire bytes — and ``network`` a
+    cost-model preset (``repro.core.network``) — the history then also
+    carries per-round modeled wall-clock seconds."""
     from repro.core import (DFLConfig, ParticipationSpec, mean_params,
                             simulate)
     task = fl_task()
@@ -98,6 +146,7 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
                     lam=lam, rho=rho, degree=min(10, m - 1),
                     transport=transport, codec=codec,
                     codec_bits=codec_bits, codec_k=codec_k,
+                    use_kernel=use_kernel,
                     participation=participation or ParticipationSpec(),
                     network=network)
     params = mlp_init(task.dim, task.n_classes, seed=seed)
@@ -105,12 +154,11 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
     def eval_fn(p):
         return {"acc": accuracy(p, task)}
 
-    t0 = time.perf_counter()
     state, hist = simulate(ce_loss, eval_fn, params, cfg, sampler,
                            rounds=rounds, seed=seed, eval_every=eval_every)
-    dt = time.perf_counter() - t0
     final_acc = accuracy(mean_params(state.params), task)
-    return final_acc, hist, dt / rounds * 1e6
+    us, _ = steady_state_us(hist)
+    return final_acc, hist, us
 
 
 def run_cfl(algo: str, *, rounds: int, alpha, m=16, K=5, lr=0.1, seed=0):
@@ -125,11 +173,10 @@ def run_cfl(algo: str, *, rounds: int, alpha, m=16, K=5, lr=0.1, seed=0):
 
     cfg = CFLConfig(algorithm=algo, m=m, participation=0.25, K=K, lr=lr)
     params = mlp_init(task.dim, task.n_classes, seed=seed)
-    t0 = time.perf_counter()
     state, hist = simulate_cfl(ce_loss, None, params, cfg, sampler,
                                rounds=rounds, seed=seed)
-    dt = time.perf_counter() - t0
-    return accuracy(state.global_params, task), hist, dt / rounds * 1e6
+    us, _ = steady_state_us(hist)
+    return accuracy(state.global_params, task), hist, us
 
 
 def rounds_from_history(hist, target):

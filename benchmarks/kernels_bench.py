@@ -1,40 +1,85 @@
 """Kernel micro-benchmarks: fused Pallas ops (interpret mode on CPU — a
 correctness-speed proxy, not TPU wall time) vs the jnp reference, plus
-the arch-scale DFL round step cost on smoke configs."""
+the fused quantized-gossip kernel against its composed
+quantize -> dequantize -> mix chain.
+
+``quick=True`` is the CI smoke subset: one size per kernel and no
+selective scan (interpret mode makes it a Python loop), so the PR perf
+job finishes in seconds; row names carry their sizes, and the committed
+baseline ``benchmarks/baselines/BENCH_kernels.json`` is the quick
+variant the CI gate compares against.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_stats
 
 
-def run():
+def _emit_timed(name, fn, *args, derived="oracle"):
+    st = time_stats(fn, *args)
+    emit(name, st["median_us"], derived, spread_us=st["spread_us"])
+    return st
+
+
+def run(quick: bool = False):
     rng = np.random.default_rng(0)
-    for n in (1 << 16, 1 << 20):
+    sizes = (1 << 16,) if quick else (1 << 16, 1 << 20)
+    for n in sizes:
         x, g, d, a = (jnp.asarray(rng.normal(size=n), jnp.float32)
                       for _ in range(4))
         f_ref = jax.jit(lambda x, g, d, a: ref.admm_update(
             x, g, d, a, lr=0.1, lam=0.2))
-        us = time_fn(f_ref, x, g, d, a)
-        emit(f"kernel/admm_update/jnp/n={n}", us, "oracle")
+        _emit_timed(f"kernel/admm_update/jnp/n={n}", f_ref, x, g, d, a)
         f_k = jax.jit(lambda x, g, d, a: ops.admm_update(
             x, g, d, a, lr=0.1, lam=0.2))
-        us_k = time_fn(f_k, x, g, d, a)
         err = float(jnp.max(jnp.abs(f_k(x, g, d, a) - f_ref(x, g, d, a))))
-        emit(f"kernel/admm_update/pallas-interpret/n={n}", us_k,
-             f"max_err={err:.2e}")
+        _emit_timed(f"kernel/admm_update/pallas-interpret/n={n}", f_k,
+                    x, g, d, a, derived=f"max_err={err:.2e}")
 
     m = 16
+    n = 1 << 14 if quick else 1 << 16
     w = jnp.asarray(rng.random((m, m)), jnp.float32)
-    z = jnp.asarray(rng.normal(size=(m, 1 << 16)), jnp.float32)
+    w = w / jnp.sum(w, 1, keepdims=True)
+    z = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
     f_ref = jax.jit(lambda w, z: ref.gossip_matmul(w, z))
-    emit("kernel/gossip_matmul/jnp/n=65536", time_fn(f_ref, w, z), "oracle")
+    _emit_timed(f"kernel/gossip_matmul/jnp/n={n}", f_ref, w, z)
     f_k = jax.jit(lambda w, z: ops.gossip_mix_leaf(w, z))
     err = float(jnp.max(jnp.abs(f_k(w, z) - f_ref(w, z))))
-    emit("kernel/gossip_matmul/pallas-interpret/n=65536",
-         time_fn(f_k, w, z), f"max_err={err:.2e}")
+    _emit_timed(f"kernel/gossip_matmul/pallas-interpret/n={n}", f_k, w, z,
+                derived=f"max_err={err:.2e}")
+
+    # fused quantized gossip (the int8/int4 wire hot path): the composed
+    # quantize -> dequantize -> gate -> mix jnp chain vs one fused Pallas
+    # kernel — the chain the non-kernel QuantizeCodec+DenseTransport
+    # path runs every round
+    r = jnp.asarray(rng.normal(size=(m, n)) * 0.01, jnp.float32)
+    u = jnp.asarray(rng.random((m, n)), jnp.float32)
+    for bits in (8, 4):
+        qmax = float(2 ** (bits - 1) - 1)
+
+        def composed(w, z, r, u, _qmax=qmax, _bits=bits):
+            e = z + r
+            scale = (jnp.maximum(jnp.max(jnp.abs(e), 1), 1e-12)
+                     / _qmax).reshape(-1, 1)
+            return ref.gossip_quant(w, z, r, u, scale, bits=_bits)
+
+        f_ref = jax.jit(composed)
+        _emit_timed(f"kernel/gossip_quant/jnp-composed/bits={bits}/n={n}",
+                    f_ref, w, z, r, u)
+        f_k = jax.jit(lambda w, z, r, u, _bits=bits: ops.quantize_mix_leaf(
+            w, z, r, u, bits=_bits))
+        yk, rk = f_k(w, z, r, u)
+        yr, rr = f_ref(w, z, r, u)
+        err = max(float(jnp.max(jnp.abs(yk - yr))),
+                  float(jnp.max(jnp.abs(rk - rr))))
+        _emit_timed(f"kernel/gossip_quant/pallas-fused/bits={bits}/n={n}",
+                    f_k, w, z, r, u, derived=f"max_err={err:.2e}")
+
+    if quick:
+        return
 
     # fused selective scan (small shape — interpret mode is a Python loop)
     b, s, d_, n_ = 1, 64, 128, 16
@@ -46,10 +91,10 @@ def run():
     dsk = jnp.asarray(rng.normal(size=(d_,)), jnp.float32)
     h0 = jnp.zeros((b, d_, n_), jnp.float32)
     f_ref = jax.jit(lambda *a: ref.selective_scan(*a)[0])
-    emit(f"kernel/selective_scan/jnp/s={s}",
-         time_fn(f_ref, x, dt, a_log, bm, cm, dsk, h0), "oracle")
+    _emit_timed(f"kernel/selective_scan/jnp/s={s}", f_ref,
+                x, dt, a_log, bm, cm, dsk, h0)
     f_k = jax.jit(lambda *a: ops.selective_scan(*a)[0])
     err = float(jnp.max(jnp.abs(f_k(x, dt, a_log, bm, cm, dsk, h0)
                                 - f_ref(x, dt, a_log, bm, cm, dsk, h0))))
-    emit(f"kernel/selective_scan/pallas-interpret/s={s}",
-         time_fn(f_k, x, dt, a_log, bm, cm, dsk, h0), f"max_err={err:.2e}")
+    _emit_timed(f"kernel/selective_scan/pallas-interpret/s={s}", f_k,
+                x, dt, a_log, bm, cm, dsk, h0, derived=f"max_err={err:.2e}")

@@ -3,60 +3,104 @@
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
 ``--quick`` shrinks round counts for CI; default sizes reproduce the
 paper's qualitative orderings.
+
+``--dump-json DIR`` additionally persists each executed suite's rows as
+``DIR/BENCH_<suite>.json`` (schema documented in docs/benchmarks.md):
+the artifact the CI perf job uploads and feeds to
+``tools/bench_compare.py`` against the committed baselines in
+``benchmarks/baselines/``.  All non-timing fields are deterministic for
+a fixed seed — only ``us_per_call``/``spread_us`` vary between runs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
+BENCH_SCHEMA_VERSION = 1
 
 SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
           "roofline", "participation", "comm", "net")
+
+
+def _run_suite(suite: str, quick: bool) -> None:
+    if suite == "table1":
+        from benchmarks import table1_accuracy
+        table1_accuracy.run(rounds=15 if quick else 40)
+    elif suite == "table2":
+        from benchmarks import table2_topology
+        table2_topology.run(rounds=12 if quick else 30)
+    elif suite == "table345":
+        from benchmarks import table345_convergence
+        table345_convergence.run(max_rounds=16 if quick else 40,
+                                 target=0.6 if quick else 0.7)
+    elif suite == "fig3":
+        from benchmarks import fig3_ablations
+        fig3_ablations.run(rounds=10 if quick else 25)
+    elif suite == "kernels":
+        from benchmarks import kernels_bench
+        kernels_bench.run(quick=quick)
+    elif suite == "arch_step":
+        from benchmarks import arch_step_bench
+        archs = ("llama3-8b", "mixtral-8x7b", "falcon-mamba-7b",
+                 "zamba2-1.2b") if quick else None
+        arch_step_bench.run(archs)
+    elif suite == "roofline":
+        from benchmarks import roofline_report
+        roofline_report.run()
+    elif suite == "participation":
+        from benchmarks import participation_bench
+        participation_bench.run(rounds=10 if quick else 20)
+    elif suite == "comm":
+        from benchmarks import comm_bench
+        comm_bench.run(rounds=10 if quick else 20,
+                       target=0.5 if quick else 0.6)
+    elif suite == "net":
+        from benchmarks import net_bench
+        net_bench.run(rounds=10 if quick else 20,
+                      target=0.5 if quick else 0.8)
+    else:
+        raise ValueError(f"unknown suite {suite!r}")
+
+
+def dump_suite_json(path: str, suite: str, rows: list[dict],
+                    quick: bool) -> None:
+    """Write one suite's structured rows as a ``BENCH_<suite>.json``
+    artifact.  Everything except ``us_per_call``/``spread_us`` is
+    deterministic for a fixed seed (no timestamps, no host info), so two
+    runs differ only in the timing fields — pinned by
+    tests/test_bench.py."""
+    doc = {"schema": BENCH_SCHEMA_VERSION, "suite": suite, "quick": quick,
+           "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--suite", action="append", choices=SUITES)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dump-json", metavar="DIR", default=None,
+                    help="persist each suite's rows as DIR/BENCH_<suite>.json")
     args = ap.parse_args(argv)
     suites = args.suite or list(SUITES)
+    if args.dump_json:
+        os.makedirs(args.dump_json, exist_ok=True)
+
+    from benchmarks import common
 
     print("name,us_per_call,derived")
-    if "table1" in suites:
-        from benchmarks import table1_accuracy
-        table1_accuracy.run(rounds=15 if args.quick else 40)
-    if "table2" in suites:
-        from benchmarks import table2_topology
-        table2_topology.run(rounds=12 if args.quick else 30)
-    if "table345" in suites:
-        from benchmarks import table345_convergence
-        table345_convergence.run(max_rounds=16 if args.quick else 40,
-                                 target=0.6 if args.quick else 0.7)
-    if "fig3" in suites:
-        from benchmarks import fig3_ablations
-        fig3_ablations.run(rounds=10 if args.quick else 25)
-    if "kernels" in suites:
-        from benchmarks import kernels_bench
-        kernels_bench.run()
-    if "arch_step" in suites:
-        from benchmarks import arch_step_bench
-        archs = ("llama3-8b", "mixtral-8x7b", "falcon-mamba-7b",
-                 "zamba2-1.2b") if args.quick else None
-        arch_step_bench.run(archs)
-    if "roofline" in suites:
-        from benchmarks import roofline_report
-        roofline_report.run()
-    if "participation" in suites:
-        from benchmarks import participation_bench
-        participation_bench.run(rounds=10 if args.quick else 20)
-    if "comm" in suites:
-        from benchmarks import comm_bench
-        comm_bench.run(rounds=10 if args.quick else 20,
-                       target=0.5 if args.quick else 0.6)
-    if "net" in suites:
-        from benchmarks import net_bench
-        net_bench.run(rounds=10 if args.quick else 20,
-                      target=0.5 if args.quick else 0.8)
+    for suite in SUITES:
+        if suite not in suites:
+            continue
+        start = len(common.ROWS)
+        _run_suite(suite, args.quick)
+        if args.dump_json:
+            dump_suite_json(
+                os.path.join(args.dump_json, f"BENCH_{suite}.json"),
+                suite, common.ROWS[start:], args.quick)
     return 0
 
 

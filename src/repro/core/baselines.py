@@ -16,6 +16,7 @@ both substrates for free.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -168,13 +169,16 @@ def simulate_cfl(loss_fn, eval_fn, params: PyTree, cfg: CFLConfig,
     net = None if cfg.network is None else \
         make_network(cfg.network, cfg.m, seed=seed)
     history: dict[str, list] = {"round": [], "loss": [], "lr": [],
-                                "wire_bytes": [], "eval": {}}
+                                "wire_bytes": [], "wall_us": [], "eval": {}}
     if net is not None:
         history["sim_time"] = []
     for t in range(rounds):
         ids = rng.choice(cfg.m, size=cfg.cohort, replace=False)
         batches = sample_batches(t, ids)
+        t0 = time.perf_counter()
         state, metrics = round_fn(state, jnp.asarray(ids), batches)
+        jax.block_until_ready((state.global_params, metrics))
+        history["wall_us"].append((time.perf_counter() - t0) * 1e6)
         history["round"].append(t)
         history["loss"].append(float(metrics["loss"]))
         history["lr"].append(float(metrics["lr"]))

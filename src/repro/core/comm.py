@@ -371,6 +371,33 @@ class QuantizeCodec(MessageCodec):
                 out.append((w["q"].astype(jnp.float32) * sb).astype(dtype))
         return jax.tree.unflatten(treedef, out)
 
+    def encode_mix_dense(self, z, w, resid=None, rng=None, active=None):
+        """Fused wire + mix for the dense transport: one Pallas kernel
+        per leaf quantizes the error-compensated message, mixes the
+        dequantized estimates with ``w``, and carries the error-feedback
+        residual (``kernels/gossip_quant``) — the int8 wire values and
+        the f32 message estimates are never materialized in HBM.
+
+        Mathematically identical to ``encode`` -> ``decode`` -> the
+        dense ``Transport.mix`` (same PRNG derivation per leaf, so the
+        stochastic rounding sees the same uniform bits); dispatched by
+        the round loop via :func:`can_fuse_dense`.  Returns
+        ``(x, resid')``.
+        """
+        from repro.kernels import ops
+        leaves, treedef = jax.tree.flatten(z)
+        rleaves = jax.tree.leaves(resid) if resid is not None else \
+            [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+        mixed, new_resid = [], []
+        for leaf, r, key in zip(leaves, rleaves, _leaf_rngs(rng, leaves)):
+            u = jax.random.uniform(key, leaf.shape, jnp.float32)
+            y, rr = ops.quantize_mix_leaf(w, leaf, r, u, active,
+                                          bits=self.bits)
+            mixed.append(y)
+            new_resid.append(rr.astype(jnp.float32))
+        return (jax.tree.unflatten(treedef, mixed),
+                jax.tree.unflatten(treedef, new_resid))
+
     def bytes_per_client(self, params_single: PyTree) -> int:
         total = 0
         for leaf in jax.tree.leaves(params_single):
@@ -511,6 +538,17 @@ class RandKCodec(_SparseCodec):
         return int(total)
 
 
+def can_fuse_dense(transport: Transport, codec: MessageCodec) -> bool:
+    """True when this transport/codec pair takes the fused quantized-
+    gossip kernel: a ``DenseTransport`` plan is the (m, m) matrix itself,
+    so ``QuantizeCodec.encode_mix_dense`` can collapse encode -> decode
+    -> mix into one Pallas kernel per leaf (gated by ``use_kernel``).
+    Other transports (gated permutes, push-sum weight algebra) keep the
+    composed path."""
+    return (isinstance(transport, DenseTransport)
+            and isinstance(codec, QuantizeCodec) and codec.use_kernel)
+
+
 # user-registered codec factories (register_codec); the builtin names in
 # ``CODECS`` are resolved by the if-chain in make_codec
 _CODEC_REGISTRY = FactoryRegistry("codec", CODECS)
@@ -541,7 +579,9 @@ def make_codec(cfg) -> MessageCodec:
     if name == "identity":
         return IdentityCodec()
     if name == "int8":
-        return QuantizeCodec(bits=cfg.codec_bits, use_kernel=cfg.use_kernel)
+        uk = getattr(cfg, "use_kernel", False)
+        return QuantizeCodec(bits=cfg.codec_bits,
+                             use_kernel=uk is True or uk == "comm")
     if name == "topk":
         return TopKCodec(k=cfg.codec_k)
     if name == "randk":

@@ -13,6 +13,7 @@ State layout: every leaf carries a leading client axis of size ``m``.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Callable
 
@@ -55,7 +56,9 @@ class DFLConfig:
                                  # "topk" | "randk"
     codec_bits: int = 8          # int8 codec: bits per value (2..8)
     codec_k: int = 64            # topk/randk codecs: kept entries per leaf
-    use_kernel: bool = False     # fused Pallas inner update + codec kernel
+    use_kernel: Any = False      # fused Pallas kernels: True = solver
+                                 # inner update AND codec; "solver" /
+                                 # "comm" select one side only
     microbatches: int = 1        # grad-accumulation splits per inner step
                                  # (exact for SGD; SAM perturbs per split)
     participation: ParticipationSpec = ParticipationSpec()
@@ -94,6 +97,10 @@ class DFLConfig:
                              f"got {self.codec_bits}")
         if self.codec_k < 1:
             raise ValueError(f"codec_k must be >= 1, got {self.codec_k}")
+        if self.use_kernel not in (True, False, "comm", "solver"):
+            raise ValueError(
+                f"use_kernel must be a bool, 'comm', or 'solver', "
+                f"got {self.use_kernel!r}")
         if self.topology in DIRECTED_TOPOLOGIES and eff != "pushsum":
             raise ValueError(
                 f"directed topology {self.topology!r} is only sound under "
@@ -245,11 +252,13 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                                         client_axis=client_axis,
                                         inner_specs=param_inner_specs)
     codec = comm_lib.make_codec(cfg)
+    fused = comm_lib.can_fuse_dense(transport, codec)
     solver = solvers_lib.make_solver(cfg)
     masked = not cfg.participation.is_trivial
 
-    loss_and_grad = sam.sam_value_and_grad(loss_fn, solver.sam_rho,
-                                           use_kernel=cfg.use_kernel)
+    loss_and_grad = sam.sam_value_and_grad(
+        loss_fn, solver.sam_rho,
+        use_kernel=cfg.use_kernel is True or cfg.use_kernel == "solver")
 
     if cfg.microbatches > 1:
         inner_lg = loss_and_grad
@@ -359,20 +368,36 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
         if codec.stateful:
             codec_rng = jax.random.fold_in(
                 jax.random.fold_in(state.rng[0], state.round), 0x51AB3)
-            wire, new_resid = codec.encode(z, aux.get("residual"), codec_rng,
-                                           active if masked else None)
-            zhat = codec.decode(wire)
-            if masked:
-                # an inactive client transmits nothing — its self-message
-                # must round-trip exactly so the identity row of the
-                # masked plan holds it in place
-                zhat = jax.tree.map(
-                    lambda a, b: jnp.where(
-                        active.reshape((cfg.m,) + (1,) * (a.ndim - 1)), a, b),
-                    zhat, z)
+            if fused:
+                # dense transport + quantize codec + use_kernel: the plan
+                # IS the (m, m) matrix, so encode -> decode -> mix
+                # collapses into one fused Pallas kernel per leaf (the
+                # inactive-client gating included) — no f32 message
+                # copies, no int8 wire tensor
+                new_params, new_resid = codec.encode_mix_dense(
+                    z, plan, aux.get("residual"), codec_rng,
+                    active if masked else None)
+                new_ps = aux.get("ps_weight")
+            else:
+                wire, new_resid = codec.encode(z, aux.get("residual"),
+                                               codec_rng,
+                                               active if masked else None)
+                zhat = codec.decode(wire)
+                if masked:
+                    # an inactive client transmits nothing — its
+                    # self-message must round-trip exactly so the identity
+                    # row of the masked plan holds it in place
+                    zhat = jax.tree.map(
+                        lambda a, b: jnp.where(
+                            active.reshape((cfg.m,) + (1,) * (a.ndim - 1)),
+                            a, b),
+                        zhat, z)
+                new_params, new_ps = transport.mix(zhat, plan,
+                                                   aux.get("ps_weight"))
         else:
             zhat, new_resid = z, None
-        new_params, new_ps = transport.mix(zhat, plan, aux.get("ps_weight"))
+            new_params, new_ps = transport.mix(zhat, plan,
+                                               aux.get("ps_weight"))
 
         new_comm = state.comm
         if state.comm is not None:
@@ -483,7 +508,7 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
 
     history: dict[str, list] = {"round": [], "loss": [], "lr": [],
                                 "consensus_sq": [], "dual_norm": [],
-                                "wire_bytes": []}
+                                "wire_bytes": [], "wall_us": []}
     if not trivial:
         history["participation"] = []
     if net is not None:
@@ -491,6 +516,7 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     eval_hist: dict[str, list] = {}
     for t in range(rounds):
         batches = sample_batches(t)
+        t0 = time.perf_counter()
         if trivial:
             plan = transport.prepare(specs[t])
             state, metrics = round_fn(state, batches, plan)
@@ -501,8 +527,13 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
             state, metrics = round_fn(state, batches, plan,
                                       jnp.asarray(rp.active),
                                       jnp.asarray(rp.steps))
-            history["participation"].append(float(metrics["participation"]))
             n_active = int(rp.active.sum())
+        jax.block_until_ready((state.params, metrics))
+        # round 0 carries the jit compile; steady-state cost is the
+        # median of wall_us[1:] (benchmarks.common.run_dfl reports that)
+        history["wall_us"].append((time.perf_counter() - t0) * 1e6)
+        if not trivial:
+            history["participation"].append(float(metrics["participation"]))
         history["wire_bytes"].append(bytes_per_client * n_active)
         if net is not None:
             history["sim_time"].append(net.round_time(

@@ -300,7 +300,8 @@ def make_solver(cfg) -> LocalSolver:
 
 
 def _uk(cfg) -> bool:
-    return getattr(cfg, "use_kernel", False)
+    uk = getattr(cfg, "use_kernel", False)
+    return uk is True or uk == "solver"
 
 
 # The paper's six DFL algorithms ...

@@ -1,0 +1,84 @@
+"""Fused quantized-gossip kernel: dequantize -> mix -> requantize residual.
+
+One round of compressed gossip (``QuantizeCodec`` + ``DenseTransport``)
+is, per leaf::
+
+    e    = z + resid                       error-compensated message
+    q    = clip(floor(e / s + u), +-qmax)  stochastic rounding (wire)
+    zhat = q * s                           what receivers reconstruct
+    r'   = e - zhat                        error-feedback carry
+    x    = W @ sel(zhat, z)                gossip contraction
+                                           (sel: inactive clients gossip
+                                           their raw self-message)
+
+Composed from ``quantize.py`` + ``gossip_matmul.py`` this round-trips a
+full f32 copy of every client's message through HBM three times (encode
+writes q and r, decode writes zhat, the matmul reads zhat).  This kernel
+fuses the whole chain over the same column-tile loop as
+``gossip_matmul``: W, the per-client scale, and the participation gate
+stay resident in VMEM for the whole grid while z/resid/u stream through
+in (m, 512) tiles — each tile is quantized, dequantized, gated, and
+contracted in registers, and only the mixed output x and the new
+residual r' are ever written back.  The int8 wire tensor is never
+materialized (the simulation models its bytes; nothing consumes its
+value once x and r' exist).
+
+The per-client scale ``s = max|e| / qmax`` is a full-row reduction, so
+it is computed by the ops wrapper in a first pass (exactly like
+``quantize_leaf``); randomness rides in as a precomputed uniform plane
+so kernel and oracle see identical bits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL_TILE = 512
+
+
+def _kernel(w_ref, z_ref, r_ref, u_ref, scale_ref, act_ref, y_ref, rout_ref,
+            *, qmax):
+    z = z_ref[...].astype(jnp.float32)
+    e = z + r_ref[...].astype(jnp.float32)
+    s = scale_ref[...].astype(jnp.float32)          # (m, 1), broadcasts
+    q = jnp.clip(jnp.floor(e / s + u_ref[...]), -qmax, qmax)
+    zhat = q * s
+    a = act_ref[...].astype(jnp.float32)            # (m, 1) gate in {0, 1}
+    # inactive clients transmit nothing: their raw message mixes (the
+    # identity row of the masked W holds them in place) and their
+    # residual passes through untouched
+    zsel = a * zhat + (1.0 - a) * z
+    rout_ref[...] = (a * (e - zhat)
+                     + (1.0 - a) * r_ref[...].astype(jnp.float32)
+                     ).astype(rout_ref.dtype)
+    w = w_ref[...].astype(jnp.float32)
+    y_ref[...] = jnp.dot(w, zsel,
+                         preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+def gossip_quant_2d(w, z, resid, u, scale, active, *, bits: int = 8,
+                    interpret: bool = True, col_tile: int = COL_TILE):
+    """w: (m, m) f32; z/resid/u: (m, N); scale/active: (m, 1) f32.
+
+    Returns ``(x, resid')`` — the mixed parameters ``W @ sel(zhat, z)``
+    in ``z.dtype`` and the new error-feedback residual in ``resid.dtype``
+    — without materializing zhat or the int8 wire tensor.
+    """
+    m, n = z.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    grid = (pl.cdiv(n, col_tile),)
+    spec = pl.BlockSpec((m, col_tile), lambda j: (0, j))
+    col = pl.BlockSpec((m, 1), lambda j: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, m), lambda j: (0, 0)),
+                  spec, spec, spec, col, col],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(z.shape, z.dtype),
+                   jax.ShapeDtypeStruct(z.shape, resid.dtype)],
+        interpret=interpret,
+    )(w, z, resid, u, scale, active)

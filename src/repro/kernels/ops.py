@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import admm_update as _admm
 from repro.kernels import gossip_matmul as _gossip
+from repro.kernels import gossip_quant as _gq
 from repro.kernels import quantize as _quant
 from repro.kernels import sam_scale as _sam
 from repro.kernels import selective_scan as _sscan
@@ -172,6 +173,48 @@ def quantize_leaf(x, u, *, bits: int = 8, interpret: bool | None = None):
                               interpret=interpret)
     return (q[:m, :n].reshape(x.shape), scale,
             r[:m, :n].reshape(x.shape).astype(x.dtype))
+
+
+def quantize_mix_leaf(w, z, r, u, active=None, *, bits: int = 8,
+                      interpret: bool | None = None):
+    """Fused quantized gossip for ONE stacked (m, ...) leaf: quantize the
+    error-compensated message ``e = z + r``, mix the dequantized
+    estimates with ``W``, and carry the error-feedback residual — one
+    kernel, no materialized f32 message copies (``kernels/gossip_quant``).
+
+    ``u`` is a uniform-[0,1) array shaped like ``z`` (caller owns the
+    PRNG, so the fused path and the composed oracle see identical bits);
+    ``active`` an optional (m,) bool mask — inactive clients mix their
+    raw self-message and keep their residual.  Returns
+    ``(x (m, ...) z.dtype, resid' (m, ...) r.dtype)``.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    qmax = float(2 ** (bits - 1) - 1)
+    m = z.shape[0]
+    e = z.astype(jnp.float32) + r.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(e).reshape(m, -1), axis=1)
+    scale = jnp.maximum(absmax, jnp.float32(1e-12)) / qmax
+    # single grid step for small leaves (typical model layers): grid
+    # overhead, not FLOPs, dominates them — one 4 KiB-lane tile still
+    # fits VMEM comfortably at m <= 32
+    nflat = z.size // z.shape[0]
+    tile = _gq.COL_TILE if nflat > 4096 else max(LANE, -(-nflat // LANE) * LANE)
+    zp, _, n = _pad_client_planes(z, tile)
+    rp, _, _ = _pad_client_planes(r.astype(jnp.float32), tile)
+    up, _, _ = _pad_client_planes(u.astype(jnp.float32), tile)
+    mp = zp.shape[0]
+    # padded rows divide by 1.0 and quantize zeros (outputs discarded)
+    sp = jnp.pad(scale, (0, mp - m), constant_values=1.0)
+    act = jnp.ones((m,), jnp.float32) if active is None else \
+        active.astype(jnp.float32)
+    ap = jnp.pad(act, (0, mp - m), constant_values=1.0)
+    wp = jnp.pad(jnp.asarray(w, jnp.float32),
+                 ((0, mp - m), (0, mp - m)))
+    y, rout = _gq.gossip_quant_2d(wp, zp, rp, up, sp.reshape(-1, 1),
+                                  ap.reshape(-1, 1), bits=bits,
+                                  interpret=interpret, col_tile=tile)
+    return (y[:m, :n].reshape(z.shape).astype(z.dtype),
+            rout[:m, :n].reshape(z.shape).astype(r.dtype))
 
 
 def dequantize_leaf(q, scale, shape, dtype, *, interpret: bool | None = None):

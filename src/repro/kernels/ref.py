@@ -36,6 +36,23 @@ def gossip_matmul(w, z):
                       z.astype(jnp.float32)).astype(z.dtype)
 
 
+def gossip_quant(w, z, resid, u, scale, active=None, *, bits=8):
+    """Oracle for ``gossip_quant.gossip_quant_2d`` — the composed chain
+    quantize -> dequantize -> gate -> mix.
+
+    w (m, m) f32; z/resid/u (m, N); scale (m, 1) f32; active (m,) bool
+    or None (all active).  Returns ``(x z.dtype, resid' resid.dtype)``.
+    """
+    q, rr = quantize_stochastic(z.astype(jnp.float32) + resid.astype(
+        jnp.float32), scale, u, bits=bits)
+    zhat = dequantize(q, scale)
+    if active is not None:
+        gate = active.reshape(-1, 1)
+        zhat = jnp.where(gate, zhat, z.astype(jnp.float32))
+        rr = jnp.where(gate, rr, resid)
+    return gossip_matmul(w, zhat).astype(z.dtype), rr.astype(resid.dtype)
+
+
 def selective_scan(x, dt, a_log, b, c, dskip, h0):
     """Mamba-1 recurrence oracle via lax.scan over time.
 

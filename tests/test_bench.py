@@ -1,0 +1,198 @@
+"""Perf-regression harness: BENCH_*.json determinism, timing-stat
+contracts, and the ``tools/bench_compare.py`` CI gate (pass, regression,
+missing metric, new metric, noise guard)."""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.abspath(ROOT))          # "benchmarks" package
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare", os.path.join(ROOT, "tools", "bench_compare.py"))
+bench_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_compare)
+
+
+def _doc(rows, suite="kernels"):
+    return {"schema": 1, "suite": suite, "quick": True, "rows": rows}
+
+
+def _row(name, us, spread=None, derived="oracle"):
+    return {"name": name, "us_per_call": us, "spread_us": spread,
+            "derived": derived}
+
+
+# ---------------------------------------------------------------------------
+# tools/bench_compare.py semantics
+# ---------------------------------------------------------------------------
+
+def test_compare_passes_within_threshold():
+    base = _doc([_row("k/a", 100.0), _row("k/b", 50.0)])
+    cur = _doc([_row("k/a", 180.0), _row("k/b", 55.0)])
+    res = bench_compare.compare(base, cur, threshold=2.0)
+    assert not res["failed"] and len(res["ok"]) == 2
+    assert not res["regressions"] and not res["missing"] and not res["new"]
+
+
+def test_compare_fails_on_injected_slowdown():
+    base = _doc([_row("k/a", 100.0), _row("k/b", 50.0)])
+    cur = _doc([_row("k/a", 100.0), _row("k/b", 500.0)])   # 10x slowdown
+    res = bench_compare.compare(base, cur, threshold=2.0)
+    assert res["failed"]
+    assert [r["name"] for r in res["regressions"]] == ["k/b"]
+    assert res["regressions"][0]["ratio"] == pytest.approx(10.0)
+
+
+def test_compare_missing_metric_fails_unless_allowed():
+    base = _doc([_row("k/a", 100.0), _row("k/gone", 10.0)])
+    cur = _doc([_row("k/a", 100.0)])
+    res = bench_compare.compare(base, cur)
+    assert res["failed"] and [r["name"] for r in res["missing"]] == ["k/gone"]
+    res = bench_compare.compare(base, cur, allow_missing=True)
+    assert not res["failed"]
+
+
+def test_compare_new_metric_passes():
+    base = _doc([_row("k/a", 100.0)])
+    cur = _doc([_row("k/a", 100.0), _row("k/new", 9999.0)])
+    res = bench_compare.compare(base, cur)
+    assert not res["failed"]
+    assert [r["name"] for r in res["new"]] == ["k/new"]
+
+
+def test_compare_spread_noise_guard():
+    """A noisy metric (large baseline IQR) is allowed to exceed the
+    relative threshold by spread_mult * spread before it regresses."""
+    base = _doc([_row("k/noisy", 10.0, spread=50.0)])
+    cur = _doc([_row("k/noisy", 100.0)])        # 10x, but within 4 IQRs
+    res = bench_compare.compare(base, cur, threshold=2.0, spread_mult=4.0)
+    assert not res["failed"]
+    cur = _doc([_row("k/noisy", 300.0)])        # beyond both guards
+    res = bench_compare.compare(base, cur, threshold=2.0, spread_mult=4.0)
+    assert res["failed"]
+
+
+def test_compare_per_metric_threshold_override():
+    base = _doc([_row("k/hot", 100.0), _row("k/cold", 100.0)])
+    cur = _doc([_row("k/hot", 140.0), _row("k/cold", 140.0)])
+    res = bench_compare.compare(base, cur, threshold=2.0,
+                                metric_thresholds={"k/hot": 1.2})
+    assert [r["name"] for r in res["regressions"]] == ["k/hot"]
+
+
+def test_compare_cli_exit_codes(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_doc([_row("k/a", 100.0)])))
+    cur.write_text(json.dumps(_doc([_row("k/a", 120.0)])))
+    assert bench_compare.main([str(base), str(cur)]) == 0
+    cur.write_text(json.dumps(_doc([_row("k/a", 9000.0)])))
+    assert bench_compare.main([str(base), str(cur)]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    cur.write_text("{}")                        # schema error
+    assert bench_compare.main([str(base), str(cur)]) == 2
+    assert bench_compare.main([str(base), str(tmp_path / "nope.json")]) == 2
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.common timing contracts
+# ---------------------------------------------------------------------------
+
+def test_time_stats_contract():
+    from benchmarks import common
+    st = common.time_stats(lambda: sum(range(100)), warmup=1, iters=5)
+    assert st["iters"] == 5 and st["warmup"] == 1
+    assert st["min_us"] <= st["median_us"]
+    assert st["spread_us"] >= 0.0
+    assert common.time_fn(lambda: None, warmup=1, iters=3) >= 0.0
+    for bad in (dict(warmup=0), dict(iters=0)):
+        with pytest.raises(ValueError):
+            common.time_stats(lambda: None, **bad)
+
+
+def test_steady_state_us_drops_compile_round():
+    from benchmarks import common
+    med, iqr = common.steady_state_us({"wall_us": [1e6, 10.0, 12.0, 11.0]})
+    assert med == 11.0 and iqr <= 2.0            # round 0 excluded
+    med, _ = common.steady_state_us({"wall_us": [42.0]})
+    assert med == 42.0                           # single round: keep it
+    import math
+    med, iqr = common.steady_state_us({})
+    assert math.isnan(med) and iqr == 0.0
+
+
+def test_simulate_history_carries_wall_us():
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import DFLConfig, simulate
+
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(5, 2)) / 2, jnp.float32)}
+
+    def loss(p, batch, r):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    def sampler(t):
+        r = np.random.default_rng(t)
+        return {"x": jnp.asarray(r.normal(size=(4, 2, 8, 5)), jnp.float32),
+                "y": jnp.asarray(r.normal(size=(4, 2, 8, 2)), jnp.float32)}
+
+    cfg = DFLConfig(algorithm="dfedavg", m=4, K=2, topology="ring")
+    _, hist = simulate(loss, None, params, cfg, sampler, rounds=3)
+    assert len(hist["wall_us"]) == 3
+    assert all(t > 0 for t in hist["wall_us"])
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run --dump-json determinism
+# ---------------------------------------------------------------------------
+
+TIMING_FIELDS = ("us_per_call", "spread_us")
+
+
+def _strip_timing(doc):
+    return {**doc, "rows": [{k: v for k, v in r.items()
+                             if k not in TIMING_FIELDS}
+                            for r in doc["rows"]]}
+
+
+def test_dump_json_deterministic_across_runs(tmp_path, capsys):
+    """Two ``run.py --suite kernels --quick --dump-json`` invocations
+    agree on every non-timing field — names, derived metrics (max_err),
+    schema, suite, quick — so the CI artifact diffs clean."""
+    from benchmarks import run as brun
+    docs = []
+    for d in ("a", "b"):
+        out = tmp_path / d
+        assert brun.main(["--suite", "kernels", "--quick",
+                          "--dump-json", str(out)]) == 0
+        docs.append(json.loads((out / "BENCH_kernels.json").read_text()))
+    capsys.readouterr()
+    a, b = docs
+    assert a["schema"] == brun.BENCH_SCHEMA_VERSION
+    assert a["suite"] == "kernels" and a["quick"] is True
+    assert [r["name"] for r in a["rows"]] == [r["name"] for r in b["rows"]]
+    assert _strip_timing(a) == _strip_timing(b)
+    # timing fields exist and are positive (but are allowed to differ)
+    assert all(r["us_per_call"] > 0 for r in a["rows"])
+
+
+def test_dump_json_round_trips_through_compare(tmp_path, capsys):
+    """A fresh run compared against itself passes the gate; the same run
+    with a deliberately injected slowdown fails it."""
+    from benchmarks import run as brun
+    out = tmp_path / "run"
+    assert brun.main(["--suite", "kernels", "--quick",
+                      "--dump-json", str(out)]) == 0
+    capsys.readouterr()
+    path = out / "BENCH_kernels.json"
+    doc = json.loads(path.read_text())
+    assert bench_compare.compare(doc, doc)["failed"] is False
+    slow = {**doc, "rows": [{**r, "us_per_call": r["us_per_call"] * 100}
+                            for r in doc["rows"]]}
+    res = bench_compare.compare(doc, slow, threshold=3.0)
+    assert res["failed"] and len(res["regressions"]) == len(doc["rows"])

@@ -497,6 +497,39 @@ def test_masked_quantized_round_holds_inactive_state():
             np.asarray(state.comm["residual"]["w"][i]))
 
 
+@pytest.mark.parametrize("use_kernel", ["comm", True])
+@pytest.mark.parametrize("masked", [False, True])
+def test_fused_quantized_gossip_bit_identical_to_composed(use_kernel, masked):
+    """The fused quantize+EF+mix Pallas round through ``simulate`` is the
+    composed encode -> decode -> mix path bit for bit — both consume the
+    same fold_in-derived uniform draws, so stochastic rounding picks the
+    same integers.  ``use_kernel='comm'`` fuses only the wire path;
+    ``True`` additionally routes the solver kernels."""
+    m, K = 6, 2
+    params, _, loss, sampler = _lin_setup(m, K)
+    part = ParticipationSpec(mode="fraction", p=0.5) if masked else \
+        ParticipationSpec()
+    base = dict(algorithm="dfedadmm", m=m, K=K, lam=0.2, topology="full",
+                codec="int8", codec_bits=8, participation=part)
+    s_a, h_a = simulate(loss, None, params, DFLConfig(**base), sampler,
+                        rounds=5, seed=3)
+    s_b, h_b = simulate(loss, None, params,
+                        DFLConfig(**base, use_kernel=use_kernel), sampler,
+                        rounds=5, seed=3)
+    np.testing.assert_array_equal(np.asarray(s_a.params["w"]),
+                                  np.asarray(s_b.params["w"]))
+    np.testing.assert_array_equal(np.asarray(s_a.comm["residual"]["w"]),
+                                  np.asarray(s_b.comm["residual"]["w"]))
+    np.testing.assert_array_equal(np.asarray(h_a["loss"]),
+                                  np.asarray(h_b["loss"]))
+    assert h_a["wire_bytes"] == h_b["wire_bytes"]   # same modeled wire
+
+
+def test_config_rejects_unknown_use_kernel():
+    with pytest.raises(ValueError):
+        DFLConfig(use_kernel="codec")
+
+
 @pytest.mark.slow
 def test_pushsum_converges_like_symmetric_gossip():
     """Acceptance: a directed-ring push-sum run converges to the same

@@ -90,6 +90,85 @@ def test_kernel_grad_flows():
     assert np.all(np.isfinite(np.asarray(g)))
 
 
+GQ_SHAPES = [  # (m, ...) stacked client leaves, deliberately ragged
+    (4, 16), (8, 128), (3, 5, 17), (2, 513, 31), (6, 1000), (5, 4097),
+]
+
+
+def _gq_inputs(shape, dtype, seed):
+    m = shape[0]
+    rng = np.random.default_rng(seed)
+    w = rng.random((m, m)).astype(np.float32)
+    w /= w.sum(1, keepdims=True)
+    z = jnp.asarray(rng.normal(size=shape), dtype)
+    r = jnp.asarray(rng.normal(size=shape) * 0.01, jnp.float32)
+    u = jnp.asarray(rng.random(shape), jnp.float32)
+    return jnp.asarray(w), z, r, u
+
+
+def _gq_oracle(w, z, r, u, active=None, *, bits):
+    """Composed quantize -> dequantize -> gate -> mix reference on the
+    flattened (m, N) planes, scale derived exactly as the fused op does."""
+    m = z.shape[0]
+    qmax = float(2 ** (bits - 1) - 1)
+    e = z.astype(jnp.float32).reshape(m, -1) + r.reshape(m, -1)
+    scale = (jnp.maximum(jnp.max(jnp.abs(e), 1), 1e-12) / qmax).reshape(-1, 1)
+    y, rr = ref.gossip_quant(w, z.reshape(m, -1), r.reshape(m, -1),
+                             u.reshape(m, -1), scale, active, bits=bits)
+    return y.reshape(z.shape), rr.reshape(z.shape)
+
+
+@pytest.mark.parametrize("shape", GQ_SHAPES)
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gossip_quant_kernel_matches_composed(shape, bits, dtype):
+    w, z, r, u = _gq_inputs(shape, dtype, hash(shape) % 2**31 + bits)
+    y, rout = ops.quantize_mix_leaf(w, z, r, u, bits=bits)
+    yr, rr = _gq_oracle(w, z, r, u, bits=bits)
+    assert y.dtype == z.dtype and y.shape == z.shape
+    assert rout.dtype == r.dtype and rout.shape == r.shape
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(rout, np.float32),
+                               np.asarray(rr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(4, 16), (6, 1000), (3, 5, 17)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_gossip_quant_kernel_masked_matches_composed(shape, bits):
+    """Inactive clients mix their raw message and keep their residual —
+    gated inside the fused kernel, not by a post-hoc where()."""
+    w, z, r, u = _gq_inputs(shape, jnp.float32, 17 + bits)
+    m = shape[0]
+    active = jnp.asarray(np.arange(m) % 2 == 0)
+    y, rout = ops.quantize_mix_leaf(w, z, r, u, active, bits=bits)
+    yr, rr = _gq_oracle(w, z, r, u, active, bits=bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rout), np.asarray(rr),
+                               rtol=1e-5, atol=1e-6)
+    # inactive rows carry their residual through untouched
+    for i in np.flatnonzero(~np.asarray(active)):
+        np.testing.assert_array_equal(np.asarray(rout[i]), np.asarray(r[i]))
+
+
+def test_gossip_quant_kernel_under_jit_and_vmapped_w():
+    """Trace-compatible: jitted, with a traced gossip matrix (the round
+    fn feeds the masked plan as an argument, not a constant)."""
+    w, z, r, u = _gq_inputs((4, 200), jnp.float32, 99)
+
+    @jax.jit
+    def f(w_):
+        return ops.quantize_mix_leaf(w_, z, r, u, bits=8)
+
+    y, rout = f(w)
+    yr, rr = _gq_oracle(w, z, r, u, bits=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rout), np.asarray(rr),
+                               rtol=1e-5, atol=1e-6)
+
+
 SSCAN_SHAPES = [  # (B, S, D, N)
     (1, 8, 16, 4),
     (2, 64, 128, 16),

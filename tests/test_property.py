@@ -136,6 +136,70 @@ def test_chunked_ssm_invariant_to_chunk_size(b, s, d, n, chunk, seed):
                                rtol=1e-5, atol=1e-5)
 
 
+def _gq_case(m, n, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    w = rng.random((m, m)).astype(np.float32)
+    w /= w.sum(1, keepdims=True)
+    z = jnp.asarray(rng.normal(size=(m, n)), dtype)
+    r = jnp.asarray(rng.normal(size=(m, n)) * 0.01, jnp.float32)
+    u = jnp.asarray(rng.random((m, n)), jnp.float32)
+    return jnp.asarray(w), z, r, u
+
+
+@given(m=st.integers(2, 9), n=st.integers(1, 700),
+       bits=st.sampled_from([4, 8]), masked=st.booleans(),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 10_000))
+def test_fused_gossip_quant_equals_composed(m, n, bits, masked, dtype, seed):
+    """The fused quantize+EF+mix kernel == the composed oracle chain for
+    arbitrary client counts, ragged leaf sizes, bit widths, dtypes, and
+    participation masks (both sides consume the same uniform draws)."""
+    from repro.kernels import ops, ref
+    w, z, r, u = _gq_case(m, n, seed, dtype)
+    active = None
+    if masked:
+        rng = np.random.default_rng(seed + 1)
+        act = rng.random(m) < 0.5
+        act[seed % m] = True            # at least one active client
+        active = jnp.asarray(act)
+    y, rout = ops.quantize_mix_leaf(w, z, r, u, active, bits=bits)
+    qmax = float(2 ** (bits - 1) - 1)
+    e = z.astype(jnp.float32) + r
+    scale = (jnp.maximum(jnp.max(jnp.abs(e), 1), 1e-12) / qmax).reshape(-1, 1)
+    yr, rr = ref.gossip_quant(w, z, r, u, scale, active, bits=bits)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(rout, np.float32),
+                               np.asarray(rr, np.float32), **tol)
+
+
+@given(m=st.integers(2, 6), n=st.integers(1, 64), rounds=st.integers(1, 5),
+       bits=st.sampled_from([4, 8]), seed=st.integers(0, 10_000))
+def test_fused_error_feedback_telescopes(m, n, rounds, bits, seed):
+    """EF telescoping survives the fused path: over T rounds,
+    sum_t W @ zhat_t = W @ (sum_t z_t - r_T), i.e. the compression error
+    the network has seen so far is exactly the carried residual."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    w = rng.random((m, m)).astype(np.float32)
+    w /= w.sum(1, keepdims=True)
+    w = jnp.asarray(w)
+    r = jnp.zeros((m, n), jnp.float32)
+    y_sum = jnp.zeros((m, n), jnp.float32)
+    z_sum = jnp.zeros((m, n), jnp.float32)
+    for _ in range(rounds):
+        z = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        u = jnp.asarray(rng.random((m, n)), jnp.float32)
+        y, r = ops.quantize_mix_leaf(w, z, r, u, bits=bits)
+        y_sum = y_sum + y
+        z_sum = z_sum + z
+    np.testing.assert_allclose(np.asarray(y_sum + w @ r),
+                               np.asarray(w @ z_sum),
+                               rtol=2e-4, atol=2e-4 * rounds)
+
+
 @given(m=st.integers(2, 8), k=st.integers(1, 3), n=st.sampled_from([1, 2, 4]),
        seed=st.integers(0, 100))
 def test_microbatch_exactness_property(m, k, n, seed):

@@ -1,0 +1,144 @@
+"""Gate CI on benchmark regressions: diff a ``BENCH_<suite>.json`` run
+against a committed baseline.
+
+Usage::
+
+    python tools/bench_compare.py BASELINE.json CURRENT.json \
+        [--threshold 2.5] [--metric-threshold NAME=RATIO ...] \
+        [--spread-mult 4.0] [--allow-missing]
+
+A metric regresses when its ``us_per_call`` exceeds BOTH guards:
+
+* ``baseline * threshold`` — the relative bar (``--metric-threshold``
+  overrides it per row name, e.g. for a known-noisy measurement);
+* ``baseline + spread_mult * spread_us`` — the noise bar: a timing that
+  moved by less than a few interquartile ranges of the baseline's own
+  repeat spread is jitter, not a regression (the spread comes from
+  ``benchmarks.common.time_stats``; rows without one fall back to the
+  relative bar alone).
+
+Rows present in the baseline but missing from the run fail loudly (a
+renamed benchmark silently un-gates itself otherwise) unless
+``--allow-missing``; rows new in the run are reported but pass — commit
+a refreshed baseline to start gating them (see docs/benchmarks.md,
+"Refreshing a baseline").
+
+Exit code 0 = no regressions, 1 = regressions (or missing metrics),
+2 = bad invocation/schema.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "rows" not in doc:
+        raise ValueError(f"{path}: not a BENCH_*.json document "
+                         "(missing 'rows')")
+    for row in doc["rows"]:
+        if "name" not in row or "us_per_call" not in row:
+            raise ValueError(f"{path}: row without name/us_per_call: {row}")
+    return doc
+
+
+def compare(baseline: dict, current: dict, threshold: float = 2.5,
+            metric_thresholds: dict | None = None,
+            spread_mult: float = 4.0, allow_missing: bool = False) -> dict:
+    """Diff two BENCH documents; returns ``{"regressions", "missing",
+    "new", "ok"}`` — lists of per-row result dicts.  A row fails only if
+    it clears both the relative threshold and the baseline-spread noise
+    guard (see module docstring)."""
+    metric_thresholds = metric_thresholds or {}
+    base = {r["name"]: r for r in baseline["rows"]}
+    cur = {r["name"]: r for r in current["rows"]}
+    out: dict = {"regressions": [], "missing": [], "new": [], "ok": []}
+    for name, b in base.items():
+        if name not in cur:
+            out["missing"].append({"name": name})
+            continue
+        b_us = float(b["us_per_call"])
+        c_us = float(cur[name]["us_per_call"])
+        thr = float(metric_thresholds.get(name, threshold))
+        rel_bar = b_us * thr
+        spread = b.get("spread_us")
+        noise_bar = b_us + spread_mult * float(spread) \
+            if spread is not None else None
+        allowed = rel_bar if noise_bar is None else max(rel_bar, noise_bar)
+        row = {"name": name, "baseline_us": b_us, "current_us": c_us,
+               "ratio": c_us / b_us if b_us else float("inf"),
+               "allowed_us": allowed}
+        out["regressions" if c_us > allowed else "ok"].append(row)
+    for name in cur:
+        if name not in base:
+            out["new"].append({"name": name})
+    out["failed"] = bool(out["regressions"]) or \
+        (bool(out["missing"]) and not allow_missing)
+    return out
+
+
+def _parse_metric_thresholds(pairs: list[str]) -> dict:
+    thr = {}
+    for p in pairs:
+        name, _, v = p.rpartition("=")
+        if not name:
+            raise ValueError(f"--metric-threshold wants NAME=RATIO, got {p!r}")
+        thr[name] = float(v)
+    return thr
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when a BENCH_*.json run regresses vs a baseline")
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=2.5,
+                    help="fail when current > baseline * THRESHOLD "
+                         "(default 2.5 — CI runners are not the machine "
+                         "the baseline was recorded on)")
+    ap.add_argument("--metric-threshold", action="append", default=[],
+                    metavar="NAME=RATIO", help="per-row threshold override")
+    ap.add_argument("--spread-mult", type=float, default=4.0,
+                    help="noise guard: also require current > baseline + "
+                         "SPREAD_MULT * baseline spread_us (default 4.0)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="baseline rows absent from the run warn instead "
+                         "of failing")
+    args = ap.parse_args(argv)
+    try:
+        baseline = _load(args.baseline)
+        current = _load(args.current)
+        metric_thr = _parse_metric_thresholds(args.metric_threshold)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 2
+    res = compare(baseline, current, threshold=args.threshold,
+                  metric_thresholds=metric_thr,
+                  spread_mult=args.spread_mult,
+                  allow_missing=args.allow_missing)
+
+    for row in res["ok"]:
+        print(f"ok         {row['name']}: {row['current_us']:.1f}us "
+              f"({row['ratio']:.2f}x of baseline)")
+    for row in res["new"]:
+        print(f"new        {row['name']}: not in baseline (passes; refresh "
+              "the baseline to gate it)")
+    for row in res["missing"]:
+        print(f"missing    {row['name']}: in baseline but absent from run"
+              + (" (allowed)" if args.allow_missing else ""))
+    for row in res["regressions"]:
+        print(f"REGRESSION {row['name']}: {row['current_us']:.1f}us vs "
+              f"baseline {row['baseline_us']:.1f}us "
+              f"({row['ratio']:.2f}x; allowed {row['allowed_us']:.1f}us)")
+    n_reg, n_miss = len(res["regressions"]), len(res["missing"])
+    print(f"bench_compare: {len(res['ok'])} ok, {len(res['new'])} new, "
+          f"{n_miss} missing, {n_reg} regressed "
+          f"({baseline.get('suite', '?')} suite)")
+    return 1 if res["failed"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
