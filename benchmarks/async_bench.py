@@ -1,0 +1,85 @@
+"""Async execution engine: event-driven ticks vs synchronous rounds.
+
+The net suite (``net_bench``) prices synchronous rounds: every round
+ends when the slowest active client has heard all its in-neighbours, so
+one straggler link taxes the whole federation.  The deadline
+participation mode caps that tax by masking slow clients — at the cost
+of freezing them out (on ``wan-lan`` a deadline below the cross-site
+transfer permanently excludes half the federation and the run never
+reaches the target).
+
+This suite runs the third option: the event-driven engine
+(``repro.core.async_engine``).  Each client re-enters the gossip as soon
+as its own modeled compute + transfer completes; fast clients tick every
+window while stragglers tick at their own rate, mixing against
+bounded-staleness buffers.  Three rows per preset:
+
+* ``sync-full``  — classic synchronous rounds, everyone waits.
+* ``deadline``   — synchronous rounds with the deadline mask (the
+  per-preset deadline is tuned to the largest value that still causes
+  partial participation while converging).
+* ``async``      — the event engine (``tick_s``/``max_staleness``).
+
+The headline metric is modeled time-to-target (cumulative ``sim_time``
+until the eval accuracy first reaches ``target``): on both heterogeneous
+presets async dfedadmm reaches the target in less modeled wall-clock
+than the best synchronous deadline configuration.
+"""
+from benchmarks.common import (emit, rounds_from_history, run_dfl,
+                               time_from_history)
+
+from repro.core import ParticipationSpec
+
+# (preset, tuned sync deadline): largest deadline that still masks slow
+# links without freezing the federation (see module docstring)
+PRESETS = (("lognormal", 0.08), ("wan-lan", 0.13))
+
+TICK_S = 0.02
+MAX_STALENESS = 8
+
+
+def _fmt(v, suffix=""):
+    return "-" if v is None else f"{v:.3f}{suffix}"
+
+
+def run(rounds: int = 20, ticks: int = 100, m: int = 16,
+        target: float = 0.8):
+    for preset, deadline in PRESETS:
+        common = dict(rounds=rounds, alpha=0.3, m=m, topology="ring",
+                      eval_every=1, network=preset)
+
+        acc, hist, us = run_dfl("dfedadmm", **common)
+        rt = rounds_from_history(hist, target)
+        emit(f"async/sync-full/{preset}", us,
+             f"acc={acc:.4f};"
+             f"rounds_to_{target:g}={rt if rt is not None else f'>{rounds}'};"
+             f"time_to_{target:g}={_fmt(time_from_history(hist, target), 's')};"
+             f"sim_s_per_round={sum(hist['sim_time']) / rounds:.4f}")
+
+        part = ParticipationSpec(mode="deadline", deadline=deadline)
+        acc, hist, us = run_dfl("dfedadmm", participation=part, **common)
+        rt = rounds_from_history(hist, target)
+        emit(f"async/deadline{deadline:g}s/{preset}", us,
+             f"acc={acc:.4f};"
+             f"rounds_to_{target:g}={rt if rt is not None else f'>{rounds}'};"
+             f"time_to_{target:g}={_fmt(time_from_history(hist, target), 's')};"
+             f"sim_s_per_round={sum(hist['sim_time']) / rounds:.4f};"
+             f"participation={sum(hist['participation']) / rounds:.2f}")
+
+        acc, hist, us = run_dfl("dfedadmm", rounds=ticks, alpha=0.3, m=m,
+                                topology="ring", eval_every=2,
+                                network=preset, execution="async",
+                                tick_s=TICK_S, max_staleness=MAX_STALENESS)
+        tt = rounds_from_history(hist, target)
+        emit(f"async/async/{preset}", us,
+             f"acc={acc:.4f};"
+             f"ticks_to_{target:g}={tt if tt is not None else f'>{ticks}'};"
+             f"time_to_{target:g}={_fmt(time_from_history(hist, target), 's')};"
+             f"sim_s_per_tick={sum(hist['sim_time']) / ticks:.4f};"
+             f"mean_ticked={sum(hist['ticked']) / ticks:.2f};"
+             f"max_staleness={max(hist['staleness'])}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -120,7 +120,8 @@ def accuracy(params, task) -> float:
 def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
             lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5,
             participation=None, transport="", codec="identity",
-            codec_bits=8, codec_k=64, use_kernel=False, network=None):
+            codec_bits=8, codec_k=64, use_kernel=False, network=None,
+            execution="sync", tick_s=0.0, max_staleness=4):
     """Run a DFL algorithm on the synthetic federated task; returns
     (final_acc, history, us_per_round) — us_per_round is the
     steady-state median over post-compile rounds (``steady_state_us``).
@@ -131,7 +132,9 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
     round, including the fused quantized-gossip kernel on the dense
     path) — the history carries per-round wire bytes — and ``network`` a
     cost-model preset (``repro.core.network``) — the history then also
-    carries per-round modeled wall-clock seconds."""
+    carries per-round modeled wall-clock seconds.  ``execution="async"``
+    (with ``tick_s``/``max_staleness``) runs the event-driven engine
+    (``repro.core.async_engine``); ``rounds`` then counts ticks."""
     from repro.core import (DFLConfig, ParticipationSpec, mean_params,
                             simulate)
     task = fl_task()
@@ -148,7 +151,8 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
                     codec_bits=codec_bits, codec_k=codec_k,
                     use_kernel=use_kernel,
                     participation=participation or ParticipationSpec(),
-                    network=network)
+                    network=network, execution=execution, tick_s=tick_s,
+                    max_staleness=max_staleness)
     params = mlp_init(task.dim, task.n_classes, seed=seed)
 
     def eval_fn(p):

@@ -21,7 +21,7 @@ import sys
 BENCH_SCHEMA_VERSION = 1
 
 SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
-          "roofline", "participation", "comm", "net")
+          "roofline", "participation", "comm", "net", "async")
 
 
 def _run_suite(suite: str, quick: bool) -> None:
@@ -60,6 +60,11 @@ def _run_suite(suite: str, quick: bool) -> None:
         from benchmarks import net_bench
         net_bench.run(rounds=10 if quick else 20,
                       target=0.5 if quick else 0.8)
+    elif suite == "async":
+        from benchmarks import async_bench
+        async_bench.run(rounds=8 if quick else 20,
+                        ticks=32 if quick else 100,
+                        target=0.5 if quick else 0.8)
     else:
         raise ValueError(f"unknown suite {suite!r}")
 

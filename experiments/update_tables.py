@@ -211,12 +211,74 @@ def update_network(text):
     return text
 
 
+def async_table(rows):
+    """Execution mode x network preset -> time-to-target: synchronous
+    rounds (full and deadline-masked) against the event-driven async
+    engine (``repro.core.async_engine``) on the heterogeneous presets."""
+    lines = [
+        "| execution | network | acc | rounds/ticks-to-target | "
+        "time-to-target | sim s/step | notes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name, us, f in rows:
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "async" or "acc" not in f:
+            continue
+        _, mode, preset = parts
+        rt_key = next((k for k in f if k.startswith(("rounds_to",
+                                                     "ticks_to"))), None)
+        tt_key = next((k for k in f if k.startswith("time_to")), None)
+        step = f.get("sim_s_per_round", f.get("sim_s_per_tick", "-"))
+        notes = []
+        if "participation" in f:
+            notes.append(f"part. {f['participation']}")
+        if "mean_ticked" in f:
+            notes.append(f"ticked {f['mean_ticked']}")
+        if "max_staleness" in f:
+            notes.append(f"staleness<={f['max_staleness']}")
+        lines.append(
+            f"| {mode} | {preset} | {f['acc']} | "
+            f"{f[rt_key] if rt_key else '-'} | "
+            f"{f[tt_key] if tt_key else '-'} | {step} | "
+            f"{', '.join(notes) or '-'} |")
+    if len(lines) == 2:
+        return None
+    return "\n".join(lines)
+
+
+def update_async(text):
+    path = os.path.join(ART_DIR, "async.csv")
+    if not os.path.exists(path):
+        print(f"no {path}; skipping async execution table "
+              "(generate it with: PYTHONPATH=src python -m benchmarks.run "
+              "--suite async > " + path + ")")
+        return text
+    table = async_table(_parse_bench_csv(path))
+    if table is None:
+        print(f"{path} has no async rows; skipping")
+        return text
+    body = ("Event-driven execution against synchronous rounds on the "
+            "heterogeneous presets: each async client re-enters the "
+            "gossip as soon as its own modeled compute + transfer "
+            "completes (bounded-staleness mixing, "
+            "``repro.core.async_engine``), so stragglers stop taxing the "
+            "whole federation without being frozen out the way the "
+            "deadline mask freezes them — regenerate via ``PYTHONPATH=src "
+            "python -m benchmarks.run --suite async`` and "
+            "``experiments/update_tables.py``.\n\n" + table)
+    text = _replace_section(text, "<!-- ASYNC_TIME -->",
+                            r"\n<!-- |\n## |\Z", body)
+    print("async execution table updated")
+    return text
+
+
 def main():
     text = open(MD_PATH).read() if os.path.exists(MD_PATH) else \
         "# EXPERIMENTS\n"
     text = update_roofline(text)
     text = update_participation(text)
     text = update_network(text)
+    text = update_async(text)
     open(MD_PATH, "w").write(text)
 
 

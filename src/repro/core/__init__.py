@@ -4,7 +4,11 @@ from repro.core.admm import (ADMMHParams, client_round, dual_update, gamma,
                              gamma_k, lemma2_delta, lemma3_dual, local_step,
                              message)
 from repro.core.dfl import (ALGORITHMS, DFLConfig, DFLState, consensus_distance,
-                            init_state, make_train_round, mean_params, simulate)
+                            init_state, make_local_phase, make_train_round,
+                            mean_params, simulate)
+from repro.core.async_engine import (AsyncScheduler, TickEvents,
+                                     effective_matrix, make_tick_round,
+                                     simulate_async)
 from repro.core.gossip import (DIRECTED_TOPOLOGIES, GossipSpec, TOPOLOGIES,
                                adjacency, as_column_stochastic,
                                column_stochastic_weights,

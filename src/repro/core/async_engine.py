@@ -1,0 +1,394 @@
+"""Event-driven asynchronous execution engine with bounded-staleness mixing.
+
+The paper's round (Alg. 1) is bulk-synchronous: every client runs K
+local iterations, then everyone exchanges at once, and the network cost
+model (``repro.core.network``) only *prices* that lockstep after the
+fact.  This module promotes the cost model from telemetry to scheduler
+(the ROADMAP's event-driven item): each client's next gossip completes
+at::
+
+    t_next = t_now + K * compute_s + slowest in-neighbour transfer
+
+from ``NetworkModel.transfer_times`` over the client's round graph, so
+fast clients gossip often and a slow-linked client no longer stalls the
+federation — the communication/computing balancing of arXiv:2107.12048
+without the deadline mode's hard drops.
+
+Tick batching keeps the core jit-friendly.  Virtual time is quantized
+into fixed ``tick_s`` windows; the clients whose completion falls inside
+the window form the tick's ``active`` set, and one tick is ONE jitted
+computation over all m clients with per-client ``(active, steps)``
+arrays — exactly the masked-plan machinery ``ParticipationSpec`` already
+threads through ``dfl.make_local_phase``, so every registered
+``LocalSolver`` / ``Transport`` / ``MessageCodec`` composes unchanged.
+
+Mixing uses bounded-staleness publication buffers.  Each client that
+completes a round *publishes* its (codec-decoded) message into its slot
+of ``zbuf``; a receiver mixes against the most recent neighbour
+publication that has arrived, provided it is at most ``max_staleness``
+ticks old.  Stale entries are masked out of the tick's effective mixing
+matrix with the lost mass returned to the receiver's self-weight
+(:func:`effective_matrix`), so every row still sums to 1 and Definition
+1 holds on the tick's effective subgraph.  The push-sum transport is the
+exception: its mass-conservation algebra requires a sender's weight to
+move when its mass does, so push-sum ticks mix only among
+simultaneously-ticking clients (the same column-masking the synchronous
+masked round uses) and never consume stale buffers.
+
+Reduction to the synchronous round: with a uniform zero-latency network
+and ``tick_s`` at least the round time, every client completes in every
+tick, every buffer is fresh, and the tick IS the synchronous round —
+``tests/test_async.py`` pins ``history["loss"]`` bitwise for every
+registered DFL solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm as comm_lib, solvers as solvers_lib
+from repro.core.comm import _gate_tree
+from repro.core.dfl import (DFLConfig, DFLState, consensus_distance,
+                            init_state, make_local_phase, mean_params)
+from repro.core.gossip import GossipSpec, time_varying_specs
+from repro.core.network import NetworkModel
+from repro.core.participation import round_participation
+from repro.core.sam import global_norm
+
+PyTree = Any
+
+
+def effective_matrix(w: np.ndarray, receiving: np.ndarray,
+                     fresh: np.ndarray, *, column: bool = False
+                     ) -> np.ndarray:
+    """This tick's effective mixing matrix under asymmetric masks.
+
+    ``receiving[i]`` — client i completes a round this tick and mixes;
+    ``fresh[j]``     — client j's buffered publication is young enough
+    (age <= max_staleness) to be consumed.  Off-diagonal entry (i, j)
+    survives iff ``receiving[i] & fresh[j]``; the removed mass returns
+    to the diagonal, so rows still sum to 1 (``column=True``: the
+    column-stochastic analogue for push-sum plans — columns sum to 1).
+    Non-receiving clients get identity rows and hold their state.
+
+    With ``receiving == fresh`` this is exactly
+    ``gossip.mask_and_renormalize`` (same operation order, so the f32
+    plan is bit-identical at full masks — the sync-reduction pin rests
+    on it).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    m = w.shape[0]
+    receiving = np.asarray(receiving, dtype=bool)
+    fresh = np.asarray(fresh, dtype=bool)
+    if receiving.shape != (m,) or fresh.shape != (m,):
+        raise ValueError(
+            f"mask shapes {receiving.shape}/{fresh.shape} do not match "
+            f"m={m}")
+    wm = np.where(np.outer(receiving, fresh), w, 0.0)
+    np.fill_diagonal(wm, 0.0)
+    np.fill_diagonal(wm, 1.0 - wm.sum(axis=0 if column else 1))
+    return wm
+
+
+@dataclasses.dataclass(frozen=True)
+class TickEvents:
+    """Host-side realization of one tick from :class:`AsyncScheduler`."""
+
+    tick: int
+    active: np.ndarray     # (m,) bool — completes a round inside this tick
+    steps: np.ndarray      # (m,) int32 — local iterations (0 if not active)
+    fresh: np.ndarray      # (m,) bool — buffer young enough to be mixed
+    ages: np.ndarray       # (m,) int — buffer age in ticks (0 for active)
+    lr_rounds: np.ndarray  # (m,) int — rounds completed BEFORE this tick
+                           # (drives each client's own lr decay)
+    sim_dt: float          # virtual seconds this tick advanced the clock
+    staleness: int         # max age among buffers some receiver consumes
+
+
+class AsyncScheduler:
+    """Host-side event queue quantized into ``tick_s`` windows.
+
+    Tiny per-client numpy state, never enters jit (like the gossip
+    matrices and participation masks):
+
+    * ``done``        — each client's in-flight round completion time;
+    * ``clock``       — per-client virtual clock: the completion time of
+      the client's last *applied* round (non-decreasing);
+    * ``last_pub``    — tick index of each client's last publication;
+    * ``rounds_done`` — per-client completed-round counters.
+
+    A client whose ``done`` falls inside the tick window completes its
+    round, publishes, and immediately starts the next one:
+    ``done += K * compute_s + transfer_times(...)[i]`` over its next
+    round's graph (one round per tick at most — ``tick_s`` far above the
+    round time degenerates to the synchronous schedule, which is the
+    bit-identity pin).  Sampling participation composes: a sampled-out
+    client simply defers its completion to the next tick it is sampled.
+    """
+
+    def __init__(self, cfg: DFLConfig, net: NetworkModel,
+                 specs: list[GossipSpec], bytes_per_client: int):
+        m = cfg.m
+        self.cfg = cfg
+        self.net = net
+        self.specs = specs
+        self.nbytes = bytes_per_client
+        self.part = None if cfg.participation.is_trivial else \
+            cfg.participation
+        self._transfer_cache: dict[int, np.ndarray] = {}
+        self.done = cfg.K * net.compute_s + self._transfer(0)
+        self.clock = np.zeros(m, dtype=np.float64)
+        self.last_pub = np.zeros(m, dtype=np.int64)
+        self.rounds_done = np.zeros(m, dtype=np.int64)
+        self._applied_max = 0.0
+
+    def _transfer(self, r: int) -> np.ndarray:
+        """(m,) per-client slowest in-neighbour transfer for round ``r``
+        (jitter drawn at round index ``r``, graph from ``specs[r]``)."""
+        if r not in self._transfer_cache:
+            s = self.specs[min(r, len(self.specs) - 1)]
+            self._transfer_cache[r] = self.net.transfer_times(
+                s.matrix, self.nbytes, r)
+        return self._transfer_cache[r]
+
+    def step(self, t: int) -> TickEvents:
+        """Advance to tick ``t`` (windows are [t*tick_s, (t+1)*tick_s])."""
+        cfg = self.cfg
+        m = cfg.m
+        lr_rounds = self.rounds_done.copy()
+        ticking = self.done <= (t + 1) * cfg.tick_s
+        if self.part is not None:
+            rp = round_participation(self.part, m, t, cfg.K)
+            active = ticking & rp.active
+            steps = np.where(active, rp.steps, 0).astype(np.int32)
+        else:
+            active = ticking.copy()
+            steps = np.where(active, cfg.K, 0).astype(np.int32)
+        ages = np.where(active, 0, t - self.last_pub).astype(np.int64)
+        fresh = ages <= cfg.max_staleness
+        # staleness telemetry: the max age among buffered senders some
+        # active receiver actually hears through this tick's graph
+        w = np.asarray(self.specs[min(t, len(self.specs) - 1)].matrix)
+        edges = w != 0.0
+        np.fill_diagonal(edges, False)
+        heard = edges[active].any(axis=0) if active.any() else \
+            np.zeros(m, dtype=bool)
+        used = fresh & heard
+        staleness = int(ages[used].max()) if used.any() else 0
+        # apply the completions: virtual clocks jump to the applied
+        # completion times; sim_dt is how far the latest applied event
+        # moved the federation's clock (cumsum = the virtual time the
+        # post-tick state exists at)
+        prev = self._applied_max
+        self.clock = np.where(active, self.done, self.clock)
+        if active.any():
+            self._applied_max = max(self._applied_max,
+                                    float(self.clock.max()))
+        sim_dt = self._applied_max - prev
+        self.last_pub = np.where(active, t, self.last_pub)
+        self.rounds_done = self.rounds_done + active.astype(np.int64)
+        for i in np.flatnonzero(active):
+            r = int(self.rounds_done[i])
+            self.done[i] += cfg.K * self.net.compute_s + \
+                self._transfer(r)[i]
+        return TickEvents(tick=t, active=active, steps=steps, fresh=fresh,
+                          ages=ages, lr_rounds=lr_rounds, sim_dt=sim_dt,
+                          staleness=staleness)
+
+
+def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
+                    cfg: DFLConfig, spec: GossipSpec | None = None,
+                    metrics: str = "full"):
+    """Build ``tick_fn(state, zbuf, batches, plan, active, steps,
+    lr_rounds) -> (state, zbuf, metrics)`` — one async tick as ONE jitted
+    computation.
+
+    ``zbuf`` is the (m, ...)-per-leaf publication buffer: slot i holds
+    client i's most recent published (codec-decoded) message.  The tick
+    runs the shared masked local phase (``dfl.make_local_phase``) with a
+    per-client lr vector (each client decays by its OWN completed round
+    count, ``lr_rounds``), publishes the active clients' messages into
+    ``zbuf``, mixes the buffer under ``plan`` (from
+    :func:`effective_matrix` / ``Transport.prepare``), and keeps the
+    mixed result only for the active clients — everyone else's params,
+    solver state, codec residual, and push-sum weight pass through
+    untouched via the same ``jnp.where`` gating the masked sync round
+    uses.
+    """
+    transport = comm_lib.make_transport(cfg, spec=spec)
+    codec = comm_lib.make_codec(cfg)
+    solver = solvers_lib.make_solver(cfg)
+    local_phase = make_local_phase(loss_fn, cfg, solver, masked=True,
+                                   per_client_lr=True)
+
+    def tick_fn(state: DFLState, zbuf: PyTree, batches: PyTree, plan,
+                active: jax.Array, steps: jax.Array,
+                lr_rounds: jax.Array):
+        lr_t = cfg.lr * (cfg.lr_decay ** lr_rounds.astype(jnp.float32))
+        rngs = jax.vmap(
+            lambda k: jax.random.fold_in(k, state.round))(state.rng)
+        params_K, new_solver, z, losses = local_phase(
+            state.params, state.solver, batches, rngs, lr_t,
+            active, steps)
+
+        aux = state.comm if state.comm is not None else {}
+        if codec.stateful:
+            codec_rng = jax.random.fold_in(
+                jax.random.fold_in(state.rng[0], state.round), 0x51AB3)
+            wire, new_resid = codec.encode(z, aux.get("residual"),
+                                           codec_rng, active)
+            zhat = codec.decode(wire)
+        else:
+            zhat, new_resid = z, None
+        # publish: active clients overwrite their buffer slot with this
+        # round's (decoded) message; every other slot keeps its last
+        # publication — the bounded-staleness state the plan masks by age
+        new_zbuf = _gate_tree(active, zhat, zbuf)
+        mixed, new_ps = transport.mix(new_zbuf, plan,
+                                      aux.get("ps_weight"))
+        # only the clients that completed a round this tick consume the
+        # mix; a busy client's buffer slot is NOT its current params, so
+        # (unlike the sync masked round) identity plan rows alone cannot
+        # hold it in place — gate explicitly
+        new_params = _gate_tree(active, mixed, params_K)
+
+        new_comm = state.comm
+        if state.comm is not None:
+            new_comm = dict(state.comm)
+            if "ps_weight" in new_comm:
+                new_comm["ps_weight"] = new_ps
+            if "residual" in new_comm:
+                new_comm["residual"] = new_resid
+
+        af = active.astype(jnp.float32)
+        # mean over this tick's active clients, written exactly like the
+        # masked sync round so the full-tick loss matches the sync round
+        # bit for bit (see make_train_round)
+        n_active = jnp.sum(af)
+        mean_loss = jnp.mean(losses * af) * (
+            jnp.float32(cfg.m) / jnp.maximum(n_active, 1.0))
+        out_metrics = {
+            "loss": jnp.where(n_active > 0, mean_loss, jnp.nan),
+            "lr": jnp.max(jnp.where(active, lr_t, 0.0)),
+            "ticked": jnp.mean(af),
+        }
+        if metrics == "full":
+            out_metrics["consensus_sq"] = consensus_distance(new_params)
+            d = solver.dual_tree(new_solver)
+            out_metrics["dual_norm"] = global_norm(d) if d is not None \
+                else jnp.zeros((), jnp.float32)
+        new_state = DFLState(params=new_params, solver=new_solver,
+                             rng=state.rng, round=state.round + 1,
+                             comm=new_comm)
+        return new_state, new_zbuf, out_metrics
+
+    return tick_fn
+
+
+def _tick_plan(transport: comm_lib.Transport, spec: GossipSpec,
+               active: np.ndarray, fresh: np.ndarray):
+    """This tick's communication plan.  Row-stochastic transports mix
+    active receivers against fresh buffers (:func:`effective_matrix`);
+    push-sum keeps its mass-conservation invariant by exchanging only
+    among simultaneously-ticking clients (``Transport.prepare`` applies
+    the column masking), never stale buffers."""
+    if transport.kind == "pushsum":
+        return transport.prepare(spec,
+                                 None if active.all() else active)
+    w = effective_matrix(spec.matrix, active, fresh)
+    return jnp.asarray(w, jnp.float32)
+
+
+def simulate_async(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
+                   sample_batches: Callable[[int], PyTree], ticks: int,
+                   seed: int = 0, eval_every: int = 10,
+                   verbose: bool = False):
+    """Run ``ticks`` async ticks; returns (state, history) with the same
+    contract as ``dfl.simulate`` (which dispatches here when
+    ``cfg.execution == "async"``).
+
+    History rows are per TICK: ``sim_time`` is the virtual seconds each
+    tick advanced the applied-event clock (cumsum = time-to-that-state,
+    the quantity ``benchmarks.common.time_from_history`` integrates),
+    ``staleness`` the max buffer age some receiver consumed,
+    ``ticked`` the fraction of clients that completed a round, and
+    ``wire_bytes`` the tick's published bytes (active clients x codec
+    message size).  A tick in which no client completes touches nothing:
+    no jitted call runs and the row records loss NaN / sim_time 0.
+    """
+    if cfg.execution != "async":
+        raise ValueError(
+            f"simulate_async needs cfg.execution='async', "
+            f"got {cfg.execution!r}")
+    if cfg.transport == "ppermute" and cfg.topology in ("random", "drandom"):
+        raise ValueError(
+            f"topology={cfg.topology!r} draws a fresh non-circulant graph "
+            "every round, but the ppermute transport compiles one static "
+            "neighbour pattern and would silently gossip over round 0's "
+            "graph forever; use transport='dense' for time-varying "
+            "topologies")
+    specs = time_varying_specs(cfg.topology, cfg.m, ticks,
+                               degree=cfg.degree, base_seed=seed,
+                               weights=cfg.weights)
+    spec0 = specs[0]
+    net = cfg.make_network_model(seed=seed)
+    transport = comm_lib.make_transport(cfg, spec=spec0)
+    codec = comm_lib.make_codec(cfg)
+    bytes_per_client = codec.bytes_per_client(params_single)
+    scheduler = AsyncScheduler(cfg, net, specs, bytes_per_client)
+    tick_fn = jax.jit(make_tick_round(loss_fn, cfg, spec=spec0))
+    state = init_state(params_single, cfg, seed=seed)
+    # common init (paper: x^0 everywhere) doubles as everyone's first
+    # publication, so round-0 receivers mix against the true x^0
+    zbuf = state.params
+
+    history: dict[str, list] = {"round": [], "loss": [], "lr": [],
+                                "consensus_sq": [], "dual_norm": [],
+                                "wire_bytes": [], "wall_us": [],
+                                "sim_time": [], "staleness": [],
+                                "ticked": []}
+    eval_hist: dict[str, list] = {}
+    for t in range(ticks):
+        ev = scheduler.step(t)
+        n_active = int(ev.active.sum())
+        if n_active > 0:
+            plan = _tick_plan(transport, specs[t], ev.active, ev.fresh)
+            batches = sample_batches(t)
+            t0 = time.perf_counter()
+            state, zbuf, metrics = tick_fn(
+                state, zbuf, batches, plan, jnp.asarray(ev.active),
+                jnp.asarray(ev.steps),
+                jnp.asarray(ev.lr_rounds, jnp.int32))
+            jax.block_until_ready((state.params, metrics))
+            history["wall_us"].append((time.perf_counter() - t0) * 1e6)
+            for k in ("loss", "lr", "consensus_sq", "dual_norm", "ticked"):
+                history[k].append(float(metrics[k]))
+        else:
+            # empty window: no completions, no jitted call, state frozen
+            history["wall_us"].append(0.0)
+            for k in ("loss", "lr", "consensus_sq", "dual_norm"):
+                history[k].append(float("nan"))
+            history["ticked"].append(0.0)
+        history["round"].append(t)
+        history["wire_bytes"].append(bytes_per_client * n_active)
+        history["sim_time"].append(ev.sim_dt)
+        history["staleness"].append(ev.staleness)
+        if eval_fn is not None and ((t + 1) % eval_every == 0
+                                    or t == ticks - 1):
+            evm = eval_fn(mean_params(state.params))
+            eval_hist.setdefault("round", []).append(t)
+            for k, v in evm.items():
+                eval_hist.setdefault(k, []).append(float(v))
+            if verbose:
+                print(f"tick {t+1:4d} loss={history['loss'][-1]:.4f} "
+                      f"ticked={history['ticked'][-1]:.2f} "
+                      + " ".join(f"{k}={v[-1]:.4f}"
+                                 for k, v in eval_hist.items()
+                                 if k != "round"))
+    history["eval"] = eval_hist
+    return state, history

@@ -69,6 +69,17 @@ class DFLConfig:
                                  # repro.core.network.NETWORKS, a
                                  # NetworkModel, or None (no wall-clock
                                  # modeling; history has no "sim_time")
+    execution: str = "sync"      # "sync" = bulk-synchronous rounds (the
+                                 # paper's Alg. 1); "async" = the event-
+                                 # driven engine (repro.core.async_engine)
+                                 # where each client gossips when its
+                                 # modeled compute + transfer finishes
+    tick_s: float = 0.0          # async: seconds of virtual time per
+                                 # batched tick (one jitted computation)
+    max_staleness: int = 4       # async: a neighbour's buffered iterate
+                                 # older than this many ticks is masked
+                                 # out of the mix (0 = only same-tick
+                                 # publications are mixed)
 
     def __post_init__(self):
         if self.algorithm not in solvers_lib.solver_names("dfl"):
@@ -117,6 +128,28 @@ class DFLConfig:
                 "participation mode 'deadline' is driven by the network "
                 "cost model: set DFLConfig.network to a preset from "
                 f"{network_names()} (or a NetworkModel)")
+        if self.execution not in ("sync", "async"):
+            raise ValueError(
+                f"execution must be 'sync' or 'async', got {self.execution!r}")
+        if self.execution == "async":
+            if self.network is None:
+                raise ValueError(
+                    "execution='async' schedules gossip events from the "
+                    "network cost model: set DFLConfig.network to a preset "
+                    f"from {network_names()} (or a NetworkModel)")
+            if self.tick_s <= 0.0:
+                raise ValueError(
+                    "execution='async' needs tick_s > 0 (seconds of virtual "
+                    f"time batched into one jitted tick), got {self.tick_s}")
+            if self.max_staleness < 0:
+                raise ValueError(
+                    f"max_staleness must be >= 0, got {self.max_staleness}")
+            if self.participation.mode == "deadline":
+                raise ValueError(
+                    "execution='async' subsumes the deadline mode: slow "
+                    "clients tick late instead of being dropped — use a "
+                    "sampling participation mode (or the default) with "
+                    "async execution")
 
     def make_solver(self) -> "solvers_lib.LocalSolver":
         """The LocalSolver this config resolves to (algorithm facts like
@@ -207,54 +240,30 @@ def mean_params(params: PyTree) -> PyTree:
 # Round builders
 # ---------------------------------------------------------------------------
 
-def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
+def make_local_phase(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                      cfg: DFLConfig,
-                     spec: GossipSpec | None = None,
-                     mesh: jax.sharding.Mesh | None = None,
-                     client_axis: str = "data",
-                     param_inner_specs: PyTree | None = None,
-                     metrics: str = "full"):
-    """Build ``round_fn(state, batches, plan) -> (state, metrics)``.
+                     solver: "solvers_lib.LocalSolver | None" = None,
+                     *, masked: bool, per_client_lr: bool = False):
+    """Build the vmapped K-local-steps phase shared by the synchronous
+    round (:func:`make_train_round`) and the async tick
+    (``repro.core.async_engine``)::
 
-    * ``loss_fn(params_single, batch, rng) -> scalar`` — per-client loss.
-    * ``batches`` leaves are shaped (m, K, ...): one minibatch per client
-      per inner step (Alg. 1 line 5 samples fresh minibatches).
-    * ``plan`` is this round's communication plan from
-      ``Transport.prepare(spec_t, active)`` — for the dense and push-sum
-      transports simply the (m, m) mixing matrix (supports the
-      time-varying "random" topology), for ppermute ``None`` (static
-      pattern from ``spec``) or the per-client gate arrays of a masked
-      round.  A raw matrix is accepted everywhere the seed code passed
-      one.  ``cfg.codec`` compresses the messages on the wire
-      (stochastic-rounding quantization / top-k with error feedback); the
-      codec residuals and the push-sum weights ride in ``state.comm``.
-    * ``metrics``: "full" computes consensus distance + dual norm every
-      round — a param-sized f32 cross-client all-reduce, fine for the
-      simulation substrate but ~2x the gossip's own link bytes at 405B
-      scale (and it drags the gossip permutes to f32 via convert
-      hoisting).  "light" keeps only scalar telemetry; production runs
-      sample full metrics every N rounds from the checkpoint instead.
+        local_phase(params, sstate, batches, rngs, lr_t[, active, steps])
+            -> (params_K, new_sstate, z, losses)
 
-    Participation: when ``cfg.participation`` is non-trivial the returned
-    ``round_fn`` takes two extra per-round arrays,
-    ``round_fn(state, batches, plan, active, steps)`` — ``active`` (m,)
-    bool and ``steps`` (m,) int32 from
-    ``participation.round_participation`` — and ``plan`` must come from
-    ``Transport.prepare(spec_t, active)`` (which applies the
-    mask-and-renormalize step for the transport).  The mask enters
-    the vmapped local update via ``jnp.where`` (inactive clients freeze,
-    stragglers stop after ``steps_i`` iterations), so the round stays one
-    jitted computation with fixed shapes for any participation pattern.
+    All inputs/outputs carry the leading (m,) client axis except ``lr_t``,
+    which is a scalar broadcast to every client by default and a
+    per-client (m,) vector with ``per_client_lr=True`` (the async engine
+    decays each client's rate by *its own* completed round count).  With
+    ``masked=True`` the phase takes the per-round ``(active, steps)``
+    arrays and gates every per-step quantity through ``jnp.where`` —
+    inactive clients freeze, stragglers stop after ``steps_i`` iterations
+    — keeping one fixed-shape jitted computation; at full participation
+    the masked path is bit-identical to the unmasked one (pinned since
+    the participation PR).
     """
-    if cfg.transport == "ppermute" and spec is None:
-        raise ValueError("the ppermute transport needs a static GossipSpec")
-    transport = comm_lib.make_transport(cfg, spec=spec, mesh=mesh,
-                                        client_axis=client_axis,
-                                        inner_specs=param_inner_specs)
-    codec = comm_lib.make_codec(cfg)
-    fused = comm_lib.can_fuse_dense(transport, codec)
-    solver = solvers_lib.make_solver(cfg)
-    masked = not cfg.participation.is_trivial
+    if solver is None:
+        solver = solvers_lib.make_solver(cfg)
 
     loss_and_grad = sam.sam_value_and_grad(
         loss_fn, solver.sam_rho,
@@ -344,6 +353,71 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             loss = jnp.mean(losses)
         return params_K, new_sstate, z, loss
 
+    lr_axis = 0 if per_client_lr else None
+    if masked:
+        vm = jax.vmap(client_local, in_axes=(0, 0, 0, 0, lr_axis, 0, 0))
+    else:
+        vm = jax.vmap(client_local, in_axes=(0, 0, 0, 0, lr_axis))
+
+    def local_phase(params, sstate, batches, rngs, lr_t,
+                    active=None, steps=None):
+        if masked:
+            return vm(params, sstate, batches, rngs, lr_t, active, steps)
+        return vm(params, sstate, batches, rngs, lr_t)
+
+    return local_phase
+
+
+def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
+                     cfg: DFLConfig,
+                     spec: GossipSpec | None = None,
+                     mesh: jax.sharding.Mesh | None = None,
+                     client_axis: str = "data",
+                     param_inner_specs: PyTree | None = None,
+                     metrics: str = "full"):
+    """Build ``round_fn(state, batches, plan) -> (state, metrics)``.
+
+    * ``loss_fn(params_single, batch, rng) -> scalar`` — per-client loss.
+    * ``batches`` leaves are shaped (m, K, ...): one minibatch per client
+      per inner step (Alg. 1 line 5 samples fresh minibatches).
+    * ``plan`` is this round's communication plan from
+      ``Transport.prepare(spec_t, active)`` — for the dense and push-sum
+      transports simply the (m, m) mixing matrix (supports the
+      time-varying "random" topology), for ppermute ``None`` (static
+      pattern from ``spec``) or the per-client gate arrays of a masked
+      round.  A raw matrix is accepted everywhere the seed code passed
+      one.  ``cfg.codec`` compresses the messages on the wire
+      (stochastic-rounding quantization / top-k with error feedback); the
+      codec residuals and the push-sum weights ride in ``state.comm``.
+    * ``metrics``: "full" computes consensus distance + dual norm every
+      round — a param-sized f32 cross-client all-reduce, fine for the
+      simulation substrate but ~2x the gossip's own link bytes at 405B
+      scale (and it drags the gossip permutes to f32 via convert
+      hoisting).  "light" keeps only scalar telemetry; production runs
+      sample full metrics every N rounds from the checkpoint instead.
+
+    Participation: when ``cfg.participation`` is non-trivial the returned
+    ``round_fn`` takes two extra per-round arrays,
+    ``round_fn(state, batches, plan, active, steps)`` — ``active`` (m,)
+    bool and ``steps`` (m,) int32 from
+    ``participation.round_participation`` — and ``plan`` must come from
+    ``Transport.prepare(spec_t, active)`` (which applies the
+    mask-and-renormalize step for the transport).  The mask enters
+    the vmapped local update via ``jnp.where`` (inactive clients freeze,
+    stragglers stop after ``steps_i`` iterations), so the round stays one
+    jitted computation with fixed shapes for any participation pattern.
+    """
+    if cfg.transport == "ppermute" and spec is None:
+        raise ValueError("the ppermute transport needs a static GossipSpec")
+    transport = comm_lib.make_transport(cfg, spec=spec, mesh=mesh,
+                                        client_axis=client_axis,
+                                        inner_specs=param_inner_specs)
+    codec = comm_lib.make_codec(cfg)
+    fused = comm_lib.can_fuse_dense(transport, codec)
+    solver = solvers_lib.make_solver(cfg)
+    masked = not cfg.participation.is_trivial
+    local_phase = make_local_phase(loss_fn, cfg, solver, masked=masked)
+
     def round_fn(state: DFLState, batches: PyTree, plan,
                  active: jax.Array | None = None,
                  steps: jax.Array | None = None):
@@ -355,14 +429,12 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                     "cfg.participation is non-trivial: round_fn needs the "
                     "per-round (active, steps) arrays from "
                     "participation.round_participation")
-            params_K, new_solver, z, losses = jax.vmap(
-                client_local, in_axes=(0, 0, 0, 0, None, 0, 0)
-            )(state.params, state.solver, batches, rngs, lr_t,
-              active, steps)
+            params_K, new_solver, z, losses = local_phase(
+                state.params, state.solver, batches, rngs, lr_t,
+                active, steps)
         else:
-            params_K, new_solver, z, losses = jax.vmap(
-                client_local, in_axes=(0, 0, 0, 0, None)
-            )(state.params, state.solver, batches, rngs, lr_t)
+            params_K, new_solver, z, losses = local_phase(
+                state.params, state.solver, batches, rngs, lr_t)
 
         aux = state.comm if state.comm is not None else {}
         if codec.stateful:
@@ -477,6 +549,11 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     from repro.core.participation import participation_schedule
     from repro.core.gossip import time_varying_specs
 
+    if cfg.execution == "async":
+        from repro.core.async_engine import simulate_async
+        return simulate_async(loss_fn, eval_fn, params_single, cfg,
+                              sample_batches, rounds, seed=seed,
+                              eval_every=eval_every, verbose=verbose)
     if cfg.transport == "ppermute" and cfg.topology in ("random", "drandom"):
         raise ValueError(
             f"topology={cfg.topology!r} draws a fresh non-circulant graph "
@@ -536,9 +613,21 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
             history["participation"].append(float(metrics["participation"]))
         history["wire_bytes"].append(bytes_per_client * n_active)
         if net is not None:
-            history["sim_time"].append(net.round_time(
-                specs[t].matrix, bytes_per_client, t, cfg.K,
-                active=None if trivial else sched[t].active))
+            if cfg.participation.mode == "deadline":
+                # price the realized receive times of the clients the
+                # deadline decision kept IN the round: every included
+                # client physically waited for all its in-links before
+                # the decision (the min_active floor may force a
+                # deadline-missing client in, and then *its* transfer is
+                # the round's critical path).  Recomputing transfer over
+                # the post-mask subgraph would silently drop the forced
+                # client's slow in-links along with the masked senders.
+                history["sim_time"].append(net.deadline_round_time(
+                    transfer[t], sched[t].active, cfg.K))
+            else:
+                history["sim_time"].append(net.round_time(
+                    specs[t].matrix, bytes_per_client, t, cfg.K,
+                    active=None if trivial else sched[t].active))
         history["round"].append(t)
         for k in ("loss", "lr", "consensus_sq", "dual_norm"):
             history[k].append(float(metrics[k]))

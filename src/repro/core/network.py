@@ -165,6 +165,26 @@ class NetworkModel:
         slowest = float(transfer.max()) if transfer.size else 0.0
         return K * self.compute_s + slowest
 
+    def deadline_round_time(self, transfer: np.ndarray, active: np.ndarray,
+                            K: int) -> float:
+        """Wall-clock of one deadline-mode round: ``K`` iterations of
+        modeled compute plus the slowest *realized* receive among the
+        clients kept in the round.
+
+        ``transfer`` is the pre-mask per-client transfer vector the
+        deadline decision itself consumed (``transfer_times`` over the
+        full round graph): every included client physically waited for
+        all its in-links before the deadline was judged, so a client the
+        ``min_active`` floor forces in past the deadline prices *its*
+        wait — not the post-mask subgraph's (the masked recompute drops
+        the forced client's slow in-links along with the masked senders)
+        and not the pre-mask critical path over clients that sat out.
+        """
+        transfer = np.asarray(transfer, dtype=np.float64)
+        waited = transfer[np.asarray(active, dtype=bool)]
+        slowest = float(waited.max()) if waited.size else 0.0
+        return K * self.compute_s + slowest
+
     def uplink_seconds(self, nbytes: int, t: int) -> np.ndarray:
         """(m,) per-client worst outgoing-link time for one ``nbytes``
         message — the server-upload model used by ``simulate_cfl``

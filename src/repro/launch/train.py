@@ -76,6 +76,18 @@ def main(argv=None) -> int:
                     help="round deadline in modeled seconds: clients whose "
                          "transfer misses it sit the round out "
                          "(participation mode 'deadline'; needs --network)")
+    ap.add_argument("--execution", default="sync",
+                    choices=("sync", "async"),
+                    help="async: event-driven engine (repro.core."
+                         "async_engine) — each client re-enters the gossip "
+                         "when its own modeled compute + transfer "
+                         "completes; --rounds then counts ticks "
+                         "(needs --network)")
+    ap.add_argument("--tick-s", type=float, default=0.02,
+                    help="async: seconds of virtual time per batched tick")
+    ap.add_argument("--max-staleness", type=int, default=4,
+                    help="async: neighbour buffers older than this many "
+                         "ticks are masked out of the mixing")
     ap.add_argument("--participation", default="full",
                     choices=("full", "uniform", "fraction"),
                     help="per-round client sampling mode (--deadline "
@@ -111,6 +123,10 @@ def main(argv=None) -> int:
                    straggler_frac=args.straggler_frac,
                    straggler_steps=args.straggler_steps,
                    min_active=args.min_active, seed=args.seed)
+    if args.execution == "async" and not args.network:
+        raise SystemExit("--execution async needs --network (the event "
+                         "schedule is driven by the modeled per-client "
+                         "compute + transfer times)")
     if args.deadline > 0.0:
         if not args.network:
             raise SystemExit("--deadline needs --network (the deadline is "
@@ -127,7 +143,11 @@ def main(argv=None) -> int:
                         codec_bits=args.codec_bits, codec_k=args.codec_k,
                         microbatches=args.microbatches,
                         participation=part,
-                        network=args.network or None)
+                        network=args.network or None,
+                        execution=args.execution,
+                        tick_s=args.tick_s if args.execution == "async"
+                        else 0.0,
+                        max_staleness=args.max_staleness)
     sampler = _make_sampler(cfg, args)
     eval_batch = _eval_batch(cfg, args)
 
@@ -146,6 +166,14 @@ def main(argv=None) -> int:
     wire_mb = sum(history["wire_bytes"]) / 1e6
     sim = (f"  sim_time={sum(history['sim_time']):.1f}s ({args.network})"
            if "sim_time" in history else "")
+    if args.execution == "async":
+        sim += (f"  ticked={sum(history['ticked']) / args.rounds:.2f}"
+                f"  max_staleness={max(history['staleness'])}")
+        if not any(history["ticked"]):
+            print("[train] no client completed a round within any tick "
+                  "window — raise --tick-s (or --rounds): the slowest "
+                  "modeled in-link needs more virtual time than "
+                  f"tick_s={args.tick_s}s per tick provides")
     print(f"[train] {args.rounds} rounds in {dt:.1f}s  "
           f"final loss={history['loss'][-1]:.4f}  "
           f"eval={history['eval'].get('eval_loss', ['n/a'])[-1]}  "

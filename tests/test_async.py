@@ -1,0 +1,259 @@
+"""Async execution engine (repro.core.async_engine): bit-identity
+reduction to the synchronous round, determinism, scheduler/staleness
+invariants, and composition with every transport x codec pair."""
+import numpy as np
+import pytest
+
+from repro.core import (DFLConfig, NetworkModel, ParticipationSpec,
+                        make_codec, simulate, solver_names)
+from repro.core.async_engine import AsyncScheduler, effective_matrix
+from repro.core.gossip import (as_column_stochastic, make_gossip,
+                               mask_and_renormalize,
+                               mask_and_renormalize_columns,
+                               time_varying_specs)
+
+
+def _flat_net(m, compute_s=0.002):
+    """Uniform zero-latency zero-jitter network: every client's round
+    time is K*compute_s + eps, so ``tick_s=1.0`` puts every client in
+    every tick — the async schedule degenerates to the sync rounds."""
+    return NetworkModel(name="flat", bandwidth=np.full((m, m), 1e12),
+                        latency=np.zeros((m, m)), jitter=0.0,
+                        compute_s=compute_s)
+
+
+def _toy_problem(m=8, K=3, seed=0):
+    import jax.numpy as jnp
+
+    def loss_fn(p, batch, rng):
+        pred = batch["x"] @ p["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 1)), jnp.float32)}
+
+    def sampler(t):
+        r = np.random.default_rng((seed, t))
+        x = r.normal(size=(m, K, 16, 6)).astype(np.float32)
+        y = x.sum(-1, keepdims=True).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    return loss_fn, params, sampler
+
+
+def _bit_identity_case(algo, rounds=4, m=8, K=3):
+    loss_fn, params, sampler = _toy_problem(m=m, K=K)
+    base = dict(algorithm=algo, m=m, K=K, topology="ring",
+                network=_flat_net(m))
+    st_s, h_s = simulate(loss_fn, None, params, DFLConfig(**base),
+                         sampler, rounds=rounds, seed=0)
+    st_a, h_a = simulate(loss_fn, None, params,
+                         DFLConfig(**base, execution="async", tick_s=1.0,
+                                   max_staleness=2),
+                         sampler, rounds=rounds, seed=0)
+    assert h_s["loss"] == h_a["loss"]          # bitwise, every round
+    assert h_a["ticked"] == [1.0] * rounds
+    assert h_a["staleness"] == [0] * rounds
+    np.testing.assert_array_equal(np.asarray(st_s.params["w"]),
+                                  np.asarray(st_a.params["w"]))
+    np.testing.assert_allclose(h_a["sim_time"], h_s["sim_time"],
+                               rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Sync reduction + determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["dfedadmm", "dfedavg"])
+def test_async_reduces_to_sync_bitwise(algo):
+    """Zero latency + tick_s >= round time: the async tick IS the sync
+    round — history["loss"] matches bit for bit."""
+    _bit_identity_case(algo)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algo", sorted(solver_names("dfl")))
+def test_async_reduces_to_sync_bitwise_all_solvers(algo):
+    """The acceptance pin: the reduction holds for every registered DFL
+    solver (the shared make_local_phase carries the whole zoo)."""
+    _bit_identity_case(algo, rounds=3)
+
+
+def test_async_determinism_under_fixed_seed():
+    loss_fn, params, sampler = _toy_problem()
+    cfg = DFLConfig(algorithm="dfedadmm", m=8, K=3, topology="ring",
+                    network="wan-lan", execution="async", tick_s=0.02,
+                    max_staleness=3)
+    _, h1 = simulate(loss_fn, None, params, cfg, sampler, rounds=6, seed=0)
+    _, h2 = simulate(loss_fn, None, params, cfg, sampler, rounds=6, seed=0)
+    for key in ("loss", "sim_time", "staleness", "ticked", "wire_bytes"):
+        assert h1[key] == h2[key]
+    assert any(f < 1.0 for f in h1["ticked"])   # genuinely async schedule
+
+
+def test_async_empty_ticks_freeze_state():
+    """tick_s below the round time: the first window has no completions
+    — no jitted call runs, the row records NaN loss / zero time."""
+    loss_fn, params, sampler = _toy_problem()
+    cfg = DFLConfig(algorithm="dfedavg", m=8, K=3, topology="ring",
+                    network=_flat_net(8), execution="async", tick_s=0.004,
+                    max_staleness=4)
+    _, h = simulate(loss_fn, None, params, cfg, sampler, rounds=4, seed=0)
+    assert np.isnan(h["loss"][0]) and h["ticked"][0] == 0.0
+    assert h["sim_time"][0] == 0.0 and h["wire_bytes"][0] == 0
+    assert h["ticked"][1] == 1.0 and np.isfinite(h["loss"][1])
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="execution"):
+        DFLConfig(m=4, execution="eventual")
+    with pytest.raises(ValueError, match="network"):
+        DFLConfig(m=4, execution="async", tick_s=0.1)
+    with pytest.raises(ValueError, match="tick_s"):
+        DFLConfig(m=4, execution="async", network="uniform")
+    with pytest.raises(ValueError, match="max_staleness"):
+        DFLConfig(m=4, execution="async", network="uniform", tick_s=0.1,
+                  max_staleness=-1)
+    with pytest.raises(ValueError, match="deadline"):
+        DFLConfig(m=4, execution="async", network="uniform", tick_s=0.1,
+                  participation=ParticipationSpec(mode="deadline",
+                                                  deadline=0.05))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler + effective matrix invariants (host-side, no jit)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_clocks_and_staleness():
+    m = 6
+    from repro.core import make_network
+    net = make_network("lognormal", m, seed=3)
+    specs = time_varying_specs("ring", m, 12)
+    cfg = DFLConfig(algorithm="dfedadmm", m=m, K=3, topology="ring",
+                    network=net, execution="async", tick_s=0.02,
+                    max_staleness=2)
+    sched = AsyncScheduler(cfg, net, specs, bytes_per_client=10_000)
+    prev_clock = sched.clock.copy()
+    cum = 0.0
+    for t in range(12):
+        ev = sched.step(t)
+        assert (sched.clock >= prev_clock).all()     # non-decreasing
+        prev_clock = sched.clock.copy()
+        assert ev.staleness <= cfg.max_staleness
+        assert (ev.ages[ev.fresh] <= cfg.max_staleness).all()
+        assert (ev.ages[ev.active] == 0).all()
+        assert (ev.steps[~ev.active] == 0).all()
+        assert ev.sim_dt >= 0.0
+        cum += ev.sim_dt
+        # applied events all lie inside the windows seen so far
+        assert cum <= (t + 1) * cfg.tick_s + 1e-12
+
+
+def test_scheduler_composes_with_sampling_participation():
+    """A sampled-out client defers its completion instead of losing it:
+    its round count never regresses and it eventually ticks."""
+    m = 6
+    from repro.core import make_network
+    net = make_network("uniform", m, seed=0, jitter=0.0)
+    specs = time_varying_specs("ring", m, 10)
+    cfg = DFLConfig(algorithm="dfedavg", m=m, K=3, topology="ring",
+                    network=net, execution="async", tick_s=1.0,
+                    max_staleness=8,
+                    participation=ParticipationSpec(mode="uniform", p=0.5,
+                                                    seed=1))
+    sched = AsyncScheduler(cfg, net, specs, bytes_per_client=100)
+    prev = sched.rounds_done.copy()
+    for t in range(10):
+        ev = sched.step(t)
+        assert (sched.rounds_done >= prev).all()
+        prev = sched.rounds_done.copy()
+        assert (ev.active <= (sched.done > 0)).all()
+    assert (sched.rounds_done >= 1).all()            # nobody starves
+
+
+def test_effective_matrix_reduces_to_masked_plan():
+    """With receiving == fresh the effective matrix IS the participation
+    machinery's masked plan (Definition 1 on the active subgraph)."""
+    m = 8
+    w = make_gossip("exp", m).matrix
+    active = np.array([1, 0, 1, 1, 0, 1, 1, 1], dtype=bool)
+    np.testing.assert_array_equal(effective_matrix(w, active, active),
+                                  mask_and_renormalize(w, active))
+    p = as_column_stochastic(make_gossip("dring", m).matrix)
+    np.testing.assert_array_equal(
+        effective_matrix(p, active, active, column=True),
+        mask_and_renormalize_columns(p, active))
+
+
+def test_effective_matrix_asymmetric_masks():
+    """Stale senders are masked with the lost mass on the receiver's
+    diagonal: rows stay stochastic, non-receiving rows stay identity."""
+    m = 6
+    w = make_gossip("ring", m).matrix
+    receiving = np.array([1, 1, 0, 1, 1, 0], dtype=bool)
+    fresh = np.array([1, 0, 1, 1, 0, 1], dtype=bool)
+    wm = effective_matrix(w, receiving, fresh)
+    np.testing.assert_allclose(wm.sum(axis=1), 1.0, atol=1e-12)
+    assert (wm >= 0.0).all()
+    for i in np.flatnonzero(~receiving):
+        expect = np.zeros(m)
+        expect[i] = 1.0
+        np.testing.assert_array_equal(wm[i], expect)
+    # a stale sender contributes to nobody but itself
+    for j in np.flatnonzero(~fresh):
+        off = np.delete(wm[:, j], j)
+        assert (off == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Composition with the communication layer
+# ---------------------------------------------------------------------------
+
+_PAIRS = [
+    ("dense", "identity", "ring"),
+    ("pushsum", "identity", "dring"),
+] + [
+    pytest.param(*p, marks=pytest.mark.slow) for p in [
+        ("dense", "int8", "ring"),
+        ("dense", "topk", "ring"),
+        ("dense", "randk", "ring"),
+        ("ppermute", "identity", "ring"),
+        ("ppermute", "int8", "ring"),
+        ("ppermute", "topk", "ring"),
+        ("ppermute", "randk", "ring"),
+        ("pushsum", "int8", "dring"),
+        ("pushsum", "topk", "dring"),
+        ("pushsum", "randk", "dring"),
+    ]
+]
+
+
+@pytest.mark.parametrize("transport,codec,topology", _PAIRS)
+def test_async_comm_composition(transport, codec, topology):
+    """Every (transport, codec) pair runs under async ticks with the
+    wire/state telemetry consistent: wire_bytes counts the tick's
+    publishers, residuals stay finite, push-sum mass stays conserved."""
+    import jax.numpy as jnp
+
+    m, ticks = 8, 6
+    loss_fn, params, sampler = _toy_problem(m=m)
+    cfg = DFLConfig(algorithm="dfedadmm", m=m, K=3, topology=topology,
+                    transport=transport, codec=codec, codec_k=4,
+                    network="wan-lan", execution="async", tick_s=0.02,
+                    max_staleness=3)
+    state, h = simulate(loss_fn, None, params, cfg, sampler,
+                        rounds=ticks, seed=0)
+    bytes_pc = make_codec(cfg).bytes_per_client(params)
+    assert len(h["wire_bytes"]) == ticks
+    for frac, wb, stale in zip(h["ticked"], h["wire_bytes"],
+                               h["staleness"]):
+        assert wb == bytes_pc * round(frac * m)
+        assert 0 <= stale <= cfg.max_staleness
+    assert any(f < 1.0 for f in h["ticked"])     # schedule actually async
+    if make_codec(cfg).stateful:
+        resid = state.comm["residual"]["w"]
+        assert bool(jnp.isfinite(resid).all())
+    if transport == "pushsum":
+        pi = np.asarray(state.comm["ps_weight"])
+        assert (pi > 0).all()
+        assert np.isclose(pi.sum(), 1.0, atol=1e-5)

@@ -243,3 +243,50 @@ def test_simulate_without_network_has_no_sim_time():
     _, hist = simulate(loss_fn, None, params, cfg, sampler,
                        rounds=2, seed=0)
     assert "sim_time" not in hist
+
+
+# ---------------------------------------------------------------------------
+# Deadline-mode sim_time pricing (regression)
+# ---------------------------------------------------------------------------
+
+def _forced_client_net(K=3):
+    """m=4 ring where the deadline decision and the round price diverge:
+    client 0's slow in-link (3 -> 0, 0.5 s) makes it miss the deadline,
+    and client 3's in-link (2 -> 3, 0.9 s) is the pre-mask critical
+    path.  With ``min_active=3`` the floor forces client 0 back in."""
+    lat = np.full((4, 4), 0.001)
+    lat[0, 3] = 0.5
+    lat[3, 2] = 0.9
+    return NetworkModel(name="custom", bandwidth=np.full((4, 4), 1e12),
+                        latency=lat, jitter=0.0, compute_s=0.002)
+
+
+def test_deadline_round_time_prices_forced_clients():
+    """The round price is the slowest *realized* wait among included
+    clients — the min_active-forced client's 0.5 s transfer, not the
+    post-mask subgraph's ~1 ms and not the excluded critical path."""
+    net = _forced_client_net()
+    w = make_gossip("ring", 4).matrix
+    transfer = net.transfer_times(w, 24, 0)
+    np.testing.assert_allclose(transfer, [0.5, 0.001, 0.001, 0.9])
+    active = np.array([True, True, True, False])
+    got = net.deadline_round_time(transfer, active, K=3)
+    np.testing.assert_allclose(got, 3 * 0.002 + 0.5)
+    # and it is neither of the two wrong readings
+    assert not np.isclose(got, 3 * 0.002 + 0.001, atol=1e-4)   # post-mask
+    assert not np.isclose(got, 3 * 0.002 + 0.9, atol=1e-4)     # pre-mask max
+
+
+@pytest.mark.slow
+def test_simulate_deadline_sim_time_regression():
+    """End-to-end pin of the deadline pricing through simulate: the
+    forced client's decision-time transfer dominates sim_time."""
+    loss_fn, params, sampler = _toy_problem(m=4)
+    cfg = DFLConfig(
+        algorithm="dfedavg", m=4, K=3, topology="ring",
+        network=_forced_client_net(),
+        participation=ParticipationSpec(mode="deadline", deadline=0.01,
+                                        min_active=3))
+    _, hist = simulate(loss_fn, None, params, cfg, sampler,
+                       rounds=2, seed=0)
+    np.testing.assert_allclose(hist["sim_time"], [3 * 0.002 + 0.5] * 2)

@@ -231,3 +231,67 @@ def test_microbatch_exactness_property(m, k, n, seed):
         rng = np.random.default_rng(seed)   # same batches both times
     np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
                                rtol=1e-5, atol=1e-6)
+
+
+@given(m=st.integers(2, 12), seed=st.integers(0, 1000),
+       p=st.floats(0.1, 0.9), fresh_p=st.floats(0.1, 1.0))
+def test_effective_matrix_row_stochastic_on_active_subgraph(m, seed, p,
+                                                           fresh_p):
+    """The async tick's effective mixing matrix stays row-stochastic and
+    non-negative for any topology x receiving/fresh masks, with identity
+    rows for clients that sit the tick out (Definition 1 on the
+    effective subgraph)."""
+    from repro.core.async_engine import effective_matrix
+    rng = np.random.default_rng(seed)
+    topo = ["ring", "exp", "full", "random"][seed % 4]
+    spec = gossip.make_gossip(topo, m, degree=3, seed=seed)
+    receiving = rng.random(m) < p
+    fresh = rng.random(m) < fresh_p
+    wm = effective_matrix(spec.matrix, receiving, fresh)
+    np.testing.assert_allclose(wm.sum(axis=1), 1.0, atol=1e-12)
+    assert (wm >= 0.0).all()
+    for i in np.flatnonzero(~receiving):
+        assert wm[i, i] == 1.0 and np.count_nonzero(wm[i]) == 1
+    # symmetric masks == the participation machinery's masked plan
+    np.testing.assert_array_equal(
+        effective_matrix(spec.matrix, receiving, receiving),
+        gossip.mask_and_renormalize(spec.matrix, receiving))
+
+
+@given(m=st.integers(2, 10), seed=st.integers(0, 1000),
+       tick_s=st.floats(0.004, 0.1), max_staleness=st.integers(0, 5),
+       mode=st.sampled_from(["full", "uniform", "fraction"]))
+def test_async_scheduler_invariants(m, seed, tick_s, max_staleness, mode):
+    """For random networks x topologies x participation specs: per-client
+    virtual clocks never decrease, fresh ages never exceed the staleness
+    cap, and the reported staleness telemetry respects the cap."""
+    from repro.core import (DFLConfig, ParticipationSpec, make_network)
+    from repro.core.async_engine import AsyncScheduler
+    net = make_network(["lognormal", "wan-lan", "uniform"][seed % 3], m,
+                       seed=seed)
+    specs = gossip.time_varying_specs("random", m, 8, degree=3,
+                                      base_seed=seed)
+    part = ParticipationSpec()
+    if mode == "uniform":
+        part = ParticipationSpec(mode="uniform", p=0.6, seed=seed)
+    elif mode == "fraction":
+        part = ParticipationSpec(mode="fraction", p=0.5, seed=seed)
+    cfg = DFLConfig(algorithm="dfedadmm", m=m, K=2, topology="random",
+                    degree=3, network=net, participation=part,
+                    execution="async", tick_s=tick_s,
+                    max_staleness=max_staleness)
+    sched = AsyncScheduler(cfg, net, specs, bytes_per_client=1000)
+    prev_clock = sched.clock.copy()
+    prev_rounds = sched.rounds_done.copy()
+    for t in range(8):
+        ev = sched.step(t)
+        assert (sched.clock >= prev_clock - 1e-15).all()
+        assert (sched.rounds_done >= prev_rounds).all()
+        prev_clock = sched.clock.copy()
+        prev_rounds = sched.rounds_done.copy()
+        assert 0 <= ev.staleness <= max_staleness
+        assert (ev.ages[ev.fresh] <= max_staleness).all()
+        assert (ev.ages >= 0).all()
+        assert ev.sim_dt >= 0.0
+        assert (ev.steps[~ev.active] == 0).all()
+        assert (ev.steps[ev.active] == cfg.K).all()
