@@ -121,7 +121,9 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
             lr=0.1, lam=0.2, rho=0.05, seed=0, eval_every=5,
             participation=None, transport="", codec="identity",
             codec_bits=8, codec_k=64, use_kernel=False, network=None,
-            execution="sync", tick_s=0.0, max_staleness=4):
+            execution="sync", tick_s=0.0, max_staleness=4,
+            threat=None, robust="mean", robust_trim=0.25,
+            dp_clip=1.0, dp_noise=0.0):
     """Run a DFL algorithm on the synthetic federated task; returns
     (final_acc, history, us_per_round) — us_per_round is the
     steady-state median over post-compile rounds (``steady_state_us``).
@@ -152,7 +154,9 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
                     use_kernel=use_kernel,
                     participation=participation or ParticipationSpec(),
                     network=network, execution=execution, tick_s=tick_s,
-                    max_staleness=max_staleness)
+                    max_staleness=max_staleness, threat=threat,
+                    robust=robust, robust_trim=robust_trim,
+                    dp_clip=dp_clip, dp_noise=dp_noise)
     params = mlp_init(task.dim, task.n_classes, seed=seed)
 
     def eval_fn(p):

@@ -21,7 +21,7 @@ import sys
 BENCH_SCHEMA_VERSION = 1
 
 SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
-          "roofline", "participation", "comm", "net", "async")
+          "roofline", "participation", "comm", "net", "async", "robust")
 
 
 def _run_suite(suite: str, quick: bool) -> None:
@@ -65,6 +65,9 @@ def _run_suite(suite: str, quick: bool) -> None:
         async_bench.run(rounds=8 if quick else 20,
                         ticks=32 if quick else 100,
                         target=0.5 if quick else 0.8)
+    elif suite == "robust":
+        from benchmarks import robust_bench
+        robust_bench.run(rounds=12 if quick else 20, target=0.7)
     else:
         raise ValueError(f"unknown suite {suite!r}")
 

@@ -272,6 +272,70 @@ def update_async(text):
     return text
 
 
+def robust_table(rows):
+    """Attack scenario x aggregator -> accuracy under Byzantine clients
+    (``repro.core.threat``), plus the DP codec's privacy/utility points;
+    the headline row pins trimmed-mean holding the target where plain
+    mean collapses."""
+    lines = [
+        "| scenario | aggregator | acc | rounds-to-target | notes |",
+        "|---|---|---|---|---|",
+    ]
+    for name, us, f in rows:
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "robust":
+            continue
+        _, scenario, variant = parts
+        if scenario == "headline":
+            rt = next((f[k] for k in f
+                       if k.startswith("trimmed_mean_rounds_to")), "-")
+            lines.append(f"| headline ({variant}) | trimmed_mean vs mean "
+                         f"| - | {rt} | holds={f.get('holds', '-')} |")
+            continue
+        if "acc" not in f:
+            continue
+        rt_key = next((k for k in f if k.startswith("rounds_to")), None)
+        notes = []
+        if "adversaries" in f:
+            notes.append(f"adversaries {f['adversaries']}")
+        if "clip" in f:
+            notes.append(f"clip {f['clip']}, noise x{f['noise_mult']}, "
+                         f"clipped {f['clip_frac']}")
+        agg = variant if scenario != "dp" else f"mean ({variant} dp)"
+        lines.append(
+            f"| {scenario} | {agg} | {f['acc']} | "
+            f"{f[rt_key] if rt_key else '-'} | {', '.join(notes) or '-'} |")
+    if len(lines) == 2:
+        return None
+    return "\n".join(lines)
+
+
+def update_robust(text):
+    path = os.path.join(ART_DIR, "robust.csv")
+    if not os.path.exists(path):
+        print(f"no {path}; skipping robustness table "
+              "(generate it with: PYTHONPATH=src python -m benchmarks.run "
+              "--suite robust > " + path + ")")
+        return text
+    table = robust_table(_parse_bench_csv(path))
+    if table is None:
+        print(f"{path} has no robust rows; skipping")
+        return text
+    body = ("Byzantine attacks against robust transport-level mixing "
+            "(``repro.core.threat``): 20% of clients sign-flip their "
+            "outgoing gossip messages each round; every honest receiver "
+            "aggregates its neighbourhood with the chosen robust "
+            "aggregator.  The dp rows run the ``dp`` wire codec (per-"
+            "client L2 clip + Gaussian noise on the error-feedback path) "
+            "with no attack — regenerate via ``PYTHONPATH=src python -m "
+            "benchmarks.run --suite robust`` and "
+            "``experiments/update_tables.py``.\n\n" + table)
+    text = _replace_section(text, "<!-- ROBUST -->",
+                            r"\n<!-- |\n## |\Z", body)
+    print("robustness table updated")
+    return text
+
+
 def main():
     text = open(MD_PATH).read() if os.path.exists(MD_PATH) else \
         "# EXPERIMENTS\n"
@@ -279,6 +343,7 @@ def main():
     text = update_participation(text)
     text = update_network(text)
     text = update_async(text)
+    text = update_robust(text)
     open(MD_PATH, "w").write(text)
 
 

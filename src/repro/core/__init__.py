@@ -27,6 +27,14 @@ from repro.core.comm import (CODECS, TRANSPORTS, DenseTransport,
                              register_codec)
 from repro.core.network import (NETWORKS, NetworkModel, make_network,
                                 network_names, register_network)
+from repro.core.threat import (AGGREGATORS, ATTACKS, Attack, DPCodec,
+                               KrumAggregator, MeanAggregator,
+                               MedianAggregator, RobustAggregator,
+                               RobustTransport, ThreatSpec,
+                               TrimmedMeanAggregator, adversary_mask,
+                               aggregator_names, attack_names,
+                               make_aggregator, make_attack,
+                               register_aggregator, register_attack)
 from repro.core.participation import (ParticipationSpec, RoundParticipation,
                                       participation_schedule,
                                       round_participation)

@@ -225,6 +225,16 @@ def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
     solver = solvers_lib.make_solver(cfg)
     local_phase = make_local_phase(loss_fn, cfg, solver, masked=True,
                                    per_client_lr=True)
+    # adversarial layer: same seeded persistent adversary set as the sync
+    # round (repro.core.threat); an adversary attacks only on the ticks
+    # it publishes
+    attack, adv_mask = None, None
+    if cfg.threat is not None and not cfg.threat.is_trivial:
+        from repro.core import threat as threat_lib
+        adv_np = threat_lib.adversary_mask(cfg.threat, cfg.m)
+        if adv_np.any():
+            attack = threat_lib.make_attack(cfg.threat)
+            adv_mask = jnp.asarray(adv_np)
 
     def tick_fn(state: DFLState, zbuf: PyTree, batches: PyTree, plan,
                 active: jax.Array, steps: jax.Array,
@@ -236,12 +246,23 @@ def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             state.params, state.solver, batches, rngs, lr_t,
             active, steps)
 
+        if adv_mask is not None:
+            # perturb the outgoing message of the adversaries that
+            # publish this tick (a non-ticking adversary sends nothing,
+            # and its z is the anchor the gating must preserve)
+            atk_rng = jax.random.fold_in(
+                jax.random.fold_in(state.rng[0], state.round), 0xBAD)
+            z = attack.perturb(z, jnp.logical_and(adv_mask, active),
+                               atk_rng)
+
+        wire_metrics = {}
         aux = state.comm if state.comm is not None else {}
         if codec.stateful:
             codec_rng = jax.random.fold_in(
                 jax.random.fold_in(state.rng[0], state.round), 0x51AB3)
             wire, new_resid = codec.encode(z, aux.get("residual"),
                                            codec_rng, active)
+            wire_metrics = codec.wire_metrics(wire)
             zhat = codec.decode(wire)
         else:
             zhat, new_resid = z, None
@@ -277,6 +298,7 @@ def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             "lr": jnp.max(jnp.where(active, lr_t, 0.0)),
             "ticked": jnp.mean(af),
         }
+        out_metrics.update(wire_metrics)
         if metrics == "full":
             out_metrics["consensus_sq"] = consensus_distance(new_params)
             d = solver.dual_tree(new_solver)
@@ -352,6 +374,8 @@ def simulate_async(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
                                 "wire_bytes": [], "wall_us": [],
                                 "sim_time": [], "staleness": [],
                                 "ticked": []}
+    for k in codec.metric_names():
+        history[k] = []                 # e.g. dp codec clip-fraction rows
     eval_hist: dict[str, list] = {}
     for t in range(ticks):
         ev = scheduler.step(t)
@@ -366,15 +390,20 @@ def simulate_async(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
                 jnp.asarray(ev.lr_rounds, jnp.int32))
             jax.block_until_ready((state.params, metrics))
             history["wall_us"].append((time.perf_counter() - t0) * 1e6)
-            for k in ("loss", "lr", "consensus_sq", "dual_norm", "ticked"):
+            for k in ("loss", "lr", "consensus_sq", "dual_norm", "ticked") \
+                    + codec.metric_names():
                 history[k].append(float(metrics[k]))
         else:
             # empty window: no completions, no jitted call, state frozen
             history["wall_us"].append(0.0)
-            for k in ("loss", "lr", "consensus_sq", "dual_norm"):
+            for k in ("loss", "lr", "consensus_sq", "dual_norm") \
+                    + codec.metric_names():
                 history[k].append(float("nan"))
             history["ticked"].append(0.0)
         history["round"].append(t)
+        # uplink accounting: ONLY the clients that ticked published a
+        # message this window — bytes = codec size x ticking clients,
+        # never x m (regression-pinned in tests/test_async.py)
         history["wire_bytes"].append(bytes_per_client * n_active)
         history["sim_time"].append(ev.sim_dt)
         history["staleness"].append(ev.staleness)

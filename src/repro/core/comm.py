@@ -70,7 +70,7 @@ from repro.core.gossip import (GossipSpec, as_column_stochastic,
 PyTree = Any
 
 TRANSPORTS = ("dense", "ppermute", "pushsum")
-CODECS = ("identity", "int8", "topk", "randk")
+CODECS = ("identity", "int8", "topk", "randk", "dp")
 
 
 # ---------------------------------------------------------------------------
@@ -231,13 +231,31 @@ def make_transport(cfg, spec: GossipSpec | None = None, mesh=None,
     """
     name = cfg.transport
     if name == "dense":
-        return DenseTransport()
-    if name == "ppermute":
-        return PpermuteTransport(spec, mesh=mesh, client_axis=client_axis,
+        base = DenseTransport()
+    elif name == "ppermute":
+        base = PpermuteTransport(spec, mesh=mesh, client_axis=client_axis,
                                  inner_specs=inner_specs)
-    if name == "pushsum":
-        return PushSumTransport()
-    raise ValueError(f"unknown transport {name!r}; expected one of {TRANSPORTS}")
+    elif name == "pushsum":
+        base = PushSumTransport()
+    else:
+        raise ValueError(
+            f"unknown transport {name!r}; expected one of {TRANSPORTS}")
+    robust = getattr(cfg, "robust", "mean")
+    if robust and robust != "mean":
+        # the adversarial layer (repro.core.threat): wrap the transport
+        # so the mix step applies a per-receiver robust statistic over
+        # the plan support instead of the weighted contraction.
+        # robust="mean" deliberately returns the UNWRAPPED transport —
+        # the zero-adversary code path stays bit-identical to the seed.
+        from repro.core import threat as threat_lib
+        if name == "ppermute" and mesh is not None:
+            raise ValueError(
+                "robust aggregation needs the full neighbourhood "
+                "materialized per receiver, which the on-mesh gated-"
+                "permute path never does; use transport='dense' (or the "
+                "meshless ppermute fallback) with robust mixing")
+        return threat_lib.RobustTransport(base, threat_lib.make_aggregator(cfg))
+    return base
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +295,18 @@ class MessageCodec:
         cost model (``repro.core.network``)."""
         return int(sum(leaf.size * leaf.dtype.itemsize
                        for leaf in jax.tree.leaves(params_single)))
+
+    def metric_names(self) -> tuple[str, ...]:
+        """Names of the per-round telemetry scalars this codec emits via
+        :meth:`wire_metrics` (the round loops allocate one history list
+        per name; e.g. the dp codec reports ``dp_clip_frac``)."""
+        return ()
+
+    def wire_metrics(self, wire) -> dict:
+        """Per-round telemetry scalars computed from this round's
+        ``wire`` (traced, inside jit); keys must match
+        :meth:`metric_names`."""
+        return {}
 
 
 class IdentityCodec(MessageCodec):
@@ -586,6 +616,12 @@ def make_codec(cfg) -> MessageCodec:
         return TopKCodec(k=cfg.codec_k)
     if name == "randk":
         return RandKCodec(k=cfg.codec_k)
+    if name == "dp":
+        # the privacy wire lives with the rest of the adversarial layer
+        # (import deferred: threat.py imports this module)
+        from repro.core.threat import DPCodec
+        return DPCodec(clip=getattr(cfg, "dp_clip", 1.0),
+                       noise=getattr(cfg, "dp_noise", 0.0))
     raise ValueError(
         f"unknown codec {name!r}; expected one of {codec_names()}")
 

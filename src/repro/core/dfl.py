@@ -20,7 +20,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import comm as comm_lib, sam, solvers as solvers_lib
+from repro.core import (comm as comm_lib, sam, solvers as solvers_lib,
+                        threat as threat_lib)
 from repro.core.gossip import DIRECTED_TOPOLOGIES, GossipSpec
 from repro.core.network import (NetworkModel, make_network, network_names)
 from repro.core.participation import ParticipationSpec
@@ -80,6 +81,22 @@ class DFLConfig:
                                  # older than this many ticks is masked
                                  # out of the mix (0 = only same-tick
                                  # publications are mixed)
+    threat: Any = None           # adversarial scenario: a
+                                 # repro.core.threat.ThreatSpec (seeded
+                                 # Byzantine clients perturbing their
+                                 # outgoing messages) or None — the
+                                 # default builds the exact unthreatened
+                                 # round, bit for bit
+    robust: str = "mean"         # robust mixing: "mean" (plain gossip,
+                                 # the unwrapped transport) or a
+                                 # RobustAggregator name ("trimmed_mean",
+                                 # "median", "krum", or registered)
+    robust_trim: float = 0.25    # trimmed_mean: fraction trimmed per
+                                 # side; krum: assumed Byzantine fraction
+                                 # per neighbourhood
+    dp_clip: float = 1.0         # dp codec: per-client L2 clip bound
+    dp_noise: float = 0.0        # dp codec: noise multiplier (noise std
+                                 # = dp_noise * dp_clip)
 
     def __post_init__(self):
         if self.algorithm not in solvers_lib.solver_names("dfl"):
@@ -112,6 +129,30 @@ class DFLConfig:
             raise ValueError(
                 f"use_kernel must be a bool, 'comm', or 'solver', "
                 f"got {self.use_kernel!r}")
+        # adversarial/privacy layer (repro.core.threat): fail at config
+        # construction with a clear message, never inside jit
+        if self.threat is not None and not isinstance(
+                self.threat, threat_lib.ThreatSpec):
+            raise ValueError(
+                "DFLConfig.threat must be a repro.core.threat.ThreatSpec "
+                f"(or None), got {type(self.threat).__name__}: "
+                f"{self.threat!r}")
+        if self.robust not in threat_lib.aggregator_names():
+            raise ValueError(
+                f"unknown robust aggregator {self.robust!r}; expected one "
+                f"of {threat_lib.aggregator_names()}")
+        if not 0.0 <= self.robust_trim < 0.5:
+            raise ValueError(
+                "robust_trim is a per-side trim / Byzantine fraction and "
+                f"must be in [0, 0.5), got {self.robust_trim}")
+        if not self.dp_clip > 0.0:
+            raise ValueError(
+                f"dp_clip must be > 0 (per-client L2 clip bound), "
+                f"got {self.dp_clip}")
+        if self.dp_noise < 0.0:
+            raise ValueError(
+                f"dp_noise must be >= 0 (noise multiplier), "
+                f"got {self.dp_noise}")
         if self.topology in DIRECTED_TOPOLOGIES and eff != "pushsum":
             raise ValueError(
                 f"directed topology {self.topology!r} is only sound under "
@@ -417,6 +458,16 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
     solver = solvers_lib.make_solver(cfg)
     masked = not cfg.participation.is_trivial
     local_phase = make_local_phase(loss_fn, cfg, solver, masked=masked)
+    # adversarial layer: a seeded persistent adversary set perturbs its
+    # outgoing messages inside the jitted round.  With no threat (or a
+    # trivial one) nothing is built and the round is the exact
+    # unthreatened computation.
+    attack, adv_mask = None, None
+    if cfg.threat is not None and not cfg.threat.is_trivial:
+        adv_np = threat_lib.adversary_mask(cfg.threat, cfg.m)
+        if adv_np.any():
+            attack = threat_lib.make_attack(cfg.threat)
+            adv_mask = jnp.asarray(adv_np)
 
     def round_fn(state: DFLState, batches: PyTree, plan,
                  active: jax.Array | None = None,
@@ -436,6 +487,18 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             params_K, new_solver, z, losses = local_phase(
                 state.params, state.solver, batches, rngs, lr_t)
 
+        if adv_mask is not None:
+            # adversaries corrupt their OUTGOING message before the codec
+            # sees it; a masked-out adversary transmits nothing this round
+            # (and its z is the anchor the identity plan row must hold in
+            # place), so the attack mask intersects the active mask
+            atk_rng = jax.random.fold_in(
+                jax.random.fold_in(state.rng[0], state.round), 0xBAD)
+            adv_now = jnp.logical_and(adv_mask, active) if masked \
+                else adv_mask
+            z = attack.perturb(z, adv_now, atk_rng)
+
+        wire_metrics = {}
         aux = state.comm if state.comm is not None else {}
         if codec.stateful:
             codec_rng = jax.random.fold_in(
@@ -454,6 +517,7 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                 wire, new_resid = codec.encode(z, aux.get("residual"),
                                                codec_rng,
                                                active if masked else None)
+                wire_metrics = codec.wire_metrics(wire)
                 zhat = codec.decode(wire)
                 if masked:
                     # an inactive client transmits nothing — its
@@ -497,6 +561,7 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             }
         else:
             out_metrics = {"loss": jnp.mean(losses), "lr": lr_t}
+        out_metrics.update(wire_metrics)
         if metrics == "full":
             out_metrics["consensus_sq"] = consensus_distance(new_params)
             d = solver.dual_tree(new_solver)
@@ -590,6 +655,8 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
         history["participation"] = []
     if net is not None:
         history["sim_time"] = []
+    for k in codec.metric_names():
+        history[k] = []                 # e.g. dp codec clip-fraction rows
     eval_hist: dict[str, list] = {}
     for t in range(rounds):
         batches = sample_batches(t)
@@ -629,7 +696,8 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
                     specs[t].matrix, bytes_per_client, t, cfg.K,
                     active=None if trivial else sched[t].active))
         history["round"].append(t)
-        for k in ("loss", "lr", "consensus_sq", "dual_norm"):
+        for k in ("loss", "lr", "consensus_sq", "dual_norm") \
+                + codec.metric_names():
             history[k].append(float(metrics[k]))
         if eval_fn is not None and ((t + 1) % eval_every == 0 or t == rounds - 1):
             ev = eval_fn(mean_params(state.params))

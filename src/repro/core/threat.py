@@ -1,0 +1,589 @@
+"""Adversarial & privacy scenario layer: attacks, robust mixing, DP wire.
+
+The scenario engine models *absence* (sampling, dropout, stragglers,
+deadlines — ``repro.core.participation``); this module models *malice*
+and *privacy*, as a fifth pluggable layer next to solver / transport /
+codec / network.  Three pieces, each a registry:
+
+``Attack`` — what a Byzantine client sends.  A seeded adversary mask
+(:func:`adversary_mask`, persistent across rounds) enters the jitted
+round as an (m,) bool array; the attack perturbs the *outgoing* gossip
+message ``z`` of the masked clients before the codec sees it, so an
+adversary corrupts the protocol from inside it (its wire bytes, its
+error-feedback residual, its push-sum weight all stay protocol-shaped).
+Builtins: ``signflip`` (send ``-scale * z``), ``gaussian`` (additive
+``scale``-std noise), ``zero`` (drop: send an all-zero model), and
+``collude`` (model replacement: every adversary transmits the identical
+``scale``-amplified mean of the coalition's models).
+
+``RobustAggregator`` — what an honest receiver does about it.  Applied
+as a ``Transport``-level transform (:class:`RobustTransport` wraps any
+inner transport), so robustness composes with the dense, ppermute, and
+push-sum paths *and* with the async engine's effective-subgraph plans
+instead of forking the round loop.  Every aggregator consumes the same
+object the plain mix does — this round's (m, m) effective weight matrix
+(masked dense plan, ``effective_matrix`` tick plan, or the push-sum
+column plan with the sender weights folded in) — and treats row ``i``'s
+support ``w[i, j] > 0`` as receiver ``i``'s in-neighbourhood.  Builtins:
+``mean`` (renormalized weighted mean — the plain gossip step, and the
+identity wiring: ``robust="mean"`` never wraps the transport), trimmed
+mean (``trimmed_mean``: per coordinate, drop the ``robust_trim``
+fraction of extreme values per side, weighted-average the rest),
+coordinate ``median``, and ``krum`` (select the one candidate whose
+summed distance to its closest peers is smallest — Blanchard et al.'s
+Krum, per receiver neighbourhood).  An identity plan row (a masked-out
+or non-ticking client) reduces every builtin to an exact passthrough of
+the client's own message, so the participation/async freezing
+invariants hold unchanged under robust mixing.
+
+``DPCodec`` — what leaves an honest client.  A ``MessageCodec``
+(``DFLConfig(codec="dp")``): per-client global-L2 clip to ``dp_clip``
+then Gaussian noise with std ``dp_noise * dp_clip`` (the standard
+noise-multiplier convention).  The *clipping* error rides the existing
+error-feedback residual state (``DFLState.comm["residual"]``) so the
+clipped-off mass telescopes like any lossy codec's; the *noise* is
+deliberately excluded from the feedback — fed-back noise would cancel
+over rounds and void the privacy.  Per-round telemetry
+(``history["dp_clip_frac"]`` / ``history["dp_noise_mult"]``) flows
+through ``MessageCodec.wire_metrics``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core._registry import FactoryRegistry
+from repro.core.comm import MessageCodec, Transport, _gate_tree, _leaf_rngs
+
+PyTree = Any
+
+ATTACKS = ("signflip", "gaussian", "zero", "collude")
+AGGREGATORS = ("mean", "trimmed_mean", "median", "krum")
+
+
+# ---------------------------------------------------------------------------
+# Threat declaration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ThreatSpec:
+    """Who attacks and how: ``frac`` of the m clients (seeded, persistent
+    across rounds) run ``attack`` with amplification ``scale``."""
+
+    attack: str = "signflip"
+    frac: float = 0.0       # adversary fraction of m (floor(frac * m) clients)
+    scale: float = 1.0      # attack amplification factor
+    seed: int = 0           # seeds the adversary selection
+
+    def __post_init__(self):
+        if self.attack not in attack_names():
+            raise ValueError(
+                f"unknown attack {self.attack!r}; expected one of "
+                f"{attack_names()}")
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError(
+                f"ThreatSpec.frac must be in [0, 1], got {self.frac}")
+        if not math.isfinite(self.scale):
+            raise ValueError(
+                f"ThreatSpec.scale must be finite, got {self.scale}")
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when no client attacks (the round loop then builds the
+        exact unthreatened computation — bit-identical to no threat)."""
+        return self.frac == 0.0
+
+    def n_adversaries(self, m: int) -> int:
+        return int(math.floor(self.frac * m))
+
+
+def adversary_mask(spec: ThreatSpec, m: int) -> np.ndarray:
+    """(m,) bool — the seeded persistent adversary set: ``floor(frac*m)``
+    clients drawn without replacement from ``default_rng(spec.seed)``.
+    Host-side numpy; enters the jitted round as data, like the gossip
+    matrices and participation masks."""
+    n = spec.n_adversaries(m)
+    mask = np.zeros(m, dtype=bool)
+    if n > 0:
+        idx = np.random.default_rng(spec.seed).choice(m, size=n,
+                                                      replace=False)
+        mask[idx] = True
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Attacks: perturb the outgoing message z inside the jitted round
+# ---------------------------------------------------------------------------
+
+class Attack:
+    """Protocol: ``perturb(z, adv, rng) -> z'`` inside jit.
+
+    ``z`` is the (m, ...)-stacked outgoing messages, ``adv`` the (m,)
+    bool adversary mask for this round (already intersected with the
+    participation mask: a client that transmits nothing cannot attack),
+    ``rng`` a per-round PRNG key.  Honest rows must pass through
+    bit-identically — implementations compute the attacked tree and gate
+    it with ``_gate_tree(adv, attacked, z)``.
+    """
+
+    name: str = ""
+
+    def perturb(self, z: PyTree, adv: jax.Array, rng: jax.Array) -> PyTree:
+        raise NotImplementedError
+
+
+class SignFlipAttack(Attack):
+    """Send ``-scale * z``: the classic sign-flipping Byzantine client
+    (scale > 1 amplifies the reversed update)."""
+
+    def __init__(self, scale: float = 1.0):
+        self.scale = float(scale)
+        self.name = f"signflip[x{self.scale:g}]"
+
+    def perturb(self, z, adv, rng):
+        s = jnp.float32(self.scale)
+        bad = jax.tree.map(
+            lambda a: (-s * a.astype(jnp.float32)).astype(a.dtype), z)
+        return _gate_tree(adv, bad, z)
+
+
+class GaussianAttack(Attack):
+    """Send ``z + scale * N(0, I)``: heavy additive noise on the wire."""
+
+    def __init__(self, scale: float = 1.0):
+        self.scale = float(scale)
+        self.name = f"gaussian[{self.scale:g}]"
+
+    def perturb(self, z, adv, rng):
+        leaves, treedef = jax.tree.flatten(z)
+        s = jnp.float32(self.scale)
+        bad = [
+            (leaf.astype(jnp.float32)
+             + s * jax.random.normal(key, leaf.shape, jnp.float32)
+             ).astype(leaf.dtype)
+            for leaf, key in zip(leaves, _leaf_rngs(rng, leaves))]
+        return _gate_tree(adv, jax.tree.unflatten(treedef, bad), z)
+
+
+class ZeroAttack(Attack):
+    """Send the all-zero model: a drop/omission failure that still
+    occupies its slot in the mixing matrix."""
+
+    name = "zero"
+
+    def perturb(self, z, adv, rng):
+        return _gate_tree(adv, jax.tree.map(jnp.zeros_like, z), z)
+
+
+class ColludeAttack(Attack):
+    """Colluding model replacement: every adversary transmits the SAME
+    message — the ``scale``-amplified mean of the coalition's own
+    models — so the coalition pulls each neighbourhood toward one agreed
+    replacement point instead of adding independent noise."""
+
+    def __init__(self, scale: float = 1.0):
+        self.scale = float(scale)
+        self.name = f"collude[x{self.scale:g}]"
+
+    def perturb(self, z, adv, rng):
+        af = adv.astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(af), 1.0)
+        s = jnp.float32(self.scale)
+
+        def leaf(a):
+            w = af.reshape((a.shape[0],) + (1,) * (a.ndim - 1))
+            mu = jnp.sum(a.astype(jnp.float32) * w, axis=0) / n
+            return jnp.broadcast_to(s * mu, a.shape).astype(a.dtype)
+
+        return _gate_tree(adv, jax.tree.map(leaf, z), z)
+
+
+_ATTACK_REGISTRY = FactoryRegistry("attack", ATTACKS)
+
+
+def register_attack(name: str, factory, overwrite: bool = False) -> None:
+    """Register ``factory(spec: ThreatSpec) -> Attack`` under ``name``.
+
+    Mirrors ``comm.register_codec``: once registered the attack is
+    selectable via ``ThreatSpec(attack=name)`` (validated at
+    construction) with no round-loop changes."""
+    _ATTACK_REGISTRY.register(name, factory, overwrite)
+
+
+def attack_names() -> tuple[str, ...]:
+    """All selectable attack names: builtins plus registered ones."""
+    return _ATTACK_REGISTRY.names()
+
+
+def make_attack(spec: ThreatSpec) -> Attack:
+    """Build the attack named by ``spec.attack`` (builtin or registered)."""
+    name = spec.attack
+    if name in _ATTACK_REGISTRY:
+        return _ATTACK_REGISTRY.build(name, spec)
+    if name == "signflip":
+        return SignFlipAttack(spec.scale)
+    if name == "gaussian":
+        return GaussianAttack(spec.scale)
+    if name == "zero":
+        return ZeroAttack()
+    if name == "collude":
+        return ColludeAttack(spec.scale)
+    raise ValueError(
+        f"unknown attack {name!r}; expected one of {attack_names()}")
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregators: per-receiver robust statistics over the plan support
+# ---------------------------------------------------------------------------
+
+class RobustAggregator:
+    """Protocol: ``aggregate(z, w) -> x`` inside jit.
+
+    ``z`` is the (m, ...)-stacked messages, ``w`` this round's (m, m)
+    effective weight matrix — row ``i`` is receiver ``i``; support is
+    ``w[i, j] > 0`` (self-loops included).  Implementations must reduce
+    an identity row (support = {i}, weight 1) to an exact bitwise
+    passthrough of ``z_i``: the masked participation path and the async
+    engine both park frozen clients on identity rows.
+    """
+
+    name: str = ""
+
+    def aggregate(self, z: PyTree, w: jax.Array) -> PyTree:
+        raise NotImplementedError
+
+
+def _map_flat(z, fn):
+    """Apply ``fn(flat) -> flat'`` per leaf in (m, d) f32 view, restoring
+    shape and dtype."""
+    def leaf(a):
+        m = a.shape[0]
+        out = fn(a.astype(jnp.float32).reshape(m, -1))
+        return out.reshape(a.shape).astype(a.dtype)
+    return jax.tree.map(leaf, z)
+
+
+class MeanAggregator(RobustAggregator):
+    """Renormalized weighted mean — the plain gossip step.  With a
+    row-stochastic plan this is exactly ``mixing.mix_dense``; with the
+    push-sum effective weights ``P * pi`` the renormalization IS the
+    push-sum de-bias.  (``robust="mean"`` never reaches this class — the
+    round keeps the unwrapped transport for bit-identity — but it is
+    registered so tests and user code can call the mean through the same
+    aggregator API.)"""
+
+    name = "mean"
+
+    def aggregate(self, z, w):
+        w = w.astype(jnp.float32)
+        den = jnp.sum(w, axis=1)
+
+        def fn(flat):
+            return jnp.einsum("ij,jd->id", w, flat) / \
+                jnp.maximum(den, 1e-12)[:, None]
+        return _map_flat(z, fn)
+
+
+class TrimmedMeanAggregator(RobustAggregator):
+    """Coordinate-wise weighted trimmed mean.
+
+    Per receiver and per coordinate: sort the support values, drop the
+    ``floor(trim * n_i)`` smallest and largest (capped so at least one
+    survives), and weighted-average the survivors with their plan
+    weights renormalized.  At ``trim=0`` this reduces to the plain
+    weighted mean (the zero-adversary property the tests pin); a
+    ``trim`` at least the adversary fraction discards every Byzantine
+    coordinate that lands in the extremes.
+    """
+
+    def __init__(self, trim: float = 0.25):
+        if not 0.0 <= trim < 0.5:
+            raise ValueError(
+                f"trimmed_mean trim fraction must be in [0, 0.5), "
+                f"got {trim}")
+        self.trim = float(trim)
+        self.name = f"trimmed_mean[{self.trim:g}]"
+
+    def aggregate(self, z, w):
+        w = w.astype(jnp.float32)
+        sup = w > 0.0                                       # (mr, ms)
+        n = jnp.sum(sup, axis=1).astype(jnp.int32)          # (mr,)
+        t = jnp.minimum(
+            jnp.floor(jnp.float32(self.trim) * n.astype(jnp.float32)
+                      ).astype(jnp.int32),
+            (n - 1) // 2)                                   # (mr,)
+        lo = t[:, None, None]
+        hi = (n - t)[:, None, None]
+
+        def fn(flat):                                       # (ms, d)
+            ms = flat.shape[0]
+            vb = jnp.where(sup[:, :, None], flat[None, :, :], jnp.inf)
+            order = jnp.argsort(vb, axis=1)                 # (mr, ms, d)
+            vs = jnp.take_along_axis(vb, order, axis=1)
+            ws = jnp.take_along_axis(
+                jnp.broadcast_to(w[:, :, None], vb.shape), order, axis=1)
+            rank = jnp.arange(ms)[None, :, None]
+            keep = (rank >= lo) & (rank < hi)
+            num = jnp.sum(jnp.where(keep, ws * vs, 0.0), axis=1)
+            den = jnp.sum(jnp.where(keep, ws, 0.0), axis=1)
+            return num / jnp.maximum(den, 1e-12)
+        return _map_flat(z, fn)
+
+
+class MedianAggregator(RobustAggregator):
+    """Coordinate-wise median over the support (unweighted — the median
+    is an order statistic; the plan weights only define membership)."""
+
+    name = "median"
+
+    def aggregate(self, z, w):
+        sup = w.astype(jnp.float32) > 0.0
+        n = jnp.sum(sup, axis=1).astype(jnp.int32)
+        lo = ((n - 1) // 2)[:, None, None]
+        hi = (n // 2)[:, None, None]
+
+        def fn(flat):
+            vb = jnp.where(sup[:, :, None], flat[None, :, :], jnp.inf)
+            vs = jnp.sort(vb, axis=1)                       # (mr, ms, d)
+            a = jnp.take_along_axis(vs, lo, axis=1)[:, 0, :]
+            b = jnp.take_along_axis(vs, hi, axis=1)[:, 0, :]
+            return 0.5 * (a + b)
+        return _map_flat(z, fn)
+
+
+class KrumAggregator(RobustAggregator):
+    """Krum-style distance filtering: per receiver, select the ONE
+    support candidate whose summed squared distance to its
+    ``n_i - f_i - 2`` closest support peers is smallest (``f_i =
+    floor(f_frac * n_i)`` assumed Byzantine per neighbourhood).
+    Distances are global — summed over every leaf of the message — so a
+    replacement model cannot hide in one layer.  Score ties are real,
+    not a corner case — any mutually-closest pair ties when ``nsel = 1``
+    (the shared pair distance is both candidates' score) — so selection
+    is lexicographic: smallest score, then smallest total distance to
+    the support peers, then the receiver's own candidate.  All three
+    keys are permutation-invariant statistics of the neighbourhood, so
+    relabeling clients relabels the selection."""
+
+    def __init__(self, f_frac: float = 0.25):
+        if not 0.0 <= f_frac < 0.5:
+            raise ValueError(
+                f"krum Byzantine fraction must be in [0, 0.5), "
+                f"got {f_frac}")
+        self.f_frac = float(f_frac)
+        self.name = f"krum[{self.f_frac:g}]"
+
+    def aggregate(self, z, w):
+        w = w.astype(jnp.float32)
+        sup = w > 0.0
+        m = sup.shape[0]
+        n = jnp.sum(sup, axis=1).astype(jnp.int32)
+        f = jnp.floor(jnp.float32(self.f_frac) * n.astype(jnp.float32)
+                      ).astype(jnp.int32)
+        nsel = jnp.clip(n - f - 2, 1, jnp.maximum(n - 1, 1))
+
+        leaves, treedef = jax.tree.flatten(z)
+        d2 = jnp.zeros((m, m), jnp.float32)
+        for a in leaves:
+            flat = a.astype(jnp.float32).reshape(m, -1)
+            d2 = d2 + jnp.sum(
+                jnp.square(flat[:, None, :] - flat[None, :, :]), axis=-1)
+
+        eye = jnp.eye(m, dtype=bool)
+        # (receiver i, candidate j, peer k): peers restricted to i's
+        # support, self-distance excluded
+        dd = jnp.where(sup[:, None, :] & ~eye[None, :, :],
+                       d2[None, :, :], jnp.inf)
+        ds = jnp.sort(dd, axis=2)
+        rank = jnp.arange(m)[None, None, :]
+        score = jnp.sum(
+            jnp.where(rank < nsel[:, None, None], ds, 0.0), axis=2)
+        score = jnp.where(sup, score, jnp.inf)              # (mr, ms)
+        total = jnp.sum(jnp.where(jnp.isfinite(dd), dd, 0.0), axis=2)
+        nonself = 1.0 - jnp.eye(m, dtype=jnp.float32)
+        # last key is primary: score, then total, then prefer self
+        sel = jnp.lexsort((nonself, total, score), axis=1)[:, 0]
+        return jax.tree.map(lambda a: a[sel], z)
+
+
+_AGGREGATOR_REGISTRY = FactoryRegistry("aggregator", AGGREGATORS)
+
+
+def register_aggregator(name: str, factory, overwrite: bool = False) -> None:
+    """Register ``factory(cfg) -> RobustAggregator`` under ``name``.
+
+    Once registered the aggregator is selectable via
+    ``DFLConfig(robust=name)``; ``cfg`` is the full config, so factories
+    may read ``robust_trim`` / any field they need."""
+    _AGGREGATOR_REGISTRY.register(name, factory, overwrite)
+
+
+def aggregator_names() -> tuple[str, ...]:
+    """All selectable robust-aggregator names: builtins + registered."""
+    return _AGGREGATOR_REGISTRY.names()
+
+
+def make_aggregator(cfg) -> RobustAggregator:
+    """Build the aggregator named by ``cfg.robust``."""
+    name = getattr(cfg, "robust", "mean")
+    if name in _AGGREGATOR_REGISTRY:
+        return _AGGREGATOR_REGISTRY.build(name, cfg)
+    trim = float(getattr(cfg, "robust_trim", 0.25))
+    if name == "mean":
+        return MeanAggregator()
+    if name == "trimmed_mean":
+        return TrimmedMeanAggregator(trim)
+    if name == "median":
+        return MedianAggregator()
+    if name == "krum":
+        return KrumAggregator(trim)
+    raise ValueError(
+        f"unknown robust aggregator {name!r}; expected one of "
+        f"{aggregator_names()}")
+
+
+class RobustTransport(Transport):
+    """Wrap any inner transport with a robust aggregation of its plan.
+
+    ``prepare`` delegates to the inner transport (so the participation
+    masking, the push-sum column algebra, and the ppermute pattern
+    validation all run unchanged) and guarantees the plan reaching
+    ``mix`` is the realizable (m, m) weight matrix; ``mix`` replaces the
+    weighted contraction with the aggregator's per-receiver robust
+    statistic over the plan support.  Push-sum folds the sender weights
+    into the effective matrix (``P * pi``) and keeps the ``pi' = P pi``
+    contraction, so at ``trim=0`` the weighted trimmed mean reproduces
+    the push-sum de-bias exactly.  The async engine's raw
+    ``effective_matrix`` plans flow through the dense path untouched.
+    On-mesh ppermute is rejected at construction (``make_transport``):
+    a robust statistic needs the full neighbourhood materialized, which
+    the gated-permute path never does.
+    """
+
+    def __init__(self, inner: Transport, agg: RobustAggregator):
+        self.inner = inner
+        self.agg = agg
+        self.kind = inner.kind
+
+    def prepare(self, spec, active=None):
+        plan = self.inner.prepare(spec, active)
+        if self.kind == "ppermute" and plan is None:
+            # full participation: the inner transport's static pattern —
+            # realize it as the matrix the aggregator consumes
+            plan = jnp.asarray(self.inner.spec.matrix, jnp.float32)
+        return plan
+
+    def mix(self, z, plan, aux=None):
+        if self.kind == "pushsum":
+            if aux is None:
+                raise ValueError(
+                    "push-sum needs its weight state: initialize "
+                    "DFLState.comm via init_state (or Transport.init_aux)")
+            pi = aux.astype(jnp.float32)
+            eff = plan.astype(jnp.float32) * pi[None, :]
+            return self.agg.aggregate(z, eff), plan @ pi
+        return self.agg.aggregate(z, jnp.asarray(plan, jnp.float32)), aux
+
+    def init_aux(self, m: int):
+        return self.inner.init_aux(m)
+
+
+# ---------------------------------------------------------------------------
+# DP wire codec: per-client clip + Gaussian noise with EF on the clip error
+# ---------------------------------------------------------------------------
+
+class DPCodec(MessageCodec):
+    """Differentially-private wire: clip then noise, per client.
+
+    Per round, each client's error-compensated message ``e = z + resid``
+    is clipped to global L2 norm ``clip`` (one factor across all leaves)
+    and Gaussian noise with std ``noise * clip`` (noise-multiplier
+    convention) is added per coordinate.  The clipping error ``e -
+    clip(e)`` rides the shared error-feedback residual state so clipped
+    mass telescopes like any lossy codec's; the noise is EXCLUDED from
+    the feedback — carrying it would cancel the randomization over
+    rounds and void the privacy.  ``wire_metrics`` reports the fraction
+    of (active) clients that hit the clip bound and the configured noise
+    multiplier; the round loops thread both into
+    ``history["dp_clip_frac"]`` / ``history["dp_noise_mult"]``.
+    """
+
+    stateful = True
+
+    def __init__(self, clip: float = 1.0, noise: float = 0.0):
+        if not (math.isfinite(clip) and clip > 0.0):
+            raise ValueError(f"dp_clip must be > 0, got {clip}")
+        if not (math.isfinite(noise) and noise >= 0.0):
+            raise ValueError(f"dp_noise must be >= 0, got {noise}")
+        self.clip = float(clip)
+        self.noise = float(noise)
+        self.name = f"dp[clip={self.clip:g},noise={self.noise:g}]"
+        self._meta = None
+
+    def init_state(self, stacked_params: PyTree):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), stacked_params)
+
+    def metric_names(self) -> tuple[str, ...]:
+        return ("dp_clip_frac", "dp_noise_mult")
+
+    def encode(self, z, resid=None, rng=None, active=None):
+        if rng is None:
+            raise ValueError("dp codec needs the round's codec PRNG key "
+                             "(the Gaussian mechanism is randomized)")
+        leaves, treedef = jax.tree.flatten(z)
+        self._meta = ([(l.shape, l.dtype) for l in leaves], treedef)
+        rleaves = jax.tree.leaves(resid) if resid is not None else \
+            [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+        m = leaves[0].shape[0]
+        errs = [l.astype(jnp.float32) + r for l, r in zip(leaves, rleaves)]
+        sq = sum(jnp.sum(jnp.square(e).reshape(m, -1), axis=1)
+                 for e in errs)
+        norm = jnp.sqrt(sq)                                   # (m,)
+        factor = jnp.minimum(1.0, jnp.float32(self.clip)
+                             / jnp.maximum(norm, 1e-12))
+        sigma = jnp.float32(self.noise * self.clip)
+        wire_leaves, new_resid = [], []
+        for e, r, key in zip(errs, rleaves, _leaf_rngs(rng, leaves)):
+            fb = factor.reshape((m,) + (1,) * (e.ndim - 1))
+            clipped = e * fb
+            noisy = clipped
+            if self.noise > 0.0:
+                noisy = clipped + sigma * jax.random.normal(
+                    key, e.shape, jnp.float32)
+            rr = e - clipped          # clip error only; noise stays private
+            if active is not None:
+                rr = _gate_tree(active, rr, r)
+            wire_leaves.append(noisy)
+            new_resid.append(rr)
+        hit = (norm > jnp.float32(self.clip)).astype(jnp.float32)
+        if active is not None:
+            af = active.astype(jnp.float32)
+            clip_frac = jnp.sum(hit * af) / jnp.maximum(jnp.sum(af), 1.0)
+        else:
+            clip_frac = jnp.mean(hit)
+        wire = {"z": jax.tree.unflatten(treedef, wire_leaves),
+                "clip_frac": clip_frac,
+                "noise_mult": jnp.float32(self.noise)}
+        return wire, jax.tree.unflatten(treedef, new_resid)
+
+    def decode(self, wire):
+        metas, treedef = self._meta
+        leaves = treedef.flatten_up_to(wire["z"])
+        return jax.tree.unflatten(
+            treedef, [l.astype(dtype) for l, (_, dtype) in
+                      zip(leaves, metas)])
+
+    def wire_metrics(self, wire) -> dict:
+        return {"dp_clip_frac": wire["clip_frac"],
+                "dp_noise_mult": wire["noise_mult"]}
+
+    def bytes_per_client(self, params_single: PyTree) -> int:
+        # clip + noise changes values, not representation: f32 per entry
+        return int(sum(4 * leaf.size
+                       for leaf in jax.tree.leaves(params_single)))

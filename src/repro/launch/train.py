@@ -33,8 +33,9 @@ import jax.numpy as jnp
 def main(argv=None) -> int:
     from repro.checkpoint import save_pytree
     from repro.configs import ARCH_IDS, get_model_config, get_smoke_config
-    from repro.core import (CODECS, NETWORKS, TRANSPORTS, DFLConfig,
-                            ParticipationSpec, mean_params, simulate,
+    from repro.core import (AGGREGATORS, ATTACKS, CODECS, NETWORKS,
+                            TRANSPORTS, DFLConfig, ParticipationSpec,
+                            ThreatSpec, mean_params, simulate,
                             solver_names)
     from repro.models import build_model
 
@@ -103,6 +104,26 @@ def main(argv=None) -> int:
     ap.add_argument("--min-active", type=int, default=2,
                     help="floor on sampled clients per round (0 disables; "
                          "random modes top up to meet it)")
+    ap.add_argument("--attack", default="none", choices=("none",) + ATTACKS,
+                    help="Byzantine attack run by a seeded persistent "
+                         "adversary set (repro.core.threat): the masked "
+                         "clients corrupt their outgoing gossip messages "
+                         "inside the round")
+    ap.add_argument("--attack-frac", type=float, default=0.0,
+                    help="adversary fraction of m (floor(frac*m) clients; "
+                         "needs --attack)")
+    ap.add_argument("--attack-scale", type=float, default=1.0,
+                    help="attack amplification (signflip/gaussian/collude)")
+    ap.add_argument("--robust", default="mean", choices=AGGREGATORS,
+                    help="robust mixing at the transport level: "
+                         "trimmed_mean / median / krum filter Byzantine "
+                         "messages per receiver; mean is the plain "
+                         "(unwrapped) gossip step")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="dp codec: per-client L2 clip bound (--codec dp)")
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="dp codec: noise multiplier (std = dp_noise * "
+                         "dp_clip); history records dp_clip_frac per round")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -136,6 +157,12 @@ def main(argv=None) -> int:
     else:
         part = ParticipationSpec(mode=args.participation,
                                  p=args.participation_p, **part_kw)
+    if args.attack != "none" and args.attack_frac <= 0.0:
+        raise SystemExit("--attack needs --attack-frac > 0 (the fraction "
+                         "of clients that turn Byzantine)")
+    threat = None if args.attack == "none" else ThreatSpec(
+        attack=args.attack, frac=args.attack_frac, scale=args.attack_scale,
+        seed=args.seed)
     dfl_cfg = DFLConfig(algorithm=args.algorithm, m=args.m, K=args.k,
                         lr=args.lr, lam=args.lam, rho=args.rho,
                         topology=args.topology,
@@ -147,7 +174,9 @@ def main(argv=None) -> int:
                         execution=args.execution,
                         tick_s=args.tick_s if args.execution == "async"
                         else 0.0,
-                        max_staleness=args.max_staleness)
+                        max_staleness=args.max_staleness,
+                        threat=threat, robust=args.robust,
+                        dp_clip=args.dp_clip, dp_noise=args.dp_noise)
     sampler = _make_sampler(cfg, args)
     eval_batch = _eval_batch(cfg, args)
 
@@ -166,6 +195,15 @@ def main(argv=None) -> int:
     wire_mb = sum(history["wire_bytes"]) / 1e6
     sim = (f"  sim_time={sum(history['sim_time']):.1f}s ({args.network})"
            if "sim_time" in history else "")
+    if threat is not None:
+        sim += (f"  adversaries={threat.n_adversaries(args.m)}/{args.m} "
+                f"({args.attack} x{args.attack_scale:g}, "
+                f"robust={args.robust})")
+    if args.codec == "dp":
+        import math as _math
+        cf = [v for v in history["dp_clip_frac"] if not _math.isnan(v)]
+        sim += (f"  dp_clip_frac={sum(cf) / max(len(cf), 1):.2f} "
+                f"(noise_mult={args.dp_noise:g})")
     if args.execution == "async":
         sim += (f"  ticked={sum(history['ticked']) / args.rounds:.2f}"
                 f"  max_staleness={max(history['staleness'])}")

@@ -104,6 +104,26 @@ def test_async_empty_ticks_freeze_state():
     assert h["ticked"][1] == 1.0 and np.isfinite(h["loss"][1])
 
 
+def test_async_wire_bytes_counts_only_ticking_clients():
+    """Regression pin: under execution="async" the per-tick
+    history["wire_bytes"] is bytes_per_client x (number of clients that
+    ticked in that window) — the uplink of the publishers only, never
+    bytes_per_client x m, and exactly zero on an empty tick."""
+    loss_fn, params, sampler = _toy_problem()
+    cfg = DFLConfig(algorithm="dfedadmm", m=8, K=3, topology="ring",
+                    network="wan-lan", execution="async", tick_s=0.02,
+                    max_staleness=3)
+    _, h = simulate(loss_fn, None, params, cfg, sampler, rounds=8, seed=0)
+    bytes_pc = make_codec(cfg).bytes_per_client(params)
+    assert any(0.0 < f < 1.0 for f in h["ticked"])   # partial ticks occur
+    for frac, wb in zip(h["ticked"], h["wire_bytes"]):
+        n_ticking = round(frac * cfg.m)
+        assert wb == bytes_pc * n_ticking
+        if n_ticking == 0:
+            assert wb == 0
+        assert wb < bytes_pc * cfg.m or n_ticking == cfg.m
+
+
 def test_async_config_validation():
     with pytest.raises(ValueError, match="execution"):
         DFLConfig(m=4, execution="eventual")

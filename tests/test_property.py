@@ -258,6 +258,79 @@ def test_effective_matrix_row_stochastic_on_active_subgraph(m, seed, p,
         gossip.mask_and_renormalize(spec.matrix, receiving))
 
 
+def _support_matrix(m, seed, weighted=True):
+    """Random ragged-support weight matrix with guaranteed self-loops."""
+    rng = np.random.default_rng(seed)
+    w = rng.random((m, m)).astype(np.float32)
+    w[rng.random((m, m)) < 0.4] = 0.0
+    np.fill_diagonal(w, rng.random(m).astype(np.float32) * 0.9 + 0.1)
+    if not weighted:
+        w = (w > 0).astype(np.float32)
+    return w
+
+
+@given(m=st.integers(2, 8), seed=st.integers(0, 1000),
+       agg_name=st.sampled_from(["mean", "trimmed_mean", "median", "krum"]))
+def test_robust_aggregator_permutation_equivariant(m, seed, agg_name):
+    """Relabeling the clients relabels the output: A(Pz, PWP^T) = P A(z, W)
+    for every registered builtin aggregator (no client is special)."""
+    from repro.core import threat
+    rng = np.random.default_rng(seed)
+    # jitter guarantees unique values so krum's tie-break never fires
+    vals = rng.normal(size=(m, 4)) + 1e-3 * rng.random((m, 4))
+    z = {"a": jnp.asarray(vals, jnp.float32)}
+    w = _support_matrix(m, seed)
+    perm = rng.permutation(m)
+    p = np.eye(m, dtype=np.float32)[perm]
+    agg = {"mean": threat.MeanAggregator(),
+           "trimmed_mean": threat.TrimmedMeanAggregator(0.25),
+           "median": threat.MedianAggregator(),
+           "krum": threat.KrumAggregator(0.25)}[agg_name]
+    out = np.asarray(agg.aggregate(z, jnp.asarray(w))["a"])
+    zp = {"a": jnp.asarray(vals[perm], jnp.float32)}
+    wp = p @ w @ p.T
+    outp = np.asarray(agg.aggregate(zp, jnp.asarray(wp))["a"])
+    np.testing.assert_allclose(outp, out[perm], rtol=1e-5, atol=1e-5)
+
+
+@given(m=st.integers(2, 9), d=st.integers(1, 12), seed=st.integers(0, 1000))
+def test_trimmed_mean_trim0_reduces_to_weighted_mean(m, d, seed):
+    """Zero adversaries assumed -> zero trimming: the trimmed mean with
+    trim=0 IS the renormalized weighted gossip mean on any support."""
+    from repro.core import threat
+    rng = np.random.default_rng(seed)
+    z = {"a": jnp.asarray(rng.normal(size=(m, d)), jnp.float32)}
+    w = jnp.asarray(_support_matrix(m, seed))
+    out = threat.TrimmedMeanAggregator(0.0).aggregate(z, w)
+    ref = threat.MeanAggregator().aggregate(z, w)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(ref["a"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(m=st.integers(1, 6), d=st.integers(1, 64),
+       clip=st.floats(0.1, 10.0), scale=st.floats(0.01, 100.0),
+       seed=st.integers(0, 1000))
+def test_dp_codec_clip_bound_and_ef_identity(m, d, clip, scale, seed):
+    """For any message/residual and any clip: with noise=0 the decoded
+    wire never exceeds the L2 bound, and the clipping error rides the
+    residual exactly (wire + residual = error-compensated message)."""
+    import jax
+
+    from repro.core.threat import DPCodec
+    rng = np.random.default_rng(seed)
+    z = {"a": jnp.asarray(scale * rng.normal(size=(m, d)), jnp.float32)}
+    r0 = {"a": jnp.asarray(scale * rng.normal(size=(m, d)) * 0.1,
+                           jnp.float32)}
+    codec = DPCodec(clip=clip, noise=0.0)
+    wire, resid = codec.encode(z, resid=r0, rng=jax.random.PRNGKey(seed))
+    out = np.asarray(codec.decode(wire)["a"])
+    norms = np.linalg.norm(out.reshape(m, -1), axis=1)
+    assert (norms <= clip * (1 + 1e-5) + 1e-6).all()
+    np.testing.assert_allclose(
+        out + np.asarray(resid["a"]),
+        np.asarray(z["a"]) + np.asarray(r0["a"]), rtol=1e-4, atol=1e-4)
+
+
 @given(m=st.integers(2, 10), seed=st.integers(0, 1000),
        tick_s=st.floats(0.004, 0.1), max_staleness=st.integers(0, 5),
        mode=st.sampled_from(["full", "uniform", "fraction"]))

@@ -1,0 +1,418 @@
+"""Adversarial & privacy layer (repro.core.threat): attack injection,
+robust transport-level aggregation, the DP wire codec, and the
+bit-identity guarantee that an empty threat + robust="mean" IS the
+unthreatened round."""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DFLConfig, DPCodec, KrumAggregator, MeanAggregator,
+                        MedianAggregator, ThreatSpec, TrimmedMeanAggregator,
+                        adversary_mask, aggregator_names, attack_names,
+                        make_attack, register_aggregator, register_attack,
+                        simulate, solver_names)
+from repro.core.threat import make_aggregator
+
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..")))   # "benchmarks" package
+
+
+def _toy_problem(m=8, K=3, seed=0):
+    def loss_fn(p, batch, rng):
+        pred = batch["x"] @ p["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 1)), jnp.float32)}
+
+    def sampler(t):
+        r = np.random.default_rng((seed, t))
+        x = r.normal(size=(m, K, 16, 6)).astype(np.float32)
+        y = x.sum(-1, keepdims=True).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    return loss_fn, params, sampler
+
+
+def _stacked(m=6, d=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(m, d)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, 2, 3)), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# ThreatSpec + adversary selection
+# ---------------------------------------------------------------------------
+
+def test_threat_spec_validation():
+    with pytest.raises(ValueError, match="attack"):
+        ThreatSpec(attack="nope")
+    with pytest.raises(ValueError, match="frac"):
+        ThreatSpec(frac=1.5)
+    with pytest.raises(ValueError, match="scale"):
+        ThreatSpec(scale=float("inf"))
+    assert ThreatSpec(frac=0.0).is_trivial
+    assert not ThreatSpec(frac=0.2).is_trivial
+    assert ThreatSpec(frac=0.2).n_adversaries(16) == 3
+
+
+def test_adversary_mask_seeded_and_sized():
+    spec = ThreatSpec(attack="signflip", frac=0.25, seed=7)
+    m1 = adversary_mask(spec, 16)
+    m2 = adversary_mask(spec, 16)
+    np.testing.assert_array_equal(m1, m2)            # persistent set
+    assert m1.sum() == 4
+    assert adversary_mask(ThreatSpec(frac=0.0), 16).sum() == 0
+    m3 = adversary_mask(ThreatSpec(attack="signflip", frac=0.25, seed=8), 16)
+    assert not np.array_equal(m1, m3)                # seed moves the set
+
+
+# ---------------------------------------------------------------------------
+# Attacks: adversary rows perturbed, honest rows bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(attack_names()))
+def test_attacks_gate_honest_rows_bitwise(name):
+    z = _stacked()
+    adv = jnp.asarray([True, False, True, False, False, False])
+    atk = make_attack(ThreatSpec(attack=name, frac=0.3, scale=2.0))
+    out = atk.perturb(z, adv, jax.random.PRNGKey(0))
+    for k in z:
+        np.testing.assert_array_equal(np.asarray(out[k])[~np.asarray(adv)],
+                                      np.asarray(z[k])[~np.asarray(adv)])
+    # the adversary rows actually changed (zero on nonzero data changes)
+    changed = any(
+        not np.array_equal(np.asarray(out[k])[np.asarray(adv)],
+                           np.asarray(z[k])[np.asarray(adv)]) for k in z)
+    assert changed
+
+
+def test_signflip_and_zero_semantics():
+    z = _stacked()
+    adv = jnp.asarray([True, False, False, False, False, True])
+    flip = make_attack(ThreatSpec(attack="signflip", frac=0.3, scale=3.0))
+    out = flip.perturb(z, adv, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(out["a"])[0],
+                               -3.0 * np.asarray(z["a"])[0], rtol=1e-6)
+    zero = make_attack(ThreatSpec(attack="zero", frac=0.3))
+    out = zero.perturb(z, adv, jax.random.PRNGKey(0))
+    assert (np.asarray(out["b"])[5] == 0.0).all()
+
+
+def test_collude_sends_one_agreed_model():
+    z = _stacked()
+    adv = jnp.asarray([True, True, False, True, False, False])
+    atk = make_attack(ThreatSpec(attack="collude", frac=0.5, scale=2.0))
+    out = atk.perturb(z, adv, jax.random.PRNGKey(0))
+    a = np.asarray(out["a"])
+    np.testing.assert_array_equal(a[0], a[1])
+    np.testing.assert_array_equal(a[0], a[3])
+    mu = np.asarray(z["a"])[[0, 1, 3]].mean(0)
+    np.testing.assert_allclose(a[0], 2.0 * mu, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregators
+# ---------------------------------------------------------------------------
+
+_AGGS = [MeanAggregator(), TrimmedMeanAggregator(0.25), MedianAggregator(),
+         KrumAggregator(0.25)]
+
+
+@pytest.mark.parametrize("agg", _AGGS, ids=lambda a: a.name)
+def test_identity_plan_rows_pass_through_bitwise(agg):
+    """Frozen clients sit on identity rows in every masked/async plan —
+    every aggregator must hand their own message straight back."""
+    m = 5
+    z = _stacked(m=m)
+    w = np.eye(m, dtype=np.float32)
+    out = agg.aggregate(z, jnp.asarray(w))
+    for k in z:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(z[k]))
+
+
+@pytest.mark.parametrize("agg", _AGGS[1:], ids=lambda a: a.name)
+def test_robust_aggregators_reject_one_outlier(agg):
+    """Full-support neighbourhood, one huge outlier: the robust estimate
+    stays inside the honest values' range (mean would not)."""
+    m = 6
+    rng = np.random.default_rng(0)
+    honest = rng.normal(size=(m, 4)).astype(np.float32)
+    vals = honest.copy()
+    vals[2] = 1e4                                     # Byzantine row
+    z = {"a": jnp.asarray(vals)}
+    w = jnp.full((m, m), 1.0 / m, dtype=jnp.float32)
+    out = np.asarray(agg.aggregate(z, w)["a"])
+    hmin = honest[[i for i in range(m) if i != 2]].min()
+    hmax = honest[[i for i in range(m) if i != 2]].max()
+    assert (out >= hmin - 1e-5).all() and (out <= hmax + 1e-5).all()
+
+
+def test_mean_aggregator_matches_mix_dense():
+    from repro.core import mixing
+    m = 6
+    z = _stacked(m=m)
+    rng = np.random.default_rng(1)
+    w = rng.random((m, m)).astype(np.float32)
+    w /= w.sum(1, keepdims=True)                      # row-stochastic
+    out = MeanAggregator().aggregate(z, jnp.asarray(w))
+    ref = mixing.mix_dense(jnp.asarray(w), z)
+    for k in z:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_trimmed_mean_trim0_is_weighted_mean():
+    m = 7
+    z = _stacked(m=m)
+    rng = np.random.default_rng(2)
+    w = rng.random((m, m)).astype(np.float32)
+    w[w < 0.3] = 0.0                                  # ragged support
+    np.fill_diagonal(w, 1.0)
+    out = TrimmedMeanAggregator(0.0).aggregate(z, jnp.asarray(w))
+    ref = MeanAggregator().aggregate(z, jnp.asarray(w))
+    for k in z:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_krum_selects_a_support_candidate():
+    """Krum outputs one of the support rows verbatim — and with a single
+    far-away outlier, never the outlier."""
+    m = 6
+    rng = np.random.default_rng(3)
+    vals = rng.normal(size=(m, 4)).astype(np.float32)
+    vals[4] = 500.0
+    z = {"a": jnp.asarray(vals)}
+    w = jnp.full((m, m), 1.0 / m, dtype=jnp.float32)
+    out = np.asarray(KrumAggregator(0.25).aggregate(z, w)["a"])
+    for i in range(m):
+        assert any(np.array_equal(out[i], vals[j]) for j in range(m))
+        assert not np.array_equal(out[i], vals[4])
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+def test_register_attack_roundtrip():
+    class _Noop:
+        name = "noop"
+
+        def perturb(self, z, adv, rng):
+            return z
+
+    register_attack("noop_test", lambda spec: _Noop(), overwrite=True)
+    assert "noop_test" in attack_names()
+    spec = ThreatSpec(attack="noop_test", frac=0.5)
+    assert make_attack(spec).name == "noop"
+
+
+def test_register_aggregator_roundtrip():
+    register_aggregator("mean_test", lambda cfg: MeanAggregator(),
+                        overwrite=True)
+    assert "mean_test" in aggregator_names()
+    cfg = DFLConfig(m=4, robust="mean_test")
+    assert isinstance(make_aggregator(cfg), MeanAggregator)
+
+
+# ---------------------------------------------------------------------------
+# Config validation (satellite: clear errors at construction)
+# ---------------------------------------------------------------------------
+
+def test_config_validation_threat_fields():
+    with pytest.raises(ValueError, match="threat"):
+        DFLConfig(m=4, threat="signflip")             # not a ThreatSpec
+    with pytest.raises(ValueError, match="robust"):
+        DFLConfig(m=4, robust="majority")
+    with pytest.raises(ValueError, match="robust_trim"):
+        DFLConfig(m=4, robust_trim=0.5)
+    with pytest.raises(ValueError, match="dp_clip"):
+        DFLConfig(m=4, dp_clip=0.0)
+    with pytest.raises(ValueError, match="dp_noise"):
+        DFLConfig(m=4, dp_noise=-0.1)
+    with pytest.raises(ValueError, match="codec_bits"):
+        DFLConfig(m=4, codec="int8", codec_bits=1)
+    with pytest.raises(ValueError, match="codec_k"):
+        DFLConfig(m=4, codec="topk", codec_k=0)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: empty threat + robust="mean" IS the plain round
+# ---------------------------------------------------------------------------
+
+def _bit_identity_case(algo, transport, topology, rounds=3, m=8):
+    loss_fn, params, sampler = _toy_problem(m=m)
+    base = dict(algorithm=algo, m=m, K=3, topology=topology,
+                transport=transport)
+    st_p, h_p = simulate(loss_fn, None, params, DFLConfig(**base),
+                         sampler, rounds=rounds, seed=0)
+    st_t, h_t = simulate(loss_fn, None, params,
+                         DFLConfig(**base, threat=ThreatSpec(frac=0.0),
+                                   robust="mean"),
+                         sampler, rounds=rounds, seed=0)
+    assert h_p["loss"] == h_t["loss"]                 # bitwise, every round
+    for k in st_p.params:
+        np.testing.assert_array_equal(np.asarray(st_p.params[k]),
+                                      np.asarray(st_t.params[k]))
+
+
+@pytest.mark.parametrize("transport,topology", [
+    ("dense", "ring"), ("pushsum", "dring")])
+def test_zero_adversaries_bit_identical(transport, topology):
+    _bit_identity_case("dfedadmm", transport, topology)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algo", sorted(solver_names("dfl")))
+def test_zero_adversaries_bit_identical_all_solvers(algo):
+    """The acceptance pin: for EVERY registered solver the empty threat
+    with robust="mean" produces the bit-identical simulate."""
+    for transport, topology in (("dense", "ring"), ("ppermute", "ring"),
+                                ("pushsum", "dring")):
+        _bit_identity_case(algo, transport, topology, rounds=2)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: attack + robust mixing inside the jitted round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("robust", ["trimmed_mean", "median", "krum"])
+def test_attacked_round_runs_and_stays_finite(robust):
+    loss_fn, params, sampler = _toy_problem(m=8)
+    cfg = DFLConfig(algorithm="dfedadmm", m=8, K=3, topology="ring",
+                    threat=ThreatSpec(attack="signflip", frac=0.25,
+                                      scale=2.0),
+                    robust=robust)
+    st, h = simulate(loss_fn, None, params, cfg, sampler, rounds=3, seed=0)
+    assert np.isfinite(h["loss"]).all()
+    assert np.isfinite(np.asarray(st.params["w"])).all()
+
+
+def test_robust_composes_with_participation_and_async():
+    from repro.core import NetworkModel
+    m = 8
+    loss_fn, params, sampler = _toy_problem(m=m)
+    net = NetworkModel(name="flat", bandwidth=np.full((m, m), 1e12),
+                       latency=np.zeros((m, m)), jitter=0.0,
+                       compute_s=0.002)
+    cfg = DFLConfig(algorithm="dfedadmm", m=m, K=3, topology="ring",
+                    network=net, execution="async", tick_s=1.0,
+                    max_staleness=2,
+                    threat=ThreatSpec(attack="zero", frac=0.25),
+                    robust="median")
+    st, h = simulate(loss_fn, None, params, cfg, sampler, rounds=3, seed=0)
+    assert np.isfinite(h["loss"]).all()
+
+
+def test_robust_rejects_on_mesh_ppermute():
+    """The gated-permute path never materializes the neighbourhood, so
+    robust mixing on a real mesh is a construction-time error (the
+    meshless ppermute fallback stays allowed)."""
+    from repro.core import make_gossip, make_transport
+
+    spec = make_gossip("ring", 8)
+    cfg = DFLConfig(m=8, transport="ppermute", robust="trimmed_mean")
+    make_transport(cfg, spec=spec)                    # meshless: fine
+    with pytest.raises(ValueError, match="neighbourhood"):
+        make_transport(cfg, spec=spec, mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# DP codec
+# ---------------------------------------------------------------------------
+
+def test_dp_codec_clips_to_bound():
+    m, d = 4, 64
+    rng = np.random.default_rng(0)
+    z = {"w": jnp.asarray(10.0 * rng.normal(size=(m, d)), jnp.float32)}
+    codec = DPCodec(clip=1.0, noise=0.0)
+    wire, resid = codec.encode(z, resid=codec.init_state(z),
+                               rng=jax.random.PRNGKey(0))
+    out = codec.decode(wire)
+    norms = np.linalg.norm(np.asarray(out["w"]), axis=1)
+    assert (norms <= 1.0 + 1e-5).all()
+    # clip error rides the residual: z = clipped + resid exactly
+    np.testing.assert_allclose(np.asarray(out["w"]) + np.asarray(resid["w"]),
+                               np.asarray(z["w"]), rtol=1e-5, atol=1e-5)
+    assert float(wire["clip_frac"]) == 1.0
+
+
+def test_dp_codec_noise_not_fed_back():
+    """The residual carries ONLY the clipping error — with a message
+    already inside the clip bound the residual stays zero no matter the
+    noise level (fed-back noise would void the privacy)."""
+    m, d = 4, 16
+    rng = np.random.default_rng(1)
+    z = {"w": jnp.asarray(0.01 * rng.normal(size=(m, d)), jnp.float32)}
+    codec = DPCodec(clip=1.0, noise=0.5)
+    wire, resid = codec.encode(z, resid=codec.init_state(z),
+                               rng=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(resid["w"]), 0.0, atol=1e-7)
+    assert float(wire["clip_frac"]) == 0.0
+    # ... while the wire itself is genuinely randomized
+    assert not np.allclose(np.asarray(codec.decode(wire)["w"]),
+                           np.asarray(z["w"]), atol=1e-4)
+
+
+def test_dp_codec_requires_rng():
+    z = {"w": jnp.ones((2, 3), jnp.float32)}
+    codec = DPCodec(clip=1.0, noise=0.1)
+    with pytest.raises(ValueError, match="PRNG"):
+        codec.encode(z, resid=codec.init_state(z))
+
+
+def test_dp_codec_validation():
+    with pytest.raises(ValueError, match="dp_clip"):
+        DPCodec(clip=-1.0)
+    with pytest.raises(ValueError, match="dp_noise"):
+        DPCodec(clip=1.0, noise=-0.5)
+
+
+def test_dp_telemetry_flows_into_history():
+    loss_fn, params, sampler = _toy_problem(m=6)
+    cfg = DFLConfig(algorithm="dfedadmm", m=6, K=3, topology="ring",
+                    codec="dp", dp_clip=0.5, dp_noise=0.05)
+    _, h = simulate(loss_fn, None, params, cfg, sampler, rounds=3, seed=0)
+    assert len(h["dp_clip_frac"]) == 3
+    assert all(0.0 <= v <= 1.0 for v in h["dp_clip_frac"])
+    assert h["dp_noise_mult"] == [pytest.approx(0.05)] * 3
+
+
+def test_dp_telemetry_async_empty_tick_is_nan():
+    from repro.core import NetworkModel
+    m = 6
+    loss_fn, params, sampler = _toy_problem(m=m)
+    net = NetworkModel(name="flat", bandwidth=np.full((m, m), 1e12),
+                       latency=np.zeros((m, m)), jitter=0.0,
+                       compute_s=0.002)
+    cfg = DFLConfig(algorithm="dfedavg", m=m, K=3, topology="ring",
+                    codec="dp", dp_clip=0.5, dp_noise=0.0, network=net,
+                    execution="async", tick_s=0.004, max_staleness=4)
+    _, h = simulate(loss_fn, None, params, cfg, sampler, rounds=4, seed=0)
+    assert np.isnan(h["dp_clip_frac"][0])             # empty first tick
+    assert np.isfinite(h["dp_clip_frac"][1])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the headline contrast (slow — full synthetic task)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_signflip20_trimmed_mean_holds_where_mean_fails():
+    """20% sign-flip adversaries on the paper's synthetic task: dfedadmm
+    with trimmed-mean mixing reaches the target accuracy, plain mean
+    does not (pinned by benchmarks/robust_bench.py's headline row)."""
+    from benchmarks.common import rounds_from_history, run_dfl
+    threat = ThreatSpec(attack="signflip", frac=0.2, scale=1.0, seed=0)
+    common = dict(rounds=20, alpha=0.3, m=16, topology="random",
+                  eval_every=2, threat=threat)
+    acc_m, h_m, _ = run_dfl("dfedadmm", robust="mean", **common)
+    acc_t, h_t, _ = run_dfl("dfedadmm", robust="trimmed_mean", **common)
+    assert rounds_from_history(h_t, 0.7) is not None
+    assert rounds_from_history(h_m, 0.7) is None
+    assert acc_t > acc_m + 0.3
