@@ -27,6 +27,9 @@ CODEC_POINTS = (
     ("int8-fused", dict(codec="int8", codec_bits=8, use_kernel="comm")),
     ("int4", dict(codec="int8", codec_bits=4)),
     ("int4-fused", dict(codec="int8", codec_bits=4, use_kernel="comm")),
+    # fp8 e4m3 wire: same 4x compression as int8 but relative mantissa
+    # spacing (no stochastic rounding needed; EF absorbs the RNE bias)
+    ("fp8", dict(codec="fp8")),
     ("top32", dict(codec="topk", codec_k=32)),
     ("rand32", dict(codec="randk", codec_k=32)),
 )

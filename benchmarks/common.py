@@ -123,7 +123,7 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
             codec_bits=8, codec_k=64, use_kernel=False, network=None,
             execution="sync", tick_s=0.0, max_staleness=4,
             threat=None, robust="mean", robust_trim=0.25,
-            dp_clip=1.0, dp_noise=0.0):
+            dp_clip=1.0, dp_noise=0.0, n_virtual=0, clusters=0):
     """Run a DFL algorithm on the synthetic federated task; returns
     (final_acc, history, us_per_round) — us_per_round is the
     steady-state median over post-compile rounds (``steady_state_us``).
@@ -156,7 +156,8 @@ def run_dfl(algo: str, *, rounds: int, alpha, topology="random", m=16, K=5,
                     network=network, execution=execution, tick_s=tick_s,
                     max_staleness=max_staleness, threat=threat,
                     robust=robust, robust_trim=robust_trim,
-                    dp_clip=dp_clip, dp_noise=dp_noise)
+                    dp_clip=dp_clip, dp_noise=dp_noise,
+                    n_virtual=n_virtual, clusters=clusters)
     params = mlp_init(task.dim, task.n_classes, seed=seed)
 
     def eval_fn(p):

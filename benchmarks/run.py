@@ -21,7 +21,8 @@ import sys
 BENCH_SCHEMA_VERSION = 1
 
 SUITES = ("table1", "table2", "table345", "fig3", "kernels", "arch_step",
-          "roofline", "participation", "comm", "net", "async", "robust")
+          "roofline", "participation", "comm", "net", "async", "robust",
+          "scale")
 
 
 def _run_suite(suite: str, quick: bool) -> None:
@@ -68,6 +69,9 @@ def _run_suite(suite: str, quick: bool) -> None:
     elif suite == "robust":
         from benchmarks import robust_bench
         robust_bench.run(rounds=12 if quick else 20, target=0.7)
+    elif suite == "scale":
+        from benchmarks import scale_bench
+        scale_bench.run(rounds=8 if quick else 16, quick=quick)
     else:
         raise ValueError(f"unknown suite {suite!r}")
 

@@ -1,0 +1,83 @@
+"""Cohort virtualization scale-out: million-client populations on one
+device, and two-tier hierarchical gossip vs flat dense.
+
+Two claims this suite pins:
+
+* **flat device memory** — with ``n_virtual`` clients virtualized behind
+  a fixed hot cohort (``repro.core.cohort``), the per-round us and the
+  device-resident state bytes must stay flat while the population grows
+  10-1000x (the cold rows live host-side in the ``ClientStore``); the
+  ``device_kb`` column is identical across the whole curve by
+  construction and the gate catches any accidental O(n_virtual)
+  materialization in the round path;
+* **hier beats flat dense** — under the cluster-aware ``hub-and-spoke``
+  network model (fast LAN inside each cluster + head backbone), the
+  two-tier transport's modeled round time (sequential tier critical
+  paths, ``NetworkModel.tiered_round_time``) must undercut flat dense
+  gossip, which pays the slow cross-cluster spoke links every round.
+
+Rows: ``scale/virtual/n<N>`` (us/round + bytes/round + device_kb as the
+population grows), ``scale/hier|dense/m<M>c<C>`` (modeled seconds per
+round for both transports over the same cluster network).
+"""
+import jax
+import numpy as np
+
+from benchmarks.common import emit, mlp_init, run_dfl, steady_state_us
+
+COHORT = 16
+CLUSTERS = 4
+
+
+def _device_kb(n_virtual: int) -> float:
+    """Device-resident bytes of the hot cohort state (deterministic;
+    must not depend on ``n_virtual``)."""
+    from repro.core import DFLConfig
+    from repro.core.cohort import ClientStore
+    cfg = DFLConfig(m=COHORT, topology="ring", n_virtual=n_virtual)
+    store = ClientStore(mlp_init(32, 10), cfg, seed=0)
+    st = store.gather(np.arange(COHORT))
+    leaves = jax.tree.leaves((st.params, st.solver, st.comm, st.rng))
+    return sum(leaf.nbytes for leaf in leaves) / 1e3
+
+
+def run(rounds: int = 16, quick: bool = False):
+    populations = (1_000, 10_000) if quick else (1_000, 10_000, 100_000)
+
+    # -- scale-out curve: population grows, device footprint must not --
+    for n in populations:
+        acc, hist, us = run_dfl("dfedadmm", rounds=rounds, alpha=0.3,
+                                m=COHORT, topology="ring",
+                                eval_every=rounds, n_virtual=n)
+        emit(f"scale/virtual/n{n}", us,
+             f"bytes_per_round={hist['wire_bytes'][0]};"
+             f"device_kb={_device_kb(n):.1f};"
+             f"store_rows={hist['store_touched'][-1]};"
+             f"cohort={COHORT};acc={acc:.4f}",
+             spread_us=steady_state_us(hist)[1])
+
+    # -- hier vs flat dense under the same cluster-aware network -------
+    sims = {}
+    for name, kw in (("dense", dict(transport="dense")),
+                     ("hier", dict(transport="hier"))):
+        acc, hist, us = run_dfl("dfedadmm", rounds=rounds, alpha=0.3,
+                                m=COHORT, topology="full",
+                                network="hub-and-spoke", clusters=CLUSTERS,
+                                eval_every=rounds, **kw)
+        sims[name] = float(np.mean(hist["sim_time"]))
+        x = "" if name == "dense" else \
+            f";xdense={sims['hier'] / sims['dense']:.3f}"
+        emit(f"scale/{name}/m{COHORT}c{CLUSTERS}", us,
+             f"sim_time_per_round={sims[name]:.4f};acc={acc:.4f}{x}",
+             spread_us=steady_state_us(hist)[1])
+
+    # -- async-virtual: event-driven ticks over the virtual population -
+    n_async = populations[0]
+    acc, hist, us = run_dfl("dfedadmm", rounds=rounds, alpha=0.3, m=COHORT,
+                            topology="ring", network="lognormal",
+                            execution="async", tick_s=0.5,
+                            eval_every=rounds, n_virtual=n_async)
+    ticked = float(np.nanmean(hist["ticked"]))
+    emit(f"scale/async/n{n_async}", us,
+         f"ticked={ticked:.2f};store_rows={hist['store_touched'][-1]};"
+         f"cohort={COHORT}", spread_us=steady_state_us(hist)[1])

@@ -7,24 +7,26 @@ from repro.core.dfl import (ALGORITHMS, DFLConfig, DFLState, consensus_distance,
                             init_state, make_local_phase, make_train_round,
                             mean_params, simulate)
 from repro.core.async_engine import (AsyncScheduler, TickEvents,
-                                     effective_matrix, make_tick_round,
-                                     simulate_async)
+                                     VirtualScheduler, effective_matrix,
+                                     make_tick_round, simulate_async)
+from repro.core.cohort import ClientStore, simulate_virtual
 from repro.core.gossip import (DIRECTED_TOPOLOGIES, GossipSpec, TOPOLOGIES,
                                adjacency, as_column_stochastic,
+                               cluster_heads, cluster_labels,
                                column_stochastic_weights,
-                               directed_ring_adjacency, make_gossip,
-                               mask_and_renormalize,
+                               directed_ring_adjacency, hier_tier_matrices,
+                               make_gossip, mask_and_renormalize,
                                mask_and_renormalize_columns,
-                               metropolis_weights, spectral_psi,
-                               time_varying_specs, uniform_weights,
-                               validate_column_stochastic,
+                               metropolis_weights, resolve_clusters,
+                               spectral_psi, time_varying_specs,
+                               uniform_weights, validate_column_stochastic,
                                validate_gossip_matrix)
-from repro.core.comm import (CODECS, TRANSPORTS, DenseTransport,
-                             IdentityCodec, MessageCodec, PpermuteTransport,
-                             PushSumTransport, QuantizeCodec, RandKCodec,
-                             TopKCodec, Transport, codec_names,
-                             init_comm_state, make_codec, make_transport,
-                             register_codec)
+from repro.core.comm import (CODECS, TRANSPORTS, DenseTransport, Fp8Codec,
+                             HierTransport, IdentityCodec, MessageCodec,
+                             PpermuteTransport, PushSumTransport,
+                             QuantizeCodec, RandKCodec, TopKCodec, Transport,
+                             codec_names, init_comm_state, make_codec,
+                             make_transport, register_codec)
 from repro.core.network import (NETWORKS, NetworkModel, make_network,
                                 network_names, register_network)
 from repro.core.threat import (AGGREGATORS, ATTACKS, Attack, DPCodec,
@@ -36,9 +38,11 @@ from repro.core.threat import (AGGREGATORS, ATTACKS, Attack, DPCodec,
                                make_aggregator, make_attack,
                                register_aggregator, register_attack)
 from repro.core.participation import (ParticipationSpec, RoundParticipation,
-                                      participation_schedule,
+                                      cohort_ids, participation_schedule,
                                       round_participation)
-from repro.core.mixing import mix, mix_dense, mix_ppermute, mix_ppermute_local
+from repro.core.mixing import (mix, mix_dense, mix_ppermute,
+                               mix_ppermute_local, mix_pushsum_ppermute,
+                               mix_pushsum_ppermute_local)
 from repro.core.sam import global_norm, perturb, sam_grad_fn, sam_value_and_grad
 from repro.core.solvers import (SOLVERS, ADMMSolver, AdaptiveADMMSolver,
                                 LocalSolver, MomentumSGDSolver, SGDSolver,

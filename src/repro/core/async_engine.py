@@ -421,3 +421,45 @@ def simulate_async(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
                                  if k != "round"))
     history["eval"] = eval_hist
     return state, history
+
+
+class VirtualScheduler:
+    """Per-cohort ticks over a VIRTUAL population (``repro.core.cohort``).
+
+    The event queue of :class:`AsyncScheduler` scaled past the device:
+    tiny numpy arrays over all ``n_virtual`` clients, never entering
+    jit.  Each virtual client inherits the network personality of its
+    cohort *slot* (``id % m`` — the (m, m) cost model tiles across the
+    population) and re-enters gossip when its modeled compute + worst
+    in-link period elapses.  A tick gathers the ready clients —
+    earliest-done first, at most one cohort's worth; the rest stay
+    queued — into hot slots and runs one masked synchronous round over
+    them, so staleness never exceeds a tick window (the cohort *is* the
+    publication set) and the jitted computation keeps the static cohort
+    shape.
+    """
+
+    def __init__(self, cfg: DFLConfig, net: NetworkModel, n_virtual: int,
+                 bytes_per_client: int):
+        m = cfg.m
+        lt = net.link_seconds(bytes_per_client, 0)
+        off_diag = ~np.eye(m, dtype=bool)
+        slot_in = np.where(off_diag, lt, 0.0).max(axis=1)
+        period = cfg.K * net.compute_s + slot_in
+        self.period = period[np.arange(n_virtual) % m]
+        self.done = self.period.copy()
+        self.tick_s = cfg.tick_s
+        self.cohort = m
+
+    def step(self, t: int) -> np.ndarray:
+        """Virtual-client ids completing inside tick ``t``'s window,
+        earliest first, capped at the cohort size (the overflow keeps
+        its completion time and boards a later tick)."""
+        horizon = (t + 1) * self.tick_s
+        ready = np.flatnonzero(self.done <= horizon)
+        ready = ready[np.argsort(self.done[ready], kind="stable")]
+        return ready[:self.cohort]
+
+    def advance(self, ids: np.ndarray) -> None:
+        """The ticked clients start their next round immediately."""
+        self.done[ids] += self.period[ids]

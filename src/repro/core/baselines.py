@@ -70,18 +70,6 @@ class CFLState:
     rng: jax.Array
     round: jax.Array
 
-    @property
-    def dual(self) -> PyTree:
-        """DEPRECATED: read ``state.solver["dual"]`` (fedpd only)."""
-        import warnings
-        warnings.warn(
-            "CFLState.dual is deprecated: solver state lives in "
-            "CFLState.solver (state.solver['dual'] for fedpd)",
-            DeprecationWarning, stacklevel=2)
-        if isinstance(self.solver, dict) and "dual" in self.solver:
-            return self.solver["dual"]
-        raise AttributeError("this state's solver carries no dual variable")
-
 
 def init_cfl_state(params: PyTree, cfg: CFLConfig, seed: int = 0) -> CFLState:
     solver = solvers_lib.make_solver(cfg)

@@ -1,0 +1,359 @@
+"""Cohort virtualization: million-client populations, cohort-sized memory.
+
+The dense ``simulate`` path materializes every client's parameters,
+solver state, codec residuals, and push-sum weights in the stacked
+``DFLState`` — population size is device-memory-bound at a few dozen
+clients.  This module splits the population in two:
+
+* a large **cold** set whose per-client state lives in a host-side
+  :class:`ClientStore` (numpy rows, touched clients only);
+* a small **hot cohort** of ``cfg.m`` slots gathered per round by
+  ``participation.cohort_ids``, run through the *unchanged* jitted round
+  (``make_train_round`` — same solver / transport / codec / threat
+  composition, same static shapes, so membership changes never
+  recompile), and scattered back.
+
+Device-resident state drops from O(n_virtual) to O(cohort); the gossip
+topology, the participation scenario, and the network cost model all
+operate over the cohort *slots*, which is exactly the sub-sampled gossip
+regime of the cross-device literature (arXiv:2107.12048).  With
+``cohort == n_virtual`` the gather is the identity permutation and every
+round is bit-identical to the dense path (pinned by
+tests/test_cohort.py for every registered solver).
+
+``execution="async"`` runs per-cohort ticks instead of rounds: the
+``async_engine.VirtualScheduler`` event queue spans the whole virtual
+population, and each tick's ready clients board the hot cohort for one
+masked synchronous gossip step — the event-driven engine's semantics at
+a scale where its per-client publication buffers could never be
+device-resident.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm as comm_lib
+from repro.core import solvers as solvers_lib
+from repro.core.dfl import DFLConfig, DFLState, mean_params
+from repro.core.participation import (ParticipationSpec, cohort_ids,
+                                      participation_schedule)
+
+PyTree = Any
+
+
+class ClientStore:
+    """Host-side store of per-client hot state (params, solver state,
+    codec residuals, push-sum weights) for ``n_virtual`` clients.
+
+    Sparse by construction: at init every client is *identical* (the
+    paper's common init x^0 broadcast, zero solver/codec state, uniform
+    push-sum weight), so the store keeps ONE template row per leaf and a
+    ``{client_id: rows}`` dict for clients a cohort has touched — host
+    memory scales with the number of *trained* clients, device memory
+    with the cohort.  Per-client PRNG keys are the exception: they are
+    ``jax.random.split(PRNGKey(seed), n_virtual)`` exactly like the
+    dense ``init_state`` (8 bytes/client — fine at 1e6), so slot ``i``
+    of a full-population cohort sees the dense path's key bit for bit.
+
+    The round counter is global (one counter for the whole population,
+    like the dense path's ``state.round``): learning-rate decay and the
+    per-client ``fold_in`` derivations depend only on it, which is what
+    makes the full-cohort reduction exact.
+    """
+
+    def __init__(self, params_single: PyTree, cfg: DFLConfig, seed: int = 0):
+        if cfg.n_virtual < 1:
+            raise ValueError(
+                "ClientStore needs cfg.n_virtual >= 1 (the virtual "
+                f"population size), got {cfg.n_virtual}")
+        self.n_virtual = cfg.n_virtual
+        self.cohort = cfg.m
+        # one cohort-sized init gives the template row: every client's
+        # initial state is identical (rng keys are handled separately)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.m,) + x.shape),
+            params_single)
+        solver = solvers_lib.make_solver(cfg)
+        hot = (stacked, solver.init_state(cfg, stacked),
+               comm_lib.init_comm_state(cfg, stacked))
+        leaves, self._treedef = jax.tree.flatten(hot)
+        self._templates = [np.asarray(leaf[0]) for leaf in leaves]
+        self._rows: dict[int, list[np.ndarray]] = {}
+        self._keys = np.asarray(
+            jax.random.split(jax.random.PRNGKey(seed), self.n_virtual))
+        self.round = 0
+
+    @property
+    def touched(self) -> int:
+        """Number of clients holding non-template state (host rows)."""
+        return len(self._rows)
+
+    def host_bytes(self) -> int:
+        """Host memory of the materialized rows (telemetry)."""
+        return sum(sum(r.nbytes for r in rows)
+                   for rows in self._rows.values())
+
+    def gather(self, ids: np.ndarray) -> DFLState:
+        """Stack the ``ids`` rows (templates for untouched clients) into
+        a hot cohort-shaped ``DFLState`` on device."""
+        ids = np.asarray(ids)
+        picked = [self._rows.get(int(i)) for i in ids]
+        leaves = [
+            jnp.asarray(np.stack(
+                [rows[k] if rows is not None else tmpl for rows in picked]))
+            for k, tmpl in enumerate(self._templates)]
+        params, solver, comm = jax.tree.unflatten(self._treedef, leaves)
+        return DFLState(params=params, solver=solver,
+                        rng=jnp.asarray(self._keys[ids]),
+                        round=jnp.asarray(self.round, jnp.int32),
+                        comm=comm)
+
+    def scatter(self, ids: np.ndarray, state: DFLState,
+                keep: np.ndarray | None = None) -> None:
+        """Write the cohort rows back to their virtual clients.
+
+        ``keep`` (cohort,) bool skips slots whose client did not run
+        this round (padding slots of an under-full async tick) — their
+        store rows stay untouched.  The global round counter follows the
+        state's (the round loop already incremented it).
+        """
+        ids = np.asarray(ids)
+        hot = (state.params, state.solver, state.comm)
+        host = [np.asarray(leaf) for leaf in jax.tree.leaves(hot)]
+        for slot, cid in enumerate(ids):
+            if keep is not None and not keep[slot]:
+                continue
+            self._rows[int(cid)] = [h[slot] for h in host]
+        self.round = int(state.round)
+
+
+def _call_sampler(sample_batches: Callable, t: int, ids: np.ndarray):
+    """``sample_batches(t, ids)`` when the sampler is cohort-aware (two
+    positional parameters), the dense ``sample_batches(t)`` otherwise."""
+    try:
+        n_params = len(inspect.signature(sample_batches).parameters)
+    except (TypeError, ValueError):
+        n_params = 1
+    return sample_batches(t, ids) if n_params >= 2 else sample_batches(t)
+
+
+def simulate_virtual(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
+                     sample_batches: Callable, rounds: int, seed: int = 0,
+                     eval_every: int = 10, verbose: bool = False):
+    """``simulate`` over a virtualized population (``cfg.n_virtual`` > 0).
+
+    Per round: draw the hot cohort (``participation.cohort_ids``),
+    gather its state from the :class:`ClientStore`, run the identical
+    jitted round (topology, participation, codec, transport, threat,
+    and network model all over the ``cfg.m`` cohort slots), scatter the
+    results back.  The history contract matches ``simulate``
+    (loss/lr/consensus/wire_bytes/sim_time/... rows per round) plus
+    ``history["store_touched"]`` — the cold-store row count, the number
+    that stays flat in device memory no matter how large the population.
+
+    ``sample_batches(t, ids)``: a cohort-aware sampler receives the
+    round's virtual-client ids so each virtual client keeps its own data
+    shard; a single-argument dense sampler is called as ``(t)``
+    unchanged (the full-cohort bit-identity path).
+
+    ``execution="async"`` switches to per-cohort ticks driven by
+    ``async_engine.VirtualScheduler`` — ``rounds`` then counts ticks,
+    and ``history["ticked"]`` records each tick's cohort fill fraction.
+    """
+    from repro.core.gossip import time_varying_specs
+
+    if cfg.n_virtual < cfg.m:
+        raise ValueError(
+            f"simulate_virtual needs n_virtual >= m, got "
+            f"n_virtual={cfg.n_virtual}, m={cfg.m}")
+    if cfg.execution == "async":
+        return _simulate_virtual_async(loss_fn, eval_fn, params_single, cfg,
+                                       sample_batches, rounds, seed=seed,
+                                       eval_every=eval_every, verbose=verbose)
+    if cfg.transport == "ppermute" and cfg.topology in ("random", "drandom"):
+        raise ValueError(
+            f"topology={cfg.topology!r} draws a fresh non-circulant graph "
+            "every round, but the ppermute transport compiles one static "
+            "neighbour pattern; use transport='dense' for time-varying "
+            "topologies")
+    m = cfg.m
+    specs = time_varying_specs(cfg.topology, m, rounds, degree=cfg.degree,
+                               base_seed=seed, weights=cfg.weights)
+    spec0 = specs[0]
+    from repro.core.dfl import make_train_round
+    round_fn = jax.jit(make_train_round(loss_fn, cfg, spec=spec0))
+    store = ClientStore(params_single, cfg, seed=seed)
+    transport = comm_lib.make_transport(cfg, spec=spec0)
+    codec = comm_lib.make_codec(cfg)
+    bytes_per_client = codec.bytes_per_client(params_single)
+
+    net = cfg.make_network_model(seed=seed)
+    transfer = None if net is None or \
+        cfg.participation.mode != "deadline" else [
+        net.transfer_times(s.matrix, bytes_per_client, t)
+        for t, s in enumerate(specs)]
+    trivial = cfg.participation.is_trivial
+    sched = None if trivial else participation_schedule(
+        cfg.participation, m, rounds, cfg.K, transfer_times=transfer)
+
+    history: dict[str, list] = {"round": [], "loss": [], "lr": [],
+                                "consensus_sq": [], "dual_norm": [],
+                                "wire_bytes": [], "wall_us": [],
+                                "store_touched": []}
+    if not trivial:
+        history["participation"] = []
+    if net is not None:
+        history["sim_time"] = []
+    for k in codec.metric_names():
+        history[k] = []
+    eval_hist: dict[str, list] = {}
+    state = None
+    for t in range(rounds):
+        ids = cohort_ids(cfg.n_virtual, m, seed, t)
+        batches = _call_sampler(sample_batches, t, ids)
+        t0 = time.perf_counter()
+        state = store.gather(ids)
+        if trivial:
+            plan = transport.prepare(specs[t])
+            state, metrics = round_fn(state, batches, plan)
+            n_active = m
+        else:
+            rp = sched[t]
+            plan = transport.prepare(specs[t], rp.active)
+            state, metrics = round_fn(state, batches, plan,
+                                      jnp.asarray(rp.active),
+                                      jnp.asarray(rp.steps))
+            n_active = int(rp.active.sum())
+        jax.block_until_ready((state.params, metrics))
+        store.scatter(ids, state)
+        history["wall_us"].append((time.perf_counter() - t0) * 1e6)
+        if not trivial:
+            history["participation"].append(float(metrics["participation"]))
+        history["wire_bytes"].append(bytes_per_client * n_active)
+        history["store_touched"].append(store.touched)
+        if net is not None:
+            act = None if trivial else sched[t].active
+            if cfg.participation.mode == "deadline":
+                history["sim_time"].append(net.deadline_round_time(
+                    transfer[t], sched[t].active, cfg.K))
+            else:
+                tiers = transport.sim_tiers(specs[t], act)
+                if tiers is not None:
+                    history["sim_time"].append(net.tiered_round_time(
+                        tiers, bytes_per_client, t, cfg.K, active=act))
+                else:
+                    history["sim_time"].append(net.round_time(
+                        specs[t].matrix, bytes_per_client, t, cfg.K,
+                        active=act))
+        history["round"].append(t)
+        for k in ("loss", "lr", "consensus_sq", "dual_norm") \
+                + codec.metric_names():
+            history[k].append(float(metrics[k]))
+        if eval_fn is not None and ((t + 1) % eval_every == 0
+                                    or t == rounds - 1):
+            ev = eval_fn(mean_params(state.params))
+            eval_hist.setdefault("round", []).append(t)
+            for k, v in ev.items():
+                eval_hist.setdefault(k, []).append(float(v))
+            if verbose:
+                print(f"[cohort] round {t}: {ev}")
+    history["eval"] = eval_hist
+    return state, history
+
+
+def _simulate_virtual_async(loss_fn, eval_fn, params_single: PyTree,
+                            cfg: DFLConfig, sample_batches: Callable,
+                            ticks: int, seed: int = 0, eval_every: int = 10,
+                            verbose: bool = False):
+    """Per-cohort ticks: each tick's ready virtual clients board the hot
+    cohort for one masked synchronous gossip step (see module docs)."""
+    from repro.core.async_engine import VirtualScheduler
+    from repro.core.dfl import make_train_round
+    from repro.core.gossip import time_varying_specs
+
+    m = cfg.m
+    # the tick round is a *masked* synchronous round over the cohort:
+    # force the masked local phase and run the scheduler ourselves
+    tick_cfg = dataclasses.replace(
+        cfg, execution="sync",
+        participation=ParticipationSpec(mode="uniform", p=1.0,
+                                        seed=cfg.participation.seed))
+    specs = time_varying_specs(cfg.topology, m, ticks, degree=cfg.degree,
+                               base_seed=seed, weights=cfg.weights)
+    spec0 = specs[0]
+    round_fn = jax.jit(make_train_round(loss_fn, tick_cfg, spec=spec0))
+    store = ClientStore(params_single, cfg, seed=seed)
+    transport = comm_lib.make_transport(tick_cfg, spec=spec0)
+    codec = comm_lib.make_codec(cfg)
+    bytes_per_client = codec.bytes_per_client(params_single)
+    net = cfg.make_network_model(seed=seed)
+    sched = VirtualScheduler(cfg, net, cfg.n_virtual, bytes_per_client)
+
+    history: dict[str, list] = {"round": [], "loss": [], "lr": [],
+                                "consensus_sq": [], "dual_norm": [],
+                                "wire_bytes": [], "wall_us": [],
+                                "store_touched": [], "sim_time": [],
+                                "ticked": []}
+    for k in codec.metric_names():
+        history[k] = []
+    eval_hist: dict[str, list] = {}
+    state = None
+    full_steps = np.full(m, cfg.K, dtype=np.int64)
+    for t in range(ticks):
+        ready = np.sort(sched.step(t))
+        history["round"].append(t)
+        history["sim_time"].append(cfg.tick_s)
+        history["ticked"].append(len(ready) / m)
+        if len(ready) == 0:
+            # empty window: no jit call, NaN telemetry row (the async
+            # engine's convention)
+            for k in ("loss", "lr", "consensus_sq", "dual_norm") \
+                    + codec.metric_names():
+                history[k].append(float("nan"))
+            history["wire_bytes"].append(0)
+            history["wall_us"].append(0.0)
+            history["store_touched"].append(store.touched)
+            continue
+        # pad the cohort to its static shape with queued (inactive) ids
+        active = np.zeros(m, dtype=bool)
+        active[:len(ready)] = True
+        if len(ready) < m:
+            pool = np.setdiff1d(np.arange(cfg.n_virtual), ready)[
+                :m - len(ready)]
+            ids = np.concatenate([ready, pool])
+        else:
+            ids = ready
+        batches = _call_sampler(sample_batches, t, ids)
+        t0 = time.perf_counter()
+        state = store.gather(ids)
+        plan = transport.prepare(specs[t], active)
+        state, metrics = round_fn(state, batches, plan,
+                                  jnp.asarray(active),
+                                  jnp.asarray(np.where(active, full_steps,
+                                                       0)))
+        jax.block_until_ready((state.params, metrics))
+        store.scatter(ids, state, keep=active)
+        sched.advance(ready)
+        history["wall_us"].append((time.perf_counter() - t0) * 1e6)
+        history["wire_bytes"].append(bytes_per_client * len(ready))
+        history["store_touched"].append(store.touched)
+        for k in ("loss", "lr", "consensus_sq", "dual_norm") \
+                + codec.metric_names():
+            history[k].append(float(metrics[k]))
+        if eval_fn is not None and ((t + 1) % eval_every == 0
+                                    or t == ticks - 1):
+            ev = eval_fn(mean_params(state.params))
+            eval_hist.setdefault("round", []).append(t)
+            for k, v in ev.items():
+                eval_hist.setdefault(k, []).append(float(v))
+            if verbose:
+                print(f"[cohort-async] tick {t}: {ev}")
+    history["eval"] = eval_hist
+    return state, history

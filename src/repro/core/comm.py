@@ -16,7 +16,7 @@ matrix, ppermute gate vectors, ...) — so partial participation composes
 uniformly with every transport; it subsumes the old direct
 ``gossip.mask_and_renormalize`` call sites.  ``aux`` is the transport's
 persistent per-client state (``DFLState.comm``), e.g. the push-sum
-weights.  Three implementations:
+weights.  Four implementations:
 
 * ``DenseTransport``     — einsum against the (masked) matrix; wraps the
   seed ``mixing.mix_dense`` path bit-identically.
@@ -31,7 +31,14 @@ weights.  Three implementations:
   messages ``pi_j * z_j`` are mixed with the column-stochastic matrix,
   weights follow the same contraction, and the de-biased parameters are
   the elementwise ratio.  With a doubly stochastic matrix the weights
-  stay exactly uniform and the step reduces to plain dense mixing.
+  stay exactly uniform and the step reduces to plain dense mixing.  On
+  a sharded mesh with a directed circulant topology the same algebra
+  runs on the ppermute substrate (``mixing.mix_pushsum_ppermute``).
+* ``HierTransport``      — two-tier hierarchical gossip: a dense
+  metropolis step inside each contiguous cluster, then a ring step over
+  the cluster heads.  Both tiers are Definition-1 matrices, both are
+  masked per round, and ``sim_tiers`` exposes them so the network model
+  prices the tiers as sequential critical paths.
 
 ``MessageCodec`` — what goes on the wire::
 
@@ -43,9 +50,14 @@ weights.  Three implementations:
   quantization to ``codec_bits`` <= 8 bits (int8 container), fused
   quantize+residual Pallas kernel (``kernels/quantize.py``) behind
   ``use_kernel``.
+* ``fp8``      — e4m3 float wire with per-client scale: same 4x
+  compression as int8 but relative mantissa spacing, so no stochastic
+  rounding is needed (EF absorbs the deterministic RNE bias); values
+  are clipped to +-448 before the cast because XLA's float8 conversion
+  overflows to NaN instead of saturating.
 * ``topk``     — per-client magnitude top-``codec_k`` sparsification.
 
-Both lossy codecs carry per-client error-feedback residuals
+The lossy codecs carry per-client error-feedback residuals
 (``DFLState.comm["residual"]``): each round encodes ``z + resid`` and
 carries the quantization error forward, so the *sum* of decoded messages
 telescopes to the sum of true messages and compressed runs still
@@ -69,8 +81,8 @@ from repro.core.gossip import (GossipSpec, as_column_stochastic,
 
 PyTree = Any
 
-TRANSPORTS = ("dense", "ppermute", "pushsum")
-CODECS = ("identity", "int8", "topk", "randk", "dp")
+TRANSPORTS = ("dense", "ppermute", "pushsum", "hier")
+CODECS = ("identity", "int8", "fp8", "topk", "randk", "dp")
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +110,17 @@ class Transport:
     def init_aux(self, m: int):
         """Initial persistent per-client state for ``m`` clients (None
         for stateless transports)."""
+        return None
+
+    def sim_tiers(self, spec: GossipSpec,
+                  active: np.ndarray | None = None) -> list | None:
+        """Edge matrices for the network cost model, one per sequential
+        communication tier, or None for single-tier transports (the
+        round is then priced off the spec matrix directly — the seed
+        path, bit-unchanged).  The hierarchical transport returns its
+        masked intra/inter tier matrices so ``simulate`` can price the
+        tiers as sequential critical paths
+        (``NetworkModel.tiered_round_time``)."""
         return None
 
 
@@ -191,7 +214,39 @@ class PushSumTransport(Transport):
 
     kind = "pushsum"
 
+    def __init__(self, spec: GossipSpec | None = None, mesh=None,
+                 client_axis: str = "data",
+                 inner_specs: PyTree | None = None):
+        self._ps_spec = None
+        if mesh is not None:
+            if spec is None:
+                raise ValueError(
+                    "on-mesh push-sum needs a static GossipSpec (the "
+                    "permute offsets are baked into the compiled round)")
+            self._ps_spec = GossipSpec(
+                topology=spec.topology,
+                matrix=as_column_stochastic(spec.matrix), psi=spec.psi)
+            mixing._circulant_pattern(self._ps_spec)  # non-circulant raises
+        self.spec = spec
+        self.mesh = mesh
+        self.client_axis = client_axis
+        self.inner_specs = inner_specs
+
     def prepare(self, spec: GossipSpec, active: np.ndarray | None = None):
+        if self.mesh is not None:
+            if spec is not None and spec is not self.spec and \
+                    not np.array_equal(spec.matrix, self.spec.matrix):
+                raise ValueError(
+                    "the push-sum permute pattern was compiled for "
+                    f"{self.spec.topology!r} and cannot realize this "
+                    f"round's {spec.topology!r} matrix; use the meshless "
+                    "push-sum path for time-varying topologies")
+            if active is not None:
+                raise ValueError(
+                    "on-mesh push-sum gossips the full static pattern; "
+                    "compose partial participation with the meshless "
+                    "(dense-plan) push-sum transport")
+            return None                       # static permute pattern
         p = as_column_stochastic(spec.matrix)
         if active is not None:
             p = mask_and_renormalize_columns(p, active)
@@ -202,6 +257,13 @@ class PushSumTransport(Transport):
             raise ValueError(
                 "push-sum needs its weight state: initialize DFLState.comm "
                 "via init_state (or Transport.init_aux)")
+        if self.mesh is not None and plan is None:
+            # directed circulant on the sharded substrate: biased
+            # messages ride the neighbour permutes, the ps_weight scalar
+            # rides one extra permute chain (mixing.mix_pushsum_ppermute)
+            return mixing.mix_pushsum_ppermute(
+                z, aux.astype(jnp.float32), self._ps_spec,
+                self.mesh, self.client_axis, inner_specs=self.inner_specs)
         pi = aux.astype(jnp.float32)
         weighted = plan * pi[None, :]
         pi_new = plan @ pi
@@ -217,6 +279,59 @@ class PushSumTransport(Transport):
 
     def init_aux(self, m: int):
         return jnp.full((m,), 1.0 / m, jnp.float32)
+
+
+class HierTransport(Transport):
+    """Two-tier hierarchical gossip: dense intra-cluster + sparse
+    inter-cluster.
+
+    The m cohort slots form ``clusters`` contiguous clusters
+    (``gossip.cluster_labels``).  One round runs two sequential
+    Definition-1 gossip steps built by ``gossip.hier_tier_matrices``:
+
+    * tier 1 (``intra``) — complete-graph metropolis gossip inside each
+      cluster (fast LAN links under the cluster-aware ``hub-and-spoke``
+      network preset);
+    * tier 2 (``inter``) — ring gossip over the cluster heads, identity
+      for everyone else (the sparse backbone).
+
+    ``prepare`` masks each tier with the round's participation mask
+    (``mask_and_renormalize`` per tier), so partial participation, wire
+    codecs (the decoded estimates feed both tiers), robust wrapping
+    (``threat.RobustTransport`` aggregates per tier), and the network
+    model (``sim_tiers`` prices the tiers as sequential critical paths)
+    all compose per tier.  The per-round ``spec`` matrix is *not* used:
+    the hierarchy replaces the flat topology.
+    """
+
+    kind = "hier"
+
+    def __init__(self, m: int, clusters: int = 0,
+                 weights: str = "metropolis"):
+        from repro.core.gossip import hier_tier_matrices, resolve_clusters
+        self.m = m
+        self.clusters = resolve_clusters(m, clusters)
+        self.w_intra, self.w_inter = hier_tier_matrices(
+            m, self.clusters, weights=weights)
+
+    def _masked(self, active):
+        if active is None:
+            return self.w_intra, self.w_inter
+        return (mask_and_renormalize(self.w_intra, active),
+                mask_and_renormalize(self.w_inter, active))
+
+    def prepare(self, spec: GossipSpec, active: np.ndarray | None = None):
+        wi, wo = self._masked(active)
+        return {"intra": jnp.asarray(wi, jnp.float32),
+                "inter": jnp.asarray(wo, jnp.float32)}
+
+    def mix(self, z, plan, aux=None):
+        x = mixing.mix_dense(plan["intra"], z)
+        return mixing.mix_dense(plan["inter"], x), aux
+
+    def sim_tiers(self, spec: GossipSpec,
+                  active: np.ndarray | None = None) -> list:
+        return list(self._masked(active))
 
 
 def make_transport(cfg, spec: GossipSpec | None = None, mesh=None,
@@ -236,7 +351,11 @@ def make_transport(cfg, spec: GossipSpec | None = None, mesh=None,
         base = PpermuteTransport(spec, mesh=mesh, client_axis=client_axis,
                                  inner_specs=inner_specs)
     elif name == "pushsum":
-        base = PushSumTransport()
+        base = PushSumTransport(spec, mesh=mesh, client_axis=client_axis,
+                                inner_specs=inner_specs)
+    elif name == "hier":
+        base = HierTransport(cfg.m, clusters=getattr(cfg, "clusters", 0),
+                             weights=getattr(cfg, "weights", "metropolis"))
     else:
         raise ValueError(
             f"unknown transport {name!r}; expected one of {TRANSPORTS}")
@@ -248,12 +367,12 @@ def make_transport(cfg, spec: GossipSpec | None = None, mesh=None,
         # robust="mean" deliberately returns the UNWRAPPED transport —
         # the zero-adversary code path stays bit-identical to the seed.
         from repro.core import threat as threat_lib
-        if name == "ppermute" and mesh is not None:
+        if name in ("ppermute", "pushsum") and mesh is not None:
             raise ValueError(
                 "robust aggregation needs the full neighbourhood "
-                "materialized per receiver, which the on-mesh gated-"
-                "permute path never does; use transport='dense' (or the "
-                "meshless ppermute fallback) with robust mixing")
+                "materialized per receiver, which the on-mesh permute "
+                "paths never do; use transport='dense' (or the meshless "
+                "fallbacks) with robust mixing")
         return threat_lib.RobustTransport(base, threat_lib.make_aggregator(cfg))
     return base
 
@@ -435,6 +554,73 @@ class QuantizeCodec(MessageCodec):
         return int(total)
 
 
+class Fp8Codec(MessageCodec):
+    """fp8 ``e4m3`` wire with per-client scale and error feedback.
+
+    Hangs off the per-client symmetric-scale plumbing the fused
+    quantized-gossip kernels established (``kernels/quantize.py``): per
+    client and per leaf the error-compensated message ``e = z + resid``
+    is scaled by ``max|e| / 448`` (448 = the e4m3 max normal), cast to
+    ``float8_e4m3fn`` with round-to-nearest-even, and the cast error
+    rides the shared error-feedback residual.  Values are clipped to
+    +-448 *before* the cast: XLA's float8 cast overflows to NaN instead
+    of saturating, so an unclipped absmax value would poison the mix.
+    Unlike the integer grid, no stochastic rounding is needed — e4m3's
+    mantissa spacing is relative, and EF telescopes the deterministic
+    bias.  One byte per value + 4 for the f32 scale per leaf.
+    """
+
+    name = "fp8"
+    stateful = True
+    FP8_MAX = 448.0                      # e4m3 max normal magnitude
+
+    def __init__(self):
+        self._meta = None
+
+    def init_state(self, stacked_params: PyTree):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), stacked_params)
+
+    def encode(self, z, resid=None, rng=None, active=None):
+        leaves, treedef = jax.tree.flatten(z)
+        self._meta = ([(l.shape, l.dtype) for l in leaves], treedef)
+        rleaves = jax.tree.leaves(resid) if resid is not None else \
+            [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+        wire_leaves, new_resid = [], []
+        for leaf, r in zip(leaves, rleaves):
+            e = leaf.astype(jnp.float32) + r
+            m = e.shape[0]
+            absmax = jnp.max(jnp.abs(e).reshape(m, -1), axis=1)
+            scale = jnp.maximum(absmax, jnp.float32(1e-12)) \
+                / jnp.float32(self.FP8_MAX)
+            sb = scale.reshape((m,) + (1,) * (e.ndim - 1))
+            q = jnp.clip(e / sb, -self.FP8_MAX, self.FP8_MAX
+                         ).astype(jnp.float8_e4m3fn)
+            rr = e - q.astype(jnp.float32) * sb
+            if active is not None:
+                rr = _gate_tree(active, rr, r)
+            wire_leaves.append({"q": q, "scale": scale})
+            new_resid.append(rr)
+        return (jax.tree.unflatten(treedef, wire_leaves),
+                jax.tree.unflatten(treedef, new_resid))
+
+    def decode(self, wire):
+        metas, treedef = self._meta
+        leaves = treedef.flatten_up_to(wire)
+        out = []
+        for w, (shape, dtype) in zip(leaves, metas):
+            m = w["q"].shape[0]
+            sb = w["scale"].reshape((m,) + (1,) * (len(shape) - 1))
+            out.append((w["q"].astype(jnp.float32) * sb).astype(dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    def bytes_per_client(self, params_single: PyTree) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(params_single):
+            total += leaf.size + 4               # 1 byte/value + f32 scale
+        return int(total)
+
+
 class _SparseCodec(MessageCodec):
     """Shared scaffolding for index/value sparsifiers: error-feedback
     residuals, per-leaf meta capture, and the scatter decode.
@@ -612,6 +798,8 @@ def make_codec(cfg) -> MessageCodec:
         uk = getattr(cfg, "use_kernel", False)
         return QuantizeCodec(bits=cfg.codec_bits,
                              use_kernel=uk is True or uk == "comm")
+    if name == "fp8":
+        return Fp8Codec()
     if name == "topk":
         return TopKCodec(k=cfg.codec_k)
     if name == "randk":

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -50,9 +49,8 @@ class DFLConfig:
     topology: str = "random"
     weights: str = "metropolis"
     degree: int = 10             # neighbours for the random topology
-    mixing: str = ""             # DEPRECATED alias for ``transport``
-    transport: str = ""          # "dense" | "ppermute" | "pushsum"
-                                 # ("" resolves to mixing, then "dense")
+    transport: str = ""          # "dense" | "ppermute" | "pushsum" |
+                                 # "hier" ("" resolves to "dense")
     codec: str = "identity"      # wire codec: "identity" | "int8" |
                                  # "topk" | "randk"
     codec_bits: int = 8          # int8 codec: bits per value (2..8)
@@ -97,25 +95,29 @@ class DFLConfig:
     dp_clip: float = 1.0         # dp codec: per-client L2 clip bound
     dp_noise: float = 0.0        # dp codec: noise multiplier (noise std
                                  # = dp_noise * dp_clip)
+    n_virtual: int = 0           # cohort virtualization: total virtual
+                                 # population; 0 = every client is device-
+                                 # resident (the dense paper path). When
+                                 # > 0, ``m`` is the hot-cohort size and
+                                 # the cold population lives in a host-
+                                 # side ClientStore (repro.core.cohort)
+    clusters: int = 0            # two-tier hierarchy: number of clusters
+                                 # for transport="hier" (0 resolves to a
+                                 # heuristic ~sqrt(m)); also makes the
+                                 # hub-and-spoke network preset cluster-
+                                 # aware (one fast hub per cluster)
 
     def __post_init__(self):
         if self.algorithm not in solvers_lib.solver_names("dfl"):
             raise ValueError(
                 f"unknown algorithm {self.algorithm!r}; registered DFL "
                 f"solvers: {solvers_lib.solver_names('dfl')}")
-        eff = self.transport or self.mixing or "dense"
+        eff = self.transport or "dense"
         if eff not in comm_lib.TRANSPORTS:
             raise ValueError(
                 f"unknown transport {eff!r}; expected one of "
                 f"{comm_lib.TRANSPORTS}")
-        if self.transport and self.mixing and self.transport != self.mixing:
-            raise ValueError(
-                f"transport={self.transport!r} conflicts with the deprecated "
-                f"mixing={self.mixing!r} alias; set only transport")
-        # resolve the deprecated alias both ways so old cfg.mixing reads
-        # and new cfg.transport reads agree
         object.__setattr__(self, "transport", eff)
-        object.__setattr__(self, "mixing", eff)
         if self.codec not in comm_lib.codec_names():
             raise ValueError(
                 f"unknown codec {self.codec!r}; expected one of "
@@ -191,6 +193,21 @@ class DFLConfig:
                     "clients tick late instead of being dropped — use a "
                     "sampling participation mode (or the default) with "
                     "async execution")
+        if self.n_virtual < 0:
+            raise ValueError(
+                f"n_virtual must be >= 0, got {self.n_virtual}")
+        if self.n_virtual and self.n_virtual < self.m:
+            raise ValueError(
+                f"n_virtual={self.n_virtual} is the total virtual "
+                f"population and must be >= m={self.m} (the hot-cohort "
+                "size); set n_virtual=0 for a fully device-resident run")
+        if self.clusters < 0:
+            raise ValueError(
+                f"clusters must be >= 0, got {self.clusters}")
+        if self.clusters > self.m:
+            raise ValueError(
+                f"clusters={self.clusters} exceeds m={self.m}: every "
+                "cluster needs at least one cohort slot")
 
     def make_solver(self) -> "solvers_lib.LocalSolver":
         """The LocalSolver this config resolves to (algorithm facts like
@@ -203,7 +220,8 @@ class DFLConfig:
         passes through (after an m check), None stays None."""
         if self.network is None:
             return None
-        return make_network(self.network, self.m, seed=seed)
+        return make_network(self.network, self.m, seed=seed,
+                            hubs=self.clusters)
 
 
 @jax.tree_util.register_dataclass
@@ -221,31 +239,6 @@ class DFLState:
     comm: PyTree = None          # communication state (comm.init_comm_state):
                                  # push-sum weights / codec residuals; None
                                  # for the stateless seed configuration
-
-    @property
-    def dual(self) -> PyTree:
-        """DEPRECATED: solver state is solver-owned; read
-        ``state.solver["dual"]`` (ADMM-family solvers only)."""
-        warnings.warn(
-            "DFLState.dual is deprecated: solver state lives in "
-            "DFLState.solver (state.solver['dual'] for ADMM solvers)",
-            DeprecationWarning, stacklevel=2)
-        if isinstance(self.solver, dict) and "dual" in self.solver:
-            return self.solver["dual"]
-        raise AttributeError(
-            "this state's solver carries no dual variable")
-
-    @property
-    def momentum(self) -> PyTree:
-        """DEPRECATED: read ``state.solver["momentum"]`` (DFedAvgM only)."""
-        warnings.warn(
-            "DFLState.momentum is deprecated: solver state lives in "
-            "DFLState.solver (state.solver['momentum'] for DFedAvgM)",
-            DeprecationWarning, stacklevel=2)
-        if isinstance(self.solver, dict) and "momentum" in self.solver:
-            return self.solver["momentum"]
-        raise AttributeError(
-            "this state's solver carries no momentum buffer")
 
 
 def init_state(params_single: PyTree, cfg: DFLConfig, seed: int = 0) -> DFLState:
@@ -614,6 +607,14 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     from repro.core.participation import participation_schedule
     from repro.core.gossip import time_varying_specs
 
+    if cfg.n_virtual:
+        # cohort virtualization: the cold population lives host-side,
+        # only the m-slot hot cohort runs on device (repro.core.cohort;
+        # handles execution="async" itself via per-cohort ticks)
+        from repro.core.cohort import simulate_virtual
+        return simulate_virtual(loss_fn, eval_fn, params_single, cfg,
+                                sample_batches, rounds, seed=seed,
+                                eval_every=eval_every, verbose=verbose)
     if cfg.execution == "async":
         from repro.core.async_engine import simulate_async
         return simulate_async(loss_fn, eval_fn, params_single, cfg,
@@ -692,9 +693,17 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
                 history["sim_time"].append(net.deadline_round_time(
                     transfer[t], sched[t].active, cfg.K))
             else:
-                history["sim_time"].append(net.round_time(
-                    specs[t].matrix, bytes_per_client, t, cfg.K,
-                    active=None if trivial else sched[t].active))
+                act = None if trivial else sched[t].active
+                tiers = transport.sim_tiers(specs[t], act)
+                if tiers is not None:
+                    # multi-tier transports (hier) run their tiers
+                    # sequentially: price the per-tier critical paths
+                    history["sim_time"].append(net.tiered_round_time(
+                        tiers, bytes_per_client, t, cfg.K, active=act))
+                else:
+                    history["sim_time"].append(net.round_time(
+                        specs[t].matrix, bytes_per_client, t, cfg.K,
+                        active=act))
         history["round"].append(t)
         for k in ("loss", "lr", "consensus_sq", "dual_norm") \
                 + codec.metric_names():

@@ -425,3 +425,64 @@ def time_varying_specs(topology: str, m: int, rounds: int, *, degree: int = 10,
     if len(masks) != rounds:
         raise ValueError(f"need one mask per round: {len(masks)} != {rounds}")
     return [s.masked(a) for s, a in zip(specs, masks)]
+
+
+# ---------------------------------------------------------------------------
+# Two-tier hierarchy (transport="hier"): clusters, heads, per-tier matrices
+# ---------------------------------------------------------------------------
+
+def resolve_clusters(m: int, clusters: int = 0) -> int:
+    """Resolve ``DFLConfig.clusters`` for ``m`` clients: 0 picks the
+    balanced heuristic ``~sqrt(m)`` (capped to [1, m])."""
+    _check_m(m)
+    if clusters < 0 or clusters > m:
+        raise ValueError(f"clusters must be in [0, m={m}], got {clusters}")
+    if clusters:
+        return clusters
+    return max(1, min(m, int(round(np.sqrt(m)))))
+
+
+def cluster_labels(m: int, clusters: int) -> np.ndarray:
+    """Contiguous near-equal blocks: client ``i`` belongs to cluster
+    ``i * clusters // m`` (sizes differ by at most one)."""
+    clusters = resolve_clusters(m, clusters)
+    return (np.arange(m) * clusters) // m
+
+
+def cluster_heads(labels: np.ndarray) -> np.ndarray:
+    """First member of each cluster — the node carrying the inter-tier
+    edges (and the fast hub under the cluster-aware network preset)."""
+    n = int(labels.max()) + 1
+    return np.array([int(np.flatnonzero(labels == c)[0]) for c in range(n)])
+
+
+def hier_tier_matrices(m: int, clusters: int = 0,
+                       *, weights: str = "metropolis"
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """The two tier matrices of the hierarchical transport.
+
+    ``w_intra``: dense gossip inside each cluster (complete graph per
+    contiguous block).  ``w_inter``: sparse ring over the cluster heads;
+    every non-head row is the identity.  Both are Definition-1
+    (symmetric, doubly stochastic), so their per-round composition
+    ``w_inter @ w_intra`` preserves the population average exactly and
+    each tier can be masked/robust-wrapped like any flat gossip matrix.
+    """
+    labels = cluster_labels(m, clusters)
+    eye = np.eye(m, dtype=bool)
+    intra_adj = (labels[:, None] == labels[None, :]) & ~eye
+    w_intra = (metropolis_weights(intra_adj) if weights == "metropolis"
+               else uniform_weights(intra_adj))
+    heads = cluster_heads(labels)
+    inter_adj = np.zeros((m, m), dtype=bool)
+    if heads.size == 2:
+        inter_adj[heads[0], heads[1]] = inter_adj[heads[1], heads[0]] = True
+    elif heads.size > 2:
+        for k, h in enumerate(heads):
+            nxt = heads[(k + 1) % heads.size]
+            inter_adj[h, nxt] = inter_adj[nxt, h] = True
+    w_inter = (metropolis_weights(inter_adj) if weights == "metropolis"
+               else uniform_weights(inter_adj))
+    validate_gossip_matrix(w_intra)
+    validate_gossip_matrix(w_inter)
+    return w_intra, w_inter

@@ -164,6 +164,62 @@ def ppermute_gates(spec: GossipSpec, active: np.ndarray
     return gates.astype(np.float32), self_w.astype(np.float32)
 
 
+def mix_pushsum_ppermute_local(z_local: PyTree, pi_local: jax.Array,
+                               spec: GossipSpec, axis_name: str
+                               ) -> tuple[PyTree, jax.Array]:
+    """Per-shard push-sum body for *directed circulant* topologies.
+
+    One round of push-sum on the collective_permute substrate: the
+    biased messages ``pi_j * z_j`` ride one permute per nonzero offset
+    of the column-stochastic circulant ``P``, and the (m,) push-sum
+    weight scalar rides ONE extra permute chain over the same offsets —
+    ``pi' = P @ pi`` without materializing ``P``.  De-biased parameters
+    are the elementwise ratio, exactly like ``PushSumTransport.mix``.
+
+    Directed offsets: ``P[i, j] = p0[(j - i) % m]``, so receiver ``i``
+    hears sender ``i + off`` — each send goes ``src -> src - off``
+    (mod m), the mirror of the symmetric path's ``src -> src + off``.
+    """
+    m = spec.m
+    pattern = _circulant_pattern(spec)
+
+    def shift(arr, off):
+        if off == 0:
+            return arr
+        perm = [(src, (src - off) % m) for src in range(m)]
+        return jax.lax.ppermute(arr, axis_name, perm)
+
+    pi = pi_local.astype(jnp.float32)
+    pi_new = sum(wgt * shift(pi, off) for off, wgt in pattern)
+
+    def leaf(arr):
+        extra = (1,) * (arr.ndim - 1)
+        biased = arr.astype(jnp.float32) * pi.reshape((-1,) + extra)
+        u = sum(wgt * shift(biased, off) for off, wgt in pattern)
+        return (u / pi_new.reshape((-1,) + extra)).astype(arr.dtype)
+
+    return jax.tree.map(leaf, z_local), pi_new
+
+
+def mix_pushsum_ppermute(z: PyTree, pi: jax.Array, spec: GossipSpec,
+                         mesh: jax.sharding.Mesh, client_axis: str,
+                         inner_specs: PyTree | None = None
+                         ) -> tuple[PyTree, jax.Array]:
+    """shard_map wrapper for the push-sum ppermute path: leaves stacked
+    (m, ...) and the weight vector (m,), both sharded over
+    ``client_axis``."""
+    if inner_specs is None:
+        pspec = jax.tree.map(lambda _: P(client_axis), z)
+    else:
+        pspec = inner_specs
+
+    fn = functools.partial(mix_pushsum_ppermute_local, spec=spec,
+                           axis_name=client_axis)
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=(pspec, P(client_axis)),
+        out_specs=(pspec, P(client_axis)), check_vma=False)(z, pi)
+
+
 def mix(z: PyTree, spec: GossipSpec, *, strategy: str = "dense",
         mesh: jax.sharding.Mesh | None = None, client_axis: str = "data",
         axis_bound: bool = False) -> PyTree:

@@ -165,6 +165,22 @@ class NetworkModel:
         slowest = float(transfer.max()) if transfer.size else 0.0
         return K * self.compute_s + slowest
 
+    def tiered_round_time(self, tiers, nbytes: int, t: int, K: int,
+                          active: np.ndarray | None = None) -> float:
+        """Critical-path wall-clock of one *multi-tier* round: ``K``
+        iterations of modeled compute plus the per-tier critical paths
+        summed, because the tiers run sequentially (the hierarchical
+        transport gossips inside each cluster before the cluster heads
+        exchange across clusters).  Each tier is priced exactly like a
+        flat round's graph."""
+        total = K * self.compute_s
+        for w in tiers:
+            transfer = self.transfer_times(w, nbytes, t, active=active)
+            if active is not None:
+                transfer = transfer[np.asarray(active, dtype=bool)]
+            total += float(transfer.max()) if transfer.size else 0.0
+        return total
+
     def deadline_round_time(self, transfer: np.ndarray, active: np.ndarray,
                             K: int) -> float:
         """Wall-clock of one deadline-mode round: ``K`` iterations of
@@ -222,7 +238,8 @@ def network_names() -> tuple[str, ...]:
 
 
 def make_network(preset, m: int, *, seed: int = 0, jitter: float = 0.05,
-                 compute_s: float = 0.002, site: int = 4) -> NetworkModel:
+                 compute_s: float = 0.002, site: int = 4,
+                 hubs: int = 0) -> NetworkModel:
     """Build one of the ``NETWORKS`` presets for ``m`` clients.
 
     Args:
@@ -235,6 +252,13 @@ def make_network(preset, m: int, *, seed: int = 0, jitter: float = 0.05,
       jitter:    per-round lognormal jitter sigma (0 disables).
       compute_s: modeled seconds per local iteration.
       site:      LAN site size for the ``wan-lan`` preset.
+      hubs:      cluster-aware ``hub-and-spoke``: with ``hubs > 1`` the
+                 clients form ``hubs`` contiguous clusters
+                 (``gossip.cluster_labels``), links inside a cluster and
+                 between cluster heads are fast, everything crossing
+                 clusters off the head backbone is slow.  The default 0
+                 (and 1) keeps the classic single-hub star around
+                 client 0.
     """
     if isinstance(preset, NetworkModel):
         if preset.m != m:
@@ -258,10 +282,21 @@ def make_network(preset, m: int, *, seed: int = 0, jitter: float = 0.05,
         bw = _lognormal_matrix(rng, _BASE_BW, 2.0, m)
         lat = _lognormal_matrix(rng, _BASE_LAT, 0.5, m)
     elif preset == "hub-and-spoke":
-        hub = np.zeros((m, m), dtype=bool)
-        hub[0, :] = hub[:, 0] = True
-        bw = np.where(hub, _FAST_BW, _SLOW_BW)
-        lat = np.where(hub, _FAST_LAT, _SLOW_LAT)
+        if hubs > 1:
+            # cluster-aware: fast LAN inside each contiguous cluster plus
+            # a fast backbone between the cluster heads — the exact edge
+            # set the two-tier hier transport gossips over
+            from repro.core.gossip import cluster_heads, cluster_labels
+            labels = cluster_labels(m, hubs)
+            is_head = np.zeros(m, dtype=bool)
+            is_head[cluster_heads(labels)] = True
+            fast = ((labels[:, None] == labels[None, :])
+                    | np.outer(is_head, is_head))
+        else:
+            fast = np.zeros((m, m), dtype=bool)
+            fast[0, :] = fast[:, 0] = True
+        bw = np.where(fast, _FAST_BW, _SLOW_BW)
+        lat = np.where(fast, _FAST_LAT, _SLOW_LAT)
     elif preset == "wan-lan":
         sites = np.arange(m) // max(site, 1)
         same = sites[:, None] == sites[None, :]

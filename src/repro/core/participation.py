@@ -250,3 +250,28 @@ def participation_schedule(spec: ParticipationSpec, m: int, rounds: int,
             f"{len(transfer_times)} != {rounds}")
     return [round_participation(spec, m, t, K, transfer_times=tt)
             for t, tt in zip(range(rounds), transfer_times)]
+
+
+_COHORT = 3
+
+
+def cohort_ids(n_virtual: int, cohort: int, seed: int, t: int) -> np.ndarray:
+    """Round ``t``'s hot cohort: ``cohort`` virtual-client ids drawn
+    uniformly without replacement from the ``n_virtual`` population.
+
+    Counter-based like every scenario stream (``default_rng((seed,
+    _COHORT, t))``): the schedule is reproducible from the run seed with
+    no carried RNG state.  Ids come back *sorted*, so at ``cohort ==
+    n_virtual`` the draw degenerates to ``arange(n_virtual)`` — the
+    gather is then the identity permutation and the virtualized round
+    reduces bit-identically to the dense ``simulate`` path (pinned by
+    tests/test_cohort.py).
+    """
+    if not 1 <= cohort <= n_virtual:
+        raise ValueError(
+            f"cohort size must be in [1, n_virtual={n_virtual}], "
+            f"got {cohort}")
+    if cohort == n_virtual:
+        return np.arange(n_virtual)
+    rng = np.random.default_rng((seed, _COHORT, t))
+    return np.sort(rng.choice(n_virtual, size=cohort, replace=False))

@@ -487,10 +487,20 @@ class RobustTransport(Transport):
             pi = aux.astype(jnp.float32)
             eff = plan.astype(jnp.float32) * pi[None, :]
             return self.agg.aggregate(z, eff), plan @ pi
+        if self.kind == "hier":
+            # robustness per tier: a receiver defends its intra-cluster
+            # neighbourhood first, then the head backbone defends the
+            # cross-cluster exchange
+            x = self.agg.aggregate(z, plan["intra"].astype(jnp.float32))
+            return self.agg.aggregate(x, plan["inter"].astype(jnp.float32)), \
+                aux
         return self.agg.aggregate(z, jnp.asarray(plan, jnp.float32)), aux
 
     def init_aux(self, m: int):
         return self.inner.init_aux(m)
+
+    def sim_tiers(self, spec, active=None):
+        return self.inner.sim_tiers(spec, active)
 
 
 # ---------------------------------------------------------------------------

@@ -103,7 +103,7 @@ def build_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
     m = par.dfl_m
     spec = make_gossip(par.topology, m)
     dfl_cfg = DFLConfig(algorithm="dfedadmm", m=m, K=par.dfl_k,
-                        topology=par.topology, mixing=par.mixing,
+                        topology=par.topology, transport=par.mixing,
                         microbatches=par.microbatches)
 
     def loss_fn(params, batch, rng):

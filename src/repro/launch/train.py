@@ -124,6 +124,18 @@ def main(argv=None) -> int:
     ap.add_argument("--dp-noise", type=float, default=0.0,
                     help="dp codec: noise multiplier (std = dp_noise * "
                          "dp_clip); history records dp_clip_frac per round")
+    ap.add_argument("--n-virtual", type=int, default=0,
+                    help="cohort virtualization: total virtual population "
+                         "(0 = fully device-resident); per-round state is "
+                         "gathered for a --cohort-sized hot subset")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="hot cohort size with --n-virtual (overrides --m; "
+                         "0 keeps --m as the cohort)")
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="two-tier hierarchy cluster count for --transport "
+                         "hier and the cluster-aware hub-and-spoke network "
+                         "(0 = ~sqrt(m) heuristic for hier, classic star "
+                         "for the network)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -135,10 +147,15 @@ def main(argv=None) -> int:
     if cfg.arch_type in ("audio", "vlm") and not args.smoke:
         raise SystemExit("frontend-stub archs: use --smoke on CPU")
 
+    if args.cohort and not args.n_virtual:
+        raise SystemExit("--cohort needs --n-virtual (the cohort is the hot "
+                         "subset of the virtual population)")
+    m_eff = args.cohort if (args.n_virtual and args.cohort) else args.m
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    virt = f" n_virtual={args.n_virtual}" if args.n_virtual else ""
     print(f"[train] arch={cfg.name} algo={args.algorithm} "
-          f"params={model.param_count(params):,} m={args.m} K={args.k}")
+          f"params={model.param_count(params):,} m={m_eff} K={args.k}{virt}")
 
     part_kw = dict(dropout=args.dropout,
                    straggler_frac=args.straggler_frac,
@@ -163,7 +180,7 @@ def main(argv=None) -> int:
     threat = None if args.attack == "none" else ThreatSpec(
         attack=args.attack, frac=args.attack_frac, scale=args.attack_scale,
         seed=args.seed)
-    dfl_cfg = DFLConfig(algorithm=args.algorithm, m=args.m, K=args.k,
+    dfl_cfg = DFLConfig(algorithm=args.algorithm, m=m_eff, K=args.k,
                         lr=args.lr, lam=args.lam, rho=args.rho,
                         topology=args.topology,
                         transport=args.transport, codec=args.codec,
@@ -176,8 +193,9 @@ def main(argv=None) -> int:
                         else 0.0,
                         max_staleness=args.max_staleness,
                         threat=threat, robust=args.robust,
-                        dp_clip=args.dp_clip, dp_noise=args.dp_noise)
-    sampler = _make_sampler(cfg, args)
+                        dp_clip=args.dp_clip, dp_noise=args.dp_noise,
+                        n_virtual=args.n_virtual, clusters=args.clusters)
+    sampler = _make_sampler(cfg, args, m_eff)
     eval_batch = _eval_batch(cfg, args)
 
     def loss_fn(p, batch, rng):
@@ -196,7 +214,7 @@ def main(argv=None) -> int:
     sim = (f"  sim_time={sum(history['sim_time']):.1f}s ({args.network})"
            if "sim_time" in history else "")
     if threat is not None:
-        sim += (f"  adversaries={threat.n_adversaries(args.m)}/{args.m} "
+        sim += (f"  adversaries={threat.n_adversaries(m_eff)}/{m_eff} "
                 f"({args.attack} x{args.attack_scale:g}, "
                 f"robust={args.robust})")
     if args.codec == "dp":
@@ -204,9 +222,13 @@ def main(argv=None) -> int:
         cf = [v for v in history["dp_clip_frac"] if not _math.isnan(v)]
         sim += (f"  dp_clip_frac={sum(cf) / max(len(cf), 1):.2f} "
                 f"(noise_mult={args.dp_noise:g})")
+    if args.n_virtual:
+        sim += (f"  virtual={args.n_virtual} cohort={m_eff} "
+                f"store_rows={history['store_touched'][-1]}")
     if args.execution == "async":
-        sim += (f"  ticked={sum(history['ticked']) / args.rounds:.2f}"
-                f"  max_staleness={max(history['staleness'])}")
+        sim += f"  ticked={sum(history['ticked']) / args.rounds:.2f}"
+        if "staleness" in history:
+            sim += f"  max_staleness={max(history['staleness'])}"
         if not any(history["ticked"]):
             print("[train] no client completed a round within any tick "
                   "window — raise --tick-s (or --rounds): the slowest "
@@ -227,7 +249,7 @@ def main(argv=None) -> int:
     return 0
 
 
-def _make_sampler(cfg, args):
+def _make_sampler(cfg, args, m):
     from repro.data.synthetic import make_dfl_lm_sampler, make_model_batch
 
     if cfg.arch_type in ("audio", "vlm"):
@@ -235,9 +257,9 @@ def _make_sampler(cfg, args):
             return jax.tree.map(
                 jnp.asarray,
                 make_model_batch(cfg, args.batch, args.seq, seed=t,
-                                 lead=(args.m, args.k)))
+                                 lead=(m, args.k)))
         return sampler
-    return make_dfl_lm_sampler(cfg, args.m, args.k, args.batch, args.seq,
+    return make_dfl_lm_sampler(cfg, m, args.k, args.batch, args.seq,
                                seed=args.seed)
 
 

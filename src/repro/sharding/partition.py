@@ -107,21 +107,41 @@ def param_specs(shapes: PyTree, cfg: ModelConfig, par: ParallelConfig,
 
 
 def dfl_state_specs(param_tree: PyTree, cfg: ModelConfig,
-                    par: ParallelConfig, algorithm: str = "dfedadmm") -> Any:
+                    par: ParallelConfig, algorithm: str = "dfedadmm",
+                    dfl_cfg: Any = None) -> Any:
     """Specs for core.dfl.DFLState with stacked (m, ...) leaves.
+
+    The leading (m,) axis is the *hot cohort* under cohort
+    virtualization (``repro.core.cohort``): the gathered slots shard
+    over ``par.client_axis`` exactly like a fully device-resident
+    population, so the same specs serve both regimes.
 
     The solver-owned state slot (``DFLState.solver``) takes its structure
     from the algorithm's ``LocalSolver.state_specs`` — param-shaped
     buffers (duals, momentum) share the stacked param specs, and solvers
-    without state contribute no specs at all."""
+    without state contribute no specs at all.  Passing the run's
+    ``dfl_cfg`` (a ``core.dfl.DFLConfig``) also lays out the
+    communication slot (``DFLState.comm``): push-sum weights shard over
+    the client axis, codec error-feedback residuals share the stacked
+    param specs; without it ``comm`` is None (the stateless layout)."""
     from repro.core import solvers as solvers_lib
     from repro.core.dfl import DFLConfig, DFLState
     ps = param_specs(param_tree, cfg, par, stacked_client=True)
     solver = solvers_lib.make_solver(DFLConfig(algorithm=algorithm))
+    comm = None
+    if dfl_cfg is not None:
+        from repro.core import comm as comm_lib
+        comm = {}
+        if dfl_cfg.transport == "pushsum":
+            comm["ps_weight"] = P(par.client_axis)
+        if comm_lib.make_codec(dfl_cfg).stateful:
+            comm["residual"] = ps
+        comm = comm or None
     return DFLState(params=ps,
                     solver=solver.state_specs(ps, par.client_axis),
                     rng=P(par.client_axis, None),
-                    round=P())
+                    round=P(),
+                    comm=comm)
 
 
 def train_batch_specs(batch_shapes: PyTree, par: ParallelConfig) -> PyTree:

@@ -1,0 +1,210 @@
+"""Cohort virtualization: ClientStore gather/scatter, bit-identity of the
+full-population cohort against the dense simulate path for every
+registered solver, and cohort-sampling determinism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import solver_names
+from repro.core.cohort import ClientStore, simulate_virtual
+from repro.core.dfl import DFLConfig, simulate
+from repro.core.participation import ParticipationSpec, cohort_ids
+
+M = 6
+
+
+def loss_fn(params, batch, rng):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def make_params():
+    return {"w": jnp.zeros((3, 2)), "b": jnp.zeros((2,))}
+
+
+def make_sampler(m, seed=0):
+    def sample(t):
+        rng = np.random.default_rng((seed, t))
+        x = rng.standard_normal((m, 2, 4, 3)).astype(np.float32)
+        y = np.tanh(x @ rng.standard_normal((3, 2)).astype(np.float32))
+        return (jnp.asarray(x), jnp.asarray(y.astype(np.float32)))
+    return sample
+
+
+def cohort_sampler(seed=0):
+    def sample(t, ids):
+        rng = np.random.default_rng((seed, t))
+        x = rng.standard_normal((len(ids), 2, 4, 3)).astype(np.float32)
+        y = np.tanh(x @ rng.standard_normal((3, 2)).astype(np.float32))
+        return (jnp.asarray(x), jnp.asarray(y.astype(np.float32)))
+    return sample
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: cohort == population must reproduce the dense path exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", solver_names("dfl"))
+def test_full_cohort_bit_identical_to_dense(algorithm):
+    kw = dict(m=M, K=2, algorithm=algorithm, topology="ring", lr=0.05)
+    sd, hd = simulate(loss_fn, None, make_params(), DFLConfig(**kw),
+                      make_sampler(M), rounds=4, seed=1)
+    sv, hv = simulate(loss_fn, None, make_params(),
+                      DFLConfig(n_virtual=M, **kw),
+                      make_sampler(M), rounds=4, seed=1)
+    _tree_equal(sd.params, sv.params)
+    _tree_equal(sd.solver, sv.solver)
+    assert hd["loss"] == hv["loss"]
+    assert hd["consensus_sq"] == hv["consensus_sq"]
+    assert hd["dual_norm"] == hv["dual_norm"]
+
+
+@pytest.mark.parametrize("algorithm", solver_names("dfl"))
+def test_full_cohort_bit_identical_masked(algorithm):
+    part = ParticipationSpec(mode="fraction", p=0.5, seed=7)
+    kw = dict(m=M, K=2, algorithm=algorithm, topology="exp", lr=0.05,
+              participation=part)
+    sd, hd = simulate(loss_fn, None, make_params(), DFLConfig(**kw),
+                      make_sampler(M), rounds=4, seed=1)
+    sv, hv = simulate(loss_fn, None, make_params(),
+                      DFLConfig(n_virtual=M, **kw),
+                      make_sampler(M), rounds=4, seed=1)
+    _tree_equal(sd.params, sv.params)
+    assert hd["loss"] == hv["loss"]
+    assert hd["participation"] == hv["participation"]
+
+
+def test_full_cohort_bit_identical_with_stateful_codec():
+    kw = dict(m=M, K=2, topology="ring", lr=0.05, codec="fp8")
+    sd, hd = simulate(loss_fn, None, make_params(), DFLConfig(**kw),
+                      make_sampler(M), rounds=4, seed=1)
+    sv, hv = simulate(loss_fn, None, make_params(),
+                      DFLConfig(n_virtual=M, **kw),
+                      make_sampler(M), rounds=4, seed=1)
+    _tree_equal(sd.params, sv.params)
+    _tree_equal(sd.comm, sv.comm)
+    assert hd["loss"] == hv["loss"]
+
+
+# ---------------------------------------------------------------------------
+# ClientStore gather/scatter
+# ---------------------------------------------------------------------------
+
+def test_gather_scatter_roundtrip_identity():
+    cfg = DFLConfig(m=4, n_virtual=20, topology="ring")
+    store = ClientStore(make_params(), cfg, seed=0)
+    ids = np.array([3, 7, 11, 19])
+    st = store.gather(ids)
+    assert st.params["w"].shape == (4, 3, 2)
+    # scatter the untouched gather back: a later gather must reproduce it
+    store.scatter(ids, st)
+    assert store.touched == 4
+    st2 = store.gather(ids)
+    _tree_equal((st.params, st.solver, st.comm),
+                (st2.params, st2.solver, st2.comm))
+    np.testing.assert_array_equal(np.asarray(st.rng), np.asarray(st2.rng))
+    # untouched clients still serve the template row
+    st3 = store.gather(np.array([0, 1, 2, 3]))
+    np.testing.assert_array_equal(np.asarray(st3.params["w"][0]),
+                                  np.zeros((3, 2), np.float32))
+
+
+def test_store_scatter_keep_mask_skips_rows():
+    cfg = DFLConfig(m=4, n_virtual=10, topology="ring")
+    store = ClientStore(make_params(), cfg, seed=0)
+    ids = np.array([0, 1, 2, 3])
+    st = store.gather(ids)
+    st = dataclasses.replace(
+        st, params=jax.tree.map(lambda x: x + 1.0, st.params))
+    store.scatter(ids, st, keep=np.array([True, False, True, False]))
+    assert store.touched == 2
+    back = store.gather(ids)
+    got = np.asarray(back.params["b"])
+    np.testing.assert_array_equal(got[0], np.ones(2, np.float32))
+    np.testing.assert_array_equal(got[1], np.zeros(2, np.float32))
+
+
+def test_store_rng_matches_dense_init():
+    from repro.core.dfl import init_state
+    cfg = DFLConfig(m=5, n_virtual=5, topology="ring")
+    store = ClientStore(make_params(), cfg, seed=3)
+    dense = init_state(make_params(), cfg, seed=3)
+    st = store.gather(np.arange(5))
+    np.testing.assert_array_equal(np.asarray(st.rng), np.asarray(dense.rng))
+
+
+def test_store_rejects_missing_population():
+    with pytest.raises(ValueError):
+        ClientStore(make_params(), DFLConfig(m=4, topology="ring"), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling
+# ---------------------------------------------------------------------------
+
+def test_cohort_ids_deterministic_and_sorted():
+    a = cohort_ids(1000, 32, seed=5, t=17)
+    b = cohort_ids(1000, 32, seed=5, t=17)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) > 0).all() and len(np.unique(a)) == 32
+    assert a.min() >= 0 and a.max() < 1000
+    # different round / different seed -> different draws
+    assert not np.array_equal(a, cohort_ids(1000, 32, seed=5, t=18))
+    assert not np.array_equal(a, cohort_ids(1000, 32, seed=6, t=17))
+    # full cohort is the identity permutation (the bit-identity path)
+    np.testing.assert_array_equal(cohort_ids(8, 8, seed=0, t=3), np.arange(8))
+    with pytest.raises(ValueError):
+        cohort_ids(10, 11, seed=0, t=0)
+
+
+def test_virtual_run_deterministic_across_processes():
+    """Same seed -> identical history; different seed -> different cohorts."""
+    kw = dict(m=4, K=2, topology="ring", lr=0.05, n_virtual=30)
+    _, h1 = simulate(loss_fn, None, make_params(), DFLConfig(**kw),
+                     cohort_sampler(), rounds=5, seed=9)
+    _, h2 = simulate(loss_fn, None, make_params(), DFLConfig(**kw),
+                     cohort_sampler(), rounds=5, seed=9)
+    assert h1["loss"] == h2["loss"]
+    assert h1["store_touched"] == h2["store_touched"]
+    _, h3 = simulate(loss_fn, None, make_params(), DFLConfig(**kw),
+                     cohort_sampler(), rounds=5, seed=10)
+    assert h1["loss"] != h3["loss"]
+
+
+def test_virtual_device_state_bounded_by_cohort():
+    """The jitted round only ever sees (m, ...) arrays regardless of
+    n_virtual; the population lives host-side in the store."""
+    cfg = DFLConfig(m=4, K=1, topology="ring", lr=0.05, n_virtual=500)
+    state, hist = simulate_virtual(loss_fn, None, make_params(), cfg,
+                                   cohort_sampler(), rounds=6, seed=0)
+    assert state.params["w"].shape[0] == cfg.m
+    assert hist["store_touched"][-1] <= 6 * cfg.m
+    assert hist["store_touched"] == sorted(hist["store_touched"])
+
+
+def test_virtual_async_ticks():
+    cfg = DFLConfig(m=4, K=2, topology="ring", lr=0.05, n_virtual=20,
+                    execution="async", tick_s=0.5, network="lognormal")
+    state, hist = simulate(loss_fn, None, make_params(), cfg,
+                           cohort_sampler(), rounds=5, seed=3)
+    assert "ticked" in hist and len(hist["ticked"]) == 5
+    assert all(0.0 <= f <= 1.0 for f in hist["ticked"])
+    assert state.params["w"].shape[0] == cfg.m
+    # wire bytes only count clients that actually ran
+    assert all(b >= 0 for b in hist["wire_bytes"])
+
+
+def test_virtual_requires_population_at_least_cohort():
+    with pytest.raises(ValueError):
+        DFLConfig(m=8, n_virtual=4, topology="ring")

@@ -85,15 +85,16 @@ def test_directed_topology_requires_pushsum():
 # Config surface
 # ---------------------------------------------------------------------------
 
-def test_config_transport_resolution_and_alias():
+def test_config_transport_resolution():
     assert DFLConfig().transport == "dense"
-    assert DFLConfig(mixing="ppermute").transport == "ppermute"
-    assert DFLConfig(transport="pushsum", topology="dring").mixing == "pushsum"
+    assert DFLConfig(transport="ppermute").transport == "ppermute"
     for bad in (dict(transport="smoke-signals"), dict(codec="gzip"),
-                dict(codec_bits=1), dict(codec_bits=9), dict(codec_k=0),
-                dict(transport="dense", mixing="ppermute")):
+                dict(codec_bits=1), dict(codec_bits=9), dict(codec_k=0)):
         with pytest.raises(ValueError):
             DFLConfig(**bad)
+    # the pre-redesign ``mixing`` alias is gone, not silently ignored
+    with pytest.raises(TypeError):
+        DFLConfig(mixing="dense")
 
 
 # ---------------------------------------------------------------------------
@@ -407,7 +408,8 @@ def test_dense_identity_bit_identical_to_seed_path():
                         DFLConfig(**base, transport="dense",
                                   codec="identity"), sampler, rounds=5)
     s_c, h_c = simulate(loss, None, params,
-                        DFLConfig(**base, mixing="dense"), sampler, rounds=5)
+                        DFLConfig(**base, transport="dense"), sampler,
+                        rounds=5)
     for s in (s_b, s_c):
         np.testing.assert_array_equal(np.asarray(s_a.params["w"]),
                                       np.asarray(s.params["w"]))
@@ -456,7 +458,7 @@ def test_simulate_rejects_time_varying_ppermute():
     m, K = 4, 2
     params, _, loss, sampler = _lin_setup(m, K)
     cfg = DFLConfig(algorithm="dfedavg", m=m, K=K, topology="random",
-                    mixing="ppermute")
+                    transport="ppermute")
     with pytest.raises(ValueError, match="static neighbour pattern"):
         simulate(loss, None, params, cfg, sampler, rounds=3)
 
@@ -600,3 +602,189 @@ def test_masked_ppermute_equals_masked_dense_subprocess():
                        env=env, capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "MASKED_PPERMUTE_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# fp8 e4m3 codec
+# ---------------------------------------------------------------------------
+
+def test_fp8_wire_matches_ml_dtypes_oracle():
+    """The on-wire payload must be bit-identical to a pure-numpy
+    ml_dtypes reference: scale = absmax/448 per client, clip to the e4m3
+    range, round-to-nearest-even cast."""
+    import ml_dtypes
+    z = _tree(seed=11)
+    codec = comm.Fp8Codec()
+    wire, resid = codec.encode(z, codec.init_state(z), None)
+    for k in z:
+        e = np.asarray(z[k], np.float32)
+        m = e.shape[0]
+        absmax = np.abs(e).reshape(m, -1).max(axis=1)
+        scale = np.maximum(absmax, 1e-12) / np.float32(448.0)
+        sb = scale.reshape((m,) + (1,) * (e.ndim - 1))
+        qref = np.clip(e / sb, -448.0, 448.0).astype(ml_dtypes.float8_e4m3fn)
+        got = np.asarray(wire[k]["q"])
+        assert got.dtype == ml_dtypes.float8_e4m3fn
+        np.testing.assert_array_equal(got.view(np.uint8),
+                                      qref.view(np.uint8))
+        np.testing.assert_allclose(np.asarray(wire[k]["scale"]), scale,
+                                   rtol=1e-6)
+        # the residual is exactly the cast error (EF telescopes it away)
+        rref = e - qref.astype(np.float32) * sb
+        np.testing.assert_allclose(np.asarray(resid[k]), rref, atol=1e-7)
+
+
+def test_fp8_never_nan_on_extreme_values():
+    """XLA's float8 cast overflows to NaN, not saturation: the absmax
+    element sits exactly on the clip boundary and must survive."""
+    z = {"a": jnp.asarray([[1e30, -1e30, 3.0], [1e-20, 0.0, -1e-20]],
+                          jnp.float32)}
+    codec = comm.Fp8Codec()
+    wire, resid = codec.encode(z, codec.init_state(z), None)
+    q = np.asarray(wire["a"]["q"], np.float32)
+    assert np.isfinite(q).all()
+    assert np.isfinite(np.asarray(resid["a"])).all()
+    zh = codec.decode(wire)
+    assert np.isfinite(np.asarray(zh["a"])).all()
+    # the per-client absmax element decodes exactly (448 * scale)
+    np.testing.assert_allclose(np.asarray(zh["a"])[0, 0], 1e30, rtol=1e-6)
+
+
+def test_fp8_relative_error_bound():
+    """e4m3 has a 3-bit mantissa: every decoded value is within 2^-4 of
+    the original relative to the per-client scale ceiling."""
+    z = _tree(seed=12)
+    codec = comm.Fp8Codec()
+    wire, _ = codec.encode(z, codec.init_state(z), None)
+    zh = codec.decode(wire)
+    for k in z:
+        x = np.asarray(z[k], np.float32)
+        err = np.abs(np.asarray(zh[k]) - x)
+        # RNE on e4m3: |err| <= max(|x| * 2^-4, smallest step * scale)
+        scale = np.asarray(wire[k]["scale"]).reshape(
+            (-1,) + (1,) * (x.ndim - 1))
+        bound = np.maximum(np.abs(x) * 2.0 ** -4, scale * 2.0 ** -9)
+        assert (err <= bound + 1e-9).all()
+        assert zh[k].dtype == z[k].dtype
+
+
+def test_fp8_bytes_per_client():
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((7,))}
+    assert comm.Fp8Codec().bytes_per_client(params) == (100 + 4) + (7 + 4)
+    assert "fp8" in comm.CODECS
+
+
+def test_fp8_error_feedback_reduces_bias_over_rounds():
+    """With EF the mean decoded message over rounds converges to the mean
+    input (the deterministic RNE bias telescopes)."""
+    z = _tree(seed=13, shapes=((64,),))
+    codec = comm.Fp8Codec()
+    resid = codec.init_state(z)
+    acc = np.zeros_like(np.asarray(z["l0"]))
+    rounds = 64
+    for _ in range(rounds):
+        wire, resid = codec.encode(z, resid, None)
+        acc += np.asarray(codec.decode(wire)["l0"])
+    bias = np.abs(acc / rounds - np.asarray(z["l0"])).max()
+    one_shot = np.abs(
+        np.asarray(codec.decode(codec.encode(z, codec.init_state(z),
+                                             None)[0])["l0"])
+        - np.asarray(z["l0"])).max()
+    assert bias < one_shot / 4
+
+
+def test_fp8_simulate_end_to_end():
+    cfg = DFLConfig(m=4, K=2, topology="ring", lr=0.05, codec="fp8")
+    params = {"w": jnp.zeros((3, 1)), "b": jnp.zeros((1,))}
+
+    def loss_fn(p, batch, rng):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    def sample(t):
+        rng = np.random.default_rng((5, t))
+        x = rng.standard_normal((4, 2, 4, 3)).astype(np.float32)
+        y = (x.sum(-1, keepdims=True) * 0.5).astype(np.float32)
+        return (jnp.asarray(x), jnp.asarray(y))
+
+    state, hist = simulate(loss_fn, None, params, cfg, sample, rounds=10,
+                           seed=0)
+    assert np.isfinite(hist["loss"]).all()
+    assert hist["loss"][-1] < hist["loss"][0]
+    assert "residual" in state.comm
+
+
+# ---------------------------------------------------------------------------
+# hier transport
+# ---------------------------------------------------------------------------
+
+def test_hier_tier_matrices_are_definition1():
+    from repro.core import gossip
+    w_intra, w_inter = gossip.hier_tier_matrices(12, 3)
+    for w in (w_intra, w_inter):
+        gossip.validate_gossip_matrix(w)          # raises if not Def-1
+    # intra never crosses clusters; inter only couples heads
+    labels = gossip.cluster_labels(12, 3)
+    heads = gossip.cluster_heads(labels)
+    off = np.flatnonzero(w_intra - np.diag(np.diag(w_intra)))
+    for idx in off:
+        i, j = divmod(idx, 12)
+        assert labels[i] == labels[j]
+    off = np.argwhere(w_inter - np.diag(np.diag(w_inter)))
+    assert set(np.unique(off)) <= set(heads.tolist())
+
+
+def test_hier_mix_is_two_sequential_dense_steps():
+    cfg = DFLConfig(m=8, topology="ring", transport="hier", clusters=2)
+    transport = comm.make_transport(cfg)
+    z = _tree(seed=21, m=8)
+    plan = transport.prepare(None)
+    out, _ = transport.mix(z, plan)
+    from repro.core import mixing
+    ref = mixing.mix_dense(np.asarray(plan["inter"]),
+                           mixing.mix_dense(np.asarray(plan["intra"]), z))
+    for k in z:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+    # mean preservation through both tiers
+    np.testing.assert_allclose(
+        np.mean(np.asarray(out["l0"]), 0),
+        np.mean(np.asarray(z["l0"]), 0), atol=1e-5)
+
+
+def test_hier_masked_participation_and_tier_pricing():
+    from repro.core.network import make_network
+    cfg = DFLConfig(m=8, topology="ring", transport="hier", clusters=2,
+                    participation=ParticipationSpec(mode="fraction", p=0.5))
+    transport = comm.make_transport(cfg)
+    active = np.array([1, 1, 0, 1, 0, 1, 1, 0], bool)
+    plan = transport.prepare(None, active)
+    for tier in ("intra", "inter"):
+        w = np.asarray(plan[tier])
+        # inactive rows are identity (their state passes through)
+        for i in np.flatnonzero(~active):
+            row = np.zeros(8)
+            row[i] = 1.0
+            np.testing.assert_allclose(w[i], row, atol=1e-7)
+    tiers = transport.sim_tiers(None, active)
+    assert len(tiers) == 2
+    net = make_network("hub-and-spoke", 8, seed=0, hubs=2)
+    t_hier = net.tiered_round_time(tiers, 1000, 0, 1, active=active)
+    assert np.isfinite(t_hier) and t_hier > 0
+
+
+def test_hier_beats_flat_dense_on_cluster_network():
+    """The acceptance property: under the cluster-aware hub-and-spoke
+    model, two-tier gossip (fast intra links + head backbone) is modeled
+    faster than flat dense gossip over the same graph distances."""
+    from repro.core.network import make_network
+    m, clusters, nbytes = 16, 4, 10_000
+    net = make_network("hub-and-spoke", m, seed=0, hubs=clusters)
+    cfg = DFLConfig(m=m, topology="full", transport="hier",
+                    clusters=clusters)
+    tiers = comm.make_transport(cfg).sim_tiers(None)
+    t_hier = net.tiered_round_time(tiers, nbytes, 0, 1)
+    from repro.core import gossip
+    w_full = gossip.make_gossip("full", m).matrix
+    t_dense = net.round_time(w_full, nbytes, 0, 1)
+    assert t_hier < t_dense

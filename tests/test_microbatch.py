@@ -11,7 +11,7 @@ from repro.core.dfl import init_state
 
 def _setup(microbatches, m=4, K=2, b=8, dim=6):
     cfg = DFLConfig(algorithm="dfedadmm", m=m, K=K, topology="ring",
-                    mixing="dense", microbatches=microbatches)
+                    transport="dense", microbatches=microbatches)
     spec = make_gossip("ring", m)
 
     def loss_fn(p, batch, rng):

@@ -113,3 +113,56 @@ def test_ppermute_equals_dense_subprocess():
                        capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "PPERMUTE_OK" in r.stdout
+
+
+_PUSHSUM_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.core import comm, gossip, mixing
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+spec = gossip.make_gossip("dring", 8)
+ps = gossip.GossipSpec(topology=spec.topology,
+                       matrix=gossip.as_column_stochastic(spec.matrix),
+                       psi=spec.psi)
+z = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(8, 4, 6)),
+                      jnp.float32),
+     "b": jnp.asarray(np.random.default_rng(1).normal(size=(8, 3)),
+                      jnp.float32)}
+pi = jnp.full((8,), 1.0 / 8, jnp.float32)
+
+# meshless reference: the dense column-stochastic push-sum step
+dense = comm.PushSumTransport()
+ref, ref_pi = dense.mix(z, jnp.asarray(ps.matrix), aux=pi)
+
+out, out_pi = mixing.mix_pushsum_ppermute(z, pi, ps, mesh, "data")
+np.testing.assert_allclose(np.asarray(out_pi), np.asarray(ref_pi),
+                           rtol=1e-6, atol=1e-7)
+for k in z:
+    np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                               rtol=1e-5, atol=1e-6)
+
+# weighted sum conservation (the push-sum invariant) over several rounds
+zz, pp = z, pi
+for _ in range(5):
+    zz, pp = mixing.mix_pushsum_ppermute(zz, pp, ps, mesh, "data")
+w0 = np.sum(np.asarray(pi)[:, None, None] * np.asarray(z["a"]), 0)
+wt = np.sum(np.asarray(pp)[:, None, None] * np.asarray(zz["a"]), 0)
+np.testing.assert_allclose(wt, w0, rtol=1e-4, atol=1e-5)
+print("PUSHSUM_PPERMUTE_OK")
+"""
+
+
+@pytest.mark.skipif(not _HAS_AXIS_TYPE,
+                    reason="jax.sharding.AxisType unavailable in this jax")
+def test_pushsum_ppermute_equals_dense_subprocess():
+    """On-mesh push-sum (directed permutes + the extra pi permute chain)
+    == the dense column-stochastic push-sum step on 8 fake devices."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _PUSHSUM_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "PUSHSUM_PPERMUTE_OK" in r.stdout

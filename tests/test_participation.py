@@ -241,7 +241,7 @@ def test_ppermute_participation_now_supported():
     """The ppermute transport accepts partial participation since the
     comm-layer redesign: `Transport.prepare` gates the permute sends
     instead of materializing the non-circulant masked matrix."""
-    cfg = DFLConfig(mixing="ppermute", topology="ring",
+    cfg = DFLConfig(transport="ppermute", topology="ring",
                     participation=ParticipationSpec(mode="uniform", p=0.5))
     assert cfg.transport == "ppermute"
 

@@ -246,15 +246,15 @@ def test_init_state_allocates_only_what_the_solver_uses():
     assert st.solver["lam_scale"].shape == (M,)
 
 
-def test_deprecated_dual_momentum_properties():
+def test_deprecated_dual_momentum_properties_removed():
+    """The deprecation window is closed: solver state is reachable only
+    through ``state.solver[...]`` — the old properties raise."""
     params, _, _ = _setup()
     st = init_state(params, DFLConfig(algorithm="dfedadmm", m=M, K=K))
-    with pytest.warns(DeprecationWarning):
-        d = st.dual
-    assert d is st.solver["dual"]
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(AttributeError):
-            st.momentum                        # ADMM carries no momentum
+    with pytest.raises(AttributeError):
+        st.dual
+    with pytest.raises(AttributeError):
+        st.momentum
 
 
 # ---------------------------------------------------------------------------
