@@ -148,7 +148,13 @@ def update_participation(text):
             "codec's modeled uplink bytes per round (active clients × "
             "message size) — regenerate via ``PYTHONPATH=src python -m "
             "benchmarks.run --suite participation --suite comm`` and "
-            "``experiments/update_tables.py``.\n\n" + table)
+            "``experiments/update_tables.py``.  The ``*/p0.1`` rows are "
+            "the sparse-participation stress point (10% of clients per "
+            "round): the variance-reduction solvers (``scaffold``, "
+            "``dfedtrack``) hold accuracy where plain gossip SGD "
+            "(``dpsgd``) collapses, at the cost of a second "
+            "full-precision gossip message per round (doubled "
+            "bytes/round).\n\n" + table)
     text = _replace_section(text, "<!-- PARTICIPATION_COMM -->",
                             r"\n<!-- |\n## |\Z", body)
     print("participation x compression table updated")

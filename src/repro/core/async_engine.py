@@ -204,16 +204,22 @@ class AsyncScheduler:
 def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                     cfg: DFLConfig, spec: GossipSpec | None = None,
                     metrics: str = "full"):
-    """Build ``tick_fn(state, zbuf, batches, plan, active, steps,
-    lr_rounds) -> (state, zbuf, metrics)`` — one async tick as ONE jitted
-    computation.
+    """Build ``tick_fn(state, zbuf, tbuf, batches, plan, active, steps,
+    lr_rounds) -> (state, zbuf, tbuf, metrics)`` — one async tick as ONE
+    jitted computation.
 
     ``zbuf`` is the (m, ...)-per-leaf publication buffer: slot i holds
-    client i's most recent published (codec-decoded) message.  The tick
-    runs the shared masked local phase (``dfl.make_local_phase``) with a
-    per-client lr vector (each client decays by its OWN completed round
-    count, ``lr_rounds``), publishes the active clients' messages into
-    ``zbuf``, mixes the buffer under ``plan`` (from
+    client i's most recent published (codec-decoded) message.  ``tbuf``
+    is the analogous publication buffer for a tracking solver's variate
+    messages (None for the non-tracking zoo): a ticking client publishes
+    its outgoing track message into its slot, the buffer mixes under the
+    SAME plan as ``zbuf``, and only the ticking clients consume the
+    mixed variate into ``state.comm["track"]`` — at full ticks this
+    degenerates to the sync round's track contraction bit for bit.  The
+    tick runs the shared masked local phase (``dfl.make_local_phase``)
+    with a per-client lr vector (each client decays by its OWN completed
+    round count, ``lr_rounds``), publishes the active clients' messages
+    into ``zbuf``, mixes the buffer under ``plan`` (from
     :func:`effective_matrix` / ``Transport.prepare``), and keeps the
     mixed result only for the active clients — everyone else's params,
     solver state, codec residual, and push-sum weight pass through
@@ -236,15 +242,22 @@ def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
             attack = threat_lib.make_attack(cfg.threat)
             adv_mask = jnp.asarray(adv_np)
 
-    def tick_fn(state: DFLState, zbuf: PyTree, batches: PyTree, plan,
-                active: jax.Array, steps: jax.Array,
+    def tick_fn(state: DFLState, zbuf: PyTree, tbuf: PyTree, batches: PyTree,
+                plan, active: jax.Array, steps: jax.Array,
                 lr_rounds: jax.Array):
         lr_t = cfg.lr * (cfg.lr_decay ** lr_rounds.astype(jnp.float32))
         rngs = jax.vmap(
             lambda k: jax.random.fold_in(k, state.round))(state.rng)
+        sstate = state.solver
+        if solver.tracks:
+            sstate = dict(state.solver, track=state.comm["track"])
         params_K, new_solver, z, losses = local_phase(
-            state.params, state.solver, batches, rngs, lr_t,
+            state.params, sstate, batches, rngs, lr_t,
             active, steps)
+        track_msg = None
+        if solver.tracks:
+            new_solver = dict(new_solver)
+            track_msg = new_solver.pop("track")
 
         if adv_mask is not None:
             # perturb the outgoing message of the adversaries that
@@ -278,6 +291,7 @@ def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
         # hold it in place — gate explicitly
         new_params = _gate_tree(active, mixed, params_K)
 
+        new_tbuf = tbuf
         new_comm = state.comm
         if state.comm is not None:
             new_comm = dict(state.comm)
@@ -285,6 +299,18 @@ def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                 new_comm["ps_weight"] = new_ps
             if "residual" in new_comm:
                 new_comm["residual"] = new_resid
+            if track_msg is not None:
+                # publish the ticking clients' variate messages, mix the
+                # buffer under the same plan as zbuf, and let only the
+                # ticking clients consume the mixed variate (a busy
+                # client's buffered slot is its LAST publication, so the
+                # explicit gate mirrors the params handling above); at
+                # full ticks this is the sync track contraction bitwise
+                new_tbuf = _gate_tree(active, track_msg, tbuf)
+                mixed_t, _ = transport.mix(new_tbuf, plan,
+                                           aux.get("ps_weight"))
+                new_comm["track"] = _gate_tree(active, mixed_t,
+                                               state.comm["track"])
 
         af = active.astype(jnp.float32)
         # mean over this tick's active clients, written exactly like the
@@ -307,7 +333,7 @@ def make_tick_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
         new_state = DFLState(params=new_params, solver=new_solver,
                              rng=state.rng, round=state.round + 1,
                              comm=new_comm)
-        return new_state, new_zbuf, out_metrics
+        return new_state, new_zbuf, new_tbuf, out_metrics
 
     return tick_fn
 
@@ -322,6 +348,17 @@ def _tick_plan(transport: comm_lib.Transport, spec: GossipSpec,
     if transport.kind == "pushsum":
         return transport.prepare(spec,
                                  None if active.all() else active)
+    if transport.kind == "hier":
+        # two-tier plan: the staleness gating applies per tier.  A
+        # non-receiving client is an identity row in BOTH tiers, so the
+        # sequential product holds its state exactly; stale neighbours
+        # are renormalized away at each tier independently.
+        return {"intra": jnp.asarray(
+                    effective_matrix(transport.w_intra, active, fresh),
+                    jnp.float32),
+                "inter": jnp.asarray(
+                    effective_matrix(transport.w_inter, active, fresh),
+                    jnp.float32)}
     w = effective_matrix(spec.matrix, active, fresh)
     return jnp.asarray(w, jnp.float32)
 
@@ -362,12 +399,20 @@ def simulate_async(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     transport = comm_lib.make_transport(cfg, spec=spec0)
     codec = comm_lib.make_codec(cfg)
     bytes_per_client = codec.bytes_per_client(params_single)
+    if solvers_lib.make_solver(cfg).tracks:
+        # the tracking solver's second (uncompressed) gossip message —
+        # priced identically to the sync path so the sim_time pin holds
+        bytes_per_client += comm_lib.IdentityCodec().bytes_per_client(
+            params_single)
     scheduler = AsyncScheduler(cfg, net, specs, bytes_per_client)
     tick_fn = jax.jit(make_tick_round(loss_fn, cfg, spec=spec0))
     state = init_state(params_single, cfg, seed=seed)
     # common init (paper: x^0 everywhere) doubles as everyone's first
     # publication, so round-0 receivers mix against the true x^0
     zbuf = state.params
+    # ... and the zero-initialized tracking buffer doubles as everyone's
+    # first variate publication (None for the non-tracking zoo)
+    tbuf = None if state.comm is None else state.comm.get("track")
 
     history: dict[str, list] = {"round": [], "loss": [], "lr": [],
                                 "consensus_sq": [], "dual_norm": [],
@@ -384,8 +429,8 @@ def simulate_async(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
             plan = _tick_plan(transport, specs[t], ev.active, ev.fresh)
             batches = sample_batches(t)
             t0 = time.perf_counter()
-            state, zbuf, metrics = tick_fn(
-                state, zbuf, batches, plan, jnp.asarray(ev.active),
+            state, zbuf, tbuf, metrics = tick_fn(
+                state, zbuf, tbuf, batches, plan, jnp.asarray(ev.active),
                 jnp.asarray(ev.steps),
                 jnp.asarray(ev.lr_rounds, jnp.int32))
             jax.block_until_ready((state.params, metrics))

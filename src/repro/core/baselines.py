@@ -101,7 +101,7 @@ def make_cfl_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
 
         (xk, st_K, _), losses = jax.lax.scan(
             body, (x0, sstate_i, rng), batches_k)
-        new_st, msg = solver.finalize(xk, st_K, x0)
+        new_st, msg = solver.finalize(xk, st_K, x0, lr_t)
         return msg, new_st, jnp.mean(losses)
 
     def round_fn(state: CFLState, cohort_ids: jax.Array, batches: PyTree):

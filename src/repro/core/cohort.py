@@ -193,6 +193,11 @@ def simulate_virtual(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     transport = comm_lib.make_transport(cfg, spec=spec0)
     codec = comm_lib.make_codec(cfg)
     bytes_per_client = codec.bytes_per_client(params_single)
+    if solvers_lib.make_solver(cfg).tracks:
+        # a tracking solver's second (uncompressed) gossip message —
+        # same accounting as the dense path
+        bytes_per_client += comm_lib.IdentityCodec().bytes_per_client(
+            params_single)
 
     net = cfg.make_network_model(seed=seed)
     transfer = None if net is None or \
@@ -293,6 +298,9 @@ def _simulate_virtual_async(loss_fn, eval_fn, params_single: PyTree,
     transport = comm_lib.make_transport(tick_cfg, spec=spec0)
     codec = comm_lib.make_codec(cfg)
     bytes_per_client = codec.bytes_per_client(params_single)
+    if solvers_lib.make_solver(cfg).tracks:
+        bytes_per_client += comm_lib.IdentityCodec().bytes_per_client(
+            params_single)
     net = cfg.make_network_model(seed=seed)
     sched = VirtualScheduler(cfg, net, cfg.n_virtual, bytes_per_client)
 

@@ -816,15 +816,25 @@ def make_codec(cfg) -> MessageCodec:
 
 def init_comm_state(cfg, stacked_params: PyTree):
     """Per-client communication state threaded through ``DFLState.comm``:
-    push-sum weights and/or error-feedback residuals, or None when both
-    transport and codec are stateless (the seed layout, bit-compatible).
+    push-sum weights, error-feedback residuals, and/or the tracking
+    buffer of a variance-reduction solver, or None when every layer is
+    stateless (the seed layout, bit-compatible).
 
-    State shapes are owned by the codec (``init_state``) and transport
-    (``init_aux``); this only decides which slots exist."""
+    State shapes are owned by the codec (``init_state``), transport
+    (``init_aux``), and solver (``init_track``); this only decides which
+    slots exist."""
     comm = {}
     if cfg.transport == "pushsum":
         comm["ps_weight"] = PushSumTransport().init_aux(cfg.m)
     codec = make_codec(cfg)
     if codec.stateful:
         comm["residual"] = codec.init_state(stacked_params)
+    # solvers with a gossip-carried tracking variable (SCAFFOLD control
+    # variates / gradient tracking) own a second message slot, mixed by
+    # the round loop through the same transport as z (import deferred:
+    # solvers.py does not import this module, so no cycle)
+    from repro.core import solvers as solvers_lib
+    solver = solvers_lib.make_solver(cfg)
+    if solver.tracks:
+        comm["track"] = solver.init_track(cfg, stacked_params)
     return comm or None

@@ -106,6 +106,16 @@ class DFLConfig:
                                  # heuristic ~sqrt(m)); also makes the
                                  # hub-and-spoke network preset cluster-
                                  # aware (one fast hub per cluster)
+    adapt_mu: float = 10.0       # dfedadmm_adaptive: residual-imbalance
+                                 # factor that triggers a penalty
+                                 # rebalance (defaults mirror
+                                 # solvers.AdaptiveADMMSolver.MU/TAU/
+                                 # BOUND, so the default config is the
+                                 # pre-sweep demo bit for bit)
+    adapt_tau: float = 2.0       # dfedadmm_adaptive: multiplicative
+                                 # lam_scale update per rebalance
+    adapt_bound: float = 8.0     # dfedadmm_adaptive: lam_scale clipped
+                                 # to [1/bound, bound]
 
     def __post_init__(self):
         if self.algorithm not in solvers_lib.solver_names("dfl"):
@@ -208,6 +218,13 @@ class DFLConfig:
             raise ValueError(
                 f"clusters={self.clusters} exceeds m={self.m}: every "
                 "cluster needs at least one cohort slot")
+        if self.adapt_mu <= 0.0 or self.adapt_tau <= 1.0 \
+                or self.adapt_bound < 1.0:
+            raise ValueError(
+                "adaptive-penalty sweep needs adapt_mu > 0, "
+                "adapt_tau > 1, adapt_bound >= 1; got "
+                f"adapt_mu={self.adapt_mu}, adapt_tau={self.adapt_tau}, "
+                f"adapt_bound={self.adapt_bound}")
 
     def make_solver(self) -> "solvers_lib.LocalSolver":
         """The LocalSolver this config resolves to (algorithm facts like
@@ -237,8 +254,10 @@ class DFLState:
     rng: jax.Array               # (m, 2) per-client PRNG keys
     round: jax.Array             # scalar int32
     comm: PyTree = None          # communication state (comm.init_comm_state):
-                                 # push-sum weights / codec residuals; None
-                                 # for the stateless seed configuration
+                                 # push-sum weights / codec residuals /
+                                 # the tracking buffer of a variance-
+                                 # reduction solver ("track"); None for
+                                 # the stateless seed configuration
 
 
 def init_state(params_single: PyTree, cfg: DFLConfig, seed: int = 0) -> DFLState:
@@ -367,7 +386,7 @@ def make_local_phase(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
         xs = (bk, jnp.arange(steps)) if masked else bk
         (params_K, st_K, _), losses = jax.lax.scan(
             body, (anchor, sstate, rng), xs)
-        new_sstate, z = solver.finalize(params_K, st_K, anchor)
+        new_sstate, z = solver.finalize(params_K, st_K, anchor, lr_t)
         if masked:
             # an inactive client (n_steps == 0) froze every per-step
             # quantity, but finalize may still move round-level state
@@ -467,6 +486,12 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                  steps: jax.Array | None = None):
         lr_t = cfg.lr * (cfg.lr_decay ** state.round.astype(jnp.float32))
         rngs = jax.vmap(lambda k: jax.random.fold_in(k, state.round))(state.rng)
+        sstate = state.solver
+        if solver.tracks:
+            # merge the gossip-carried tracking buffer into the solver
+            # state under the reserved "track" key; finalize leaves the
+            # outgoing track message in the same slot
+            sstate = dict(state.solver, track=state.comm["track"])
         if masked:
             if active is None or steps is None:
                 raise ValueError(
@@ -474,11 +499,15 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                     "per-round (active, steps) arrays from "
                     "participation.round_participation")
             params_K, new_solver, z, losses = local_phase(
-                state.params, state.solver, batches, rngs, lr_t,
+                state.params, sstate, batches, rngs, lr_t,
                 active, steps)
         else:
             params_K, new_solver, z, losses = local_phase(
-                state.params, state.solver, batches, rngs, lr_t)
+                state.params, sstate, batches, rngs, lr_t)
+        track_msg = None
+        if solver.tracks:
+            new_solver = dict(new_solver)
+            track_msg = new_solver.pop("track")
 
         if adv_mask is not None:
             # adversaries corrupt their OUTGOING message before the codec
@@ -535,6 +564,15 @@ def make_train_round(loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
                 new_comm["ps_weight"] = new_ps
             if "residual" in new_comm:
                 new_comm["residual"] = new_resid
+            if track_msg is not None:
+                # the tracking variable rides the SAME contraction as z
+                # (same plan, so a masked round's identity rows hold an
+                # inactive client's buffered variate in place); the
+                # push-sum weight update is owned by z's mix above —
+                # discard the duplicate
+                mixed_track, _ = transport.mix(track_msg, plan,
+                                               aux.get("ps_weight"))
+                new_comm["track"] = mixed_track
 
         if masked:
             af = active.astype(jnp.float32)
@@ -636,6 +674,12 @@ def simulate(loss_fn, eval_fn, params_single: PyTree, cfg: DFLConfig,
     transport = comm_lib.make_transport(cfg, spec=spec0)
     codec = comm_lib.make_codec(cfg)
     bytes_per_client = codec.bytes_per_client(params_single)
+    if solvers_lib.make_solver(cfg).tracks:
+        # a tracking solver gossips a second, uncompressed param-sized
+        # message per round; the wire accounting and the network cost
+        # model both price it
+        bytes_per_client += comm_lib.IdentityCodec().bytes_per_client(
+            params_single)
 
     net = cfg.make_network_model(seed=seed)
     # only the deadline mode consumes per-round transfer times; other

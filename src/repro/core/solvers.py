@@ -12,7 +12,7 @@ round loop that works for every entry.
 
     sstate          = solver.init_state(cfg, stacked_params)   # (m, ...) or None
     params', st'    = solver.step(params, grad, st, anchor, lr)  # per inner iter
-    st'', z         = solver.finalize(params_K, st', anchor)     # message to wire
+    st'', z         = solver.finalize(params_K, st', anchor, lr) # message to wire
 
 * ``init_state`` allocates the solver-owned per-client state with a
   leading client axis (``DFLState.solver``).  Solvers that need nothing
@@ -29,6 +29,17 @@ round loop that works for every entry.
 SAM is orthogonal to the solver: it only changes the gradient oracle,
 so solvers expose ``sam_rho`` and the round loop builds
 ``sam.sam_value_and_grad`` once (``rho = 0`` is a plain gradient).
+
+Variance reduction is orthogonal to the transport: solvers with
+``tracks = True`` (SCAFFOLD's control variates, gradient tracking) own a
+second gossip-carried buffer allocated by :meth:`LocalSolver.init_track`
+and threaded through ``DFLState.comm["track"]``.  The round loop merges
+the buffer into the solver state under the reserved key ``"track"``
+before the local phase, pops the solver's outgoing track *message* from
+the same key after ``finalize``, and sends it through the SAME transport
+contraction as ``z`` (masked/participation-aware like the codec
+residual) — so a tracking solver composes with every transport,
+execution mode, and cohort layout without touching the round loop.
 
 ``SOLVERS`` maps algorithm names to ``(factory, scopes)``; ``scopes``
 says which simulators may run it (``"dfl"`` — the gossip round in
@@ -66,14 +77,26 @@ class LocalSolver:
     * ``sam_rho``  — SAM radius for the gradient oracle (0 = plain).
     * ``is_admm``  — carries an ADMM dual variable (drives the
       ``dual_norm`` metric and the FedPD-style server aggregation).
+    * ``tracks``   — owns a gossip-carried tracking buffer
+      (``DFLState.comm["track"]``, allocated by :meth:`init_track`);
+      inside :meth:`step`/:meth:`finalize` the buffer rides the solver
+      state under the reserved key ``"track"``, and the value
+      ``finalize`` leaves there is the client's outgoing track message.
     """
 
     name: str = ""
     sam_rho: float = 0.0
     is_admm: bool = False
+    tracks: bool = False
 
     def init_state(self, cfg, stacked_params: PyTree) -> PyTree | None:
         """Solver state with a leading (m,) client axis, or None."""
+        return None
+
+    def init_track(self, cfg, stacked_params: PyTree) -> PyTree | None:
+        """The gossip-carried tracking buffer (``tracks = True`` solvers
+        only): a (m, ...)-stacked param-shaped pytree, zero-initialized
+        so round 0 reduces to the uncorrected update."""
         return None
 
     def inner_steps(self, K: int) -> int:
@@ -86,8 +109,11 @@ class LocalSolver:
         raise NotImplementedError
 
     def finalize(self, params_K: PyTree, state: PyTree | None,
-                 anchor: PyTree) -> tuple[PyTree | None, PyTree]:
-        """End-of-round hook for ONE client -> (state', message_z)."""
+                 anchor: PyTree, lr) -> tuple[PyTree | None, PyTree]:
+        """End-of-round hook for ONE client -> (state', message_z).
+        ``lr`` is this round's (decayed) local learning rate — the
+        variance-reduction family divides by it to turn the K-step
+        displacement into a pseudo-gradient."""
         return state, params_K
 
     def dual_tree(self, state: PyTree | None) -> PyTree | None:
@@ -191,7 +217,7 @@ class ADMMSolver(LocalSolver):
                                      use_kernel=self.use_kernel)
         return new_params, state
 
-    def finalize(self, params_K, state, anchor):
+    def finalize(self, params_K, state, anchor, lr):
         lam = self._lam(state)
         new_dual = admm.dual_update(state["dual"], params_K, anchor, lam=lam)
         src = new_dual if self.message_dual == "new" else state["dual"]
@@ -224,6 +250,22 @@ class AdaptiveADMMSolver(ADMMSolver):
     TAU = 2.0       # multiplicative update per rebalance
     BOUND = 8.0     # lam_scale stays in [1/BOUND, BOUND]
 
+    def __init__(self, lam: float, rho: float = 0.0,
+                 use_kernel: bool = False, message_dual: str = "old",
+                 mu: float | None = None, tau: float | None = None,
+                 bound: float | None = None):
+        super().__init__(lam=lam, rho=rho, use_kernel=use_kernel,
+                         message_dual=message_dual)
+        # sweepable residual-balancing knobs; the class constants stay
+        # the documented defaults (and what the tests pin against)
+        self.mu = self.MU if mu is None else float(mu)
+        self.tau = self.TAU if tau is None else float(tau)
+        self.bound = self.BOUND if bound is None else float(bound)
+        if self.mu <= 0 or self.tau <= 1.0 or self.bound < 1.0:
+            raise ValueError(
+                f"adaptive penalty needs mu > 0, tau > 1, bound >= 1; "
+                f"got mu={self.mu}, tau={self.tau}, bound={self.bound}")
+
     def init_state(self, cfg, stacked_params):
         m = jax.tree.leaves(stacked_params)[0].shape[0]
         return {"dual": jax.tree.map(jnp.zeros_like, stacked_params),
@@ -232,22 +274,140 @@ class AdaptiveADMMSolver(ADMMSolver):
     def _lam(self, state):
         return self.lam * state["lam_scale"]
 
-    def finalize(self, params_K, state, anchor):
-        new_state, z = super().finalize(params_K, state, anchor)
+    def finalize(self, params_K, state, anchor, lr):
+        new_state, z = super().finalize(params_K, state, anchor, lr)
         lam = self._lam(state)
         drift = jax.tree.map(lambda xk, a: xk - a, params_K, anchor)
         r = sam.global_norm(drift)
         d = lam * sam.global_norm(new_state["dual"])
         scale = state["lam_scale"]
-        scale = jnp.where(r > self.MU * d, scale / self.TAU,
-                          jnp.where(d > self.MU * r, scale * self.TAU,
+        scale = jnp.where(r > self.mu * d, scale / self.tau,
+                          jnp.where(d > self.mu * r, scale * self.tau,
                                     scale))
-        scale = jnp.clip(scale, 1.0 / self.BOUND, self.BOUND)
+        scale = jnp.clip(scale, 1.0 / self.bound, self.bound)
         return dict(new_state, lam_scale=scale), z
 
     def state_specs(self, param_specs, client_axis):
         from jax.sharding import PartitionSpec as P
         return {"dual": param_specs, "lam_scale": P(client_axis)}
+
+
+class ScaffoldSolver(SGDSolver):
+    """SCAFFOLD-style control variates against client drift
+    (arXiv:1910.06378, decentralized via the gossip contraction).
+
+    Each client owns a control variate ``c_i`` (``state["cv"]``) and
+    consumes the gossip-averaged global variate ``c_hat_i``
+    (``DFLState.comm["track"]``, merged into the state as
+    ``state["track"]`` by the round loop).  Every inner step applies the
+    drift correction to the gradient::
+
+        y <- y - lr * (g + c_hat_i - c_i)
+
+    and ``finalize`` performs the SCAFFOLD option-II variate update from
+    the K-step displacement d = (anchor - y_K) / (K * lr)::
+
+        c_i+ = c_i - c_hat_i + d
+
+    The client's outgoing track message is its NEW variate ``c_i+``; the
+    transport mixes the messages exactly like ``z``, so each client's
+    next ``c_hat_i`` is its neighbourhood average of the variates — the
+    decentralized analogue of SCAFFOLD's server-held ``c``.  Under a
+    doubly stochastic plan at full participation the sums of ``c_i`` and
+    ``c_hat_i`` stay equal (zero at init), so the corrections sum to
+    zero across clients every round (pinned in tests/test_property.py);
+    with the variates at zero the update IS the plain SGD step.
+    """
+
+    tracks = True
+
+    def __init__(self, weight_decay: float = 0.0, K: int = 1,
+                 use_kernel: bool = False):
+        super().__init__(weight_decay=weight_decay, use_kernel=use_kernel)
+        self.K = K
+
+    def init_state(self, cfg, stacked_params):
+        return {"cv": jax.tree.map(jnp.zeros_like, stacked_params)}
+
+    def init_track(self, cfg, stacked_params):
+        return jax.tree.map(jnp.zeros_like, stacked_params)
+
+    def step(self, params, grads, state, anchor, lr):
+        g = self._decayed(grads, params)
+        corrected = jax.tree.map(
+            lambda gi, ch, c: gi + (ch.astype(gi.dtype) - c.astype(gi.dtype)),
+            g, state["track"], state["cv"])
+        return self._apply(params, corrected, lr), state
+
+    def finalize(self, params_K, state, anchor, lr):
+        inv = 1.0 / (jnp.float32(self.K) * lr)
+        d = jax.tree.map(
+            lambda a, y: ((a.astype(jnp.float32) - y.astype(jnp.float32))
+                          * inv).astype(a.dtype),
+            anchor, params_K)
+        new_cv = jax.tree.map(lambda c, ch, di: (c - ch + di).astype(c.dtype),
+                              state["cv"], state["track"], d)
+        # the outgoing track message (the "track" slot the round loop
+        # pops) is the fresh variate itself
+        return {"cv": new_cv, "track": new_cv}, params_K
+
+    def state_specs(self, param_specs, client_axis):
+        return {"cv": param_specs}
+
+
+class TrackingSolver(SGDSolver):
+    """Gradient-tracking consistency solver (FedSpeed / DFedTrack style,
+    cf. the consistency line of arXiv:2302.04083).
+
+    The tracking variable ``t_i`` (``DFLState.comm["track"]``) estimates
+    the population-average pseudo-gradient and is updated through the
+    SAME gossip contraction as ``z``.  With ``d_i`` the client's own
+    last pseudo-gradient (``state["d_prev"]``), every inner step replaces
+    the local gradient's bias with the tracked global direction::
+
+        y <- y - lr * (g - d_i + t_i)
+
+    ``finalize`` computes this round's pseudo-gradient
+    d_i+ = (anchor - y_K) / (K * lr) and emits the dynamic-average-
+    consensus message ``t_i + d_i+ - d_i``; after mixing, summing over
+    clients under any doubly stochastic plan gives the conservation law
+    sum_i t_i == sum_i d_i (both start at zero), i.e. the tracker's mean
+    always equals the mean of the latest pseudo-gradients (pinned in
+    tests/test_property.py).  Round 0 reduces to plain SGD.
+    """
+
+    tracks = True
+
+    def __init__(self, weight_decay: float = 0.0, K: int = 1,
+                 use_kernel: bool = False):
+        super().__init__(weight_decay=weight_decay, use_kernel=use_kernel)
+        self.K = K
+
+    def init_state(self, cfg, stacked_params):
+        return {"d_prev": jax.tree.map(jnp.zeros_like, stacked_params)}
+
+    def init_track(self, cfg, stacked_params):
+        return jax.tree.map(jnp.zeros_like, stacked_params)
+
+    def step(self, params, grads, state, anchor, lr):
+        g = self._decayed(grads, params)
+        corrected = jax.tree.map(
+            lambda gi, d, t: gi + (t.astype(gi.dtype) - d.astype(gi.dtype)),
+            g, state["d_prev"], state["track"])
+        return self._apply(params, corrected, lr), state
+
+    def finalize(self, params_K, state, anchor, lr):
+        inv = 1.0 / (jnp.float32(self.K) * lr)
+        d_new = jax.tree.map(
+            lambda a, y: ((a.astype(jnp.float32) - y.astype(jnp.float32))
+                          * inv).astype(a.dtype),
+            anchor, params_K)
+        msg = jax.tree.map(lambda t, dn, dp: (t + dn - dp).astype(t.dtype),
+                           state["track"], d_new, state["d_prev"])
+        return {"d_prev": d_new, "track": msg}, params_K
+
+    def state_specs(self, param_specs, client_axis):
+        return {"d_prev": param_specs}
 
 
 # ---------------------------------------------------------------------------
@@ -323,10 +483,20 @@ register_solver("dfedavgm",
 register_solver("dfedsam",
                 lambda cfg: SGDSolver(weight_decay=cfg.weight_decay,
                                       rho=cfg.rho, use_kernel=_uk(cfg)))
-# ... the adaptive-penalty demo ...
+# ... the variance-reduction family (control variates / gradient
+# tracking / adaptive penalty) ...
+register_solver("scaffold",
+                lambda cfg: ScaffoldSolver(weight_decay=cfg.weight_decay,
+                                           K=cfg.K, use_kernel=_uk(cfg)))
+register_solver("dfedtrack",
+                lambda cfg: TrackingSolver(weight_decay=cfg.weight_decay,
+                                           K=cfg.K, use_kernel=_uk(cfg)))
 register_solver("dfedadmm_adaptive",
-                lambda cfg: AdaptiveADMMSolver(lam=cfg.lam,
-                                               use_kernel=_uk(cfg)))
+                lambda cfg: AdaptiveADMMSolver(
+                    lam=cfg.lam, use_kernel=_uk(cfg),
+                    mu=getattr(cfg, "adapt_mu", None),
+                    tau=getattr(cfg, "adapt_tau", None),
+                    bound=getattr(cfg, "adapt_bound", None)))
 # ... and the centralized baselines the paper compares against.
 register_solver("fedavg",
                 lambda cfg: SGDSolver(weight_decay=cfg.weight_decay),

@@ -56,6 +56,16 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--lam", type=float, default=0.1)
     ap.add_argument("--rho", type=float, default=0.1)
+    ap.add_argument("--adapt-mu", type=float, default=10.0,
+                    help="dfedadmm_adaptive: residual-balancing margin mu "
+                         "(rebalance fires when one residual exceeds mu x "
+                         "the other)")
+    ap.add_argument("--adapt-tau", type=float, default=2.0,
+                    help="dfedadmm_adaptive: multiplicative penalty step "
+                         "applied when the balance margin is crossed")
+    ap.add_argument("--adapt-bound", type=float, default=8.0,
+                    help="dfedadmm_adaptive: cap on the per-client penalty "
+                         "scale (lam_scale stays in [1/bound, bound])")
     ap.add_argument("--topology", default="random")
     ap.add_argument("--transport", default="dense", choices=TRANSPORTS,
                     help="communication transport (pushsum for directed "
@@ -182,6 +192,8 @@ def main(argv=None) -> int:
         seed=args.seed)
     dfl_cfg = DFLConfig(algorithm=args.algorithm, m=m_eff, K=args.k,
                         lr=args.lr, lam=args.lam, rho=args.rho,
+                        adapt_mu=args.adapt_mu, adapt_tau=args.adapt_tau,
+                        adapt_bound=args.adapt_bound,
                         topology=args.topology,
                         transport=args.transport, codec=args.codec,
                         codec_bits=args.codec_bits, codec_k=args.codec_k,

@@ -128,15 +128,19 @@ def dfl_state_specs(param_tree: PyTree, cfg: ModelConfig,
     from repro.core.dfl import DFLConfig, DFLState
     ps = param_specs(param_tree, cfg, par, stacked_client=True)
     solver = solvers_lib.make_solver(DFLConfig(algorithm=algorithm))
-    comm = None
+    comm = {}
     if dfl_cfg is not None:
         from repro.core import comm as comm_lib
-        comm = {}
         if dfl_cfg.transport == "pushsum":
             comm["ps_weight"] = P(par.client_axis)
         if comm_lib.make_codec(dfl_cfg).stateful:
             comm["residual"] = ps
-        comm = comm or None
+    if solver.tracks:
+        # the gossip-carried tracking buffer (comm.init_comm_state
+        # allocates it for any transport/codec, so the spec exists even
+        # without a dfl_cfg): param-shaped, stacked over the client axis
+        comm["track"] = ps
+    comm = comm or None
     return DFLState(params=ps,
                     solver=solver.state_specs(ps, par.client_axis),
                     rng=P(par.client_axis, None),

@@ -65,6 +65,10 @@ def test_full_cohort_bit_identical_to_dense(algorithm):
                       make_sampler(M), rounds=4, seed=1)
     _tree_equal(sd.params, sv.params)
     _tree_equal(sd.solver, sv.solver)
+    # comm covers the gossip-carried tracking buffer of the
+    # variance-reduction family (scaffold / dfedtrack); None == None
+    # for the stateless rest
+    _tree_equal(sd.comm, sv.comm)
     assert hd["loss"] == hv["loss"]
     assert hd["consensus_sq"] == hv["consensus_sq"]
     assert hd["dual_norm"] == hv["dual_norm"]
@@ -81,6 +85,8 @@ def test_full_cohort_bit_identical_masked(algorithm):
                       DFLConfig(n_virtual=M, **kw),
                       make_sampler(M), rounds=4, seed=1)
     _tree_equal(sd.params, sv.params)
+    _tree_equal(sd.solver, sv.solver)
+    _tree_equal(sd.comm, sv.comm)
     assert hd["loss"] == hv["loss"]
     assert hd["participation"] == hv["participation"]
 

@@ -1,0 +1,214 @@
+"""Cross-layer correctness matrix for the variance-reduction family.
+
+Every new solver (scaffold / dfedtrack / dfedadmm_adaptive) is driven
+through every transport x codec x execution x participation regime the
+system composes, in one fixture-driven file:
+
+    solver     x {dense, ppermute, pushsum, hier}
+               x {identity, int8, fp8}
+               x {sync, async}
+               x {full, masked, cohort}
+
+and each cell asserts the same three invariant groups:
+
+  * state shapes — the solver allocates exactly its declared buffers,
+    stacked (m, ...), and tracking solvers carry exactly one
+    gossip-slot ``comm["track"]`` of param shape;
+  * Definition-1 — the mixing plan the run was built on is doubly
+    stochastic (row- AND column-stochastic; column-stochastic for the
+    push-sum de-biased path), so the population mean is conserved;
+  * telemetry — losses finite, lr positive, wire bytes counted every
+    round, participation / staleness inside their contracts.
+
+A representative subset covering every axis value runs in the fast
+tier; the exhaustive 216-cell product runs under ``-m slow``.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm as comm_lib, gossip, solvers
+from repro.core.dfl import DFLConfig, simulate
+from repro.core.participation import ParticipationSpec
+
+M, K = 4, 2
+
+SOLVERS = ["scaffold", "dfedtrack", "dfedadmm_adaptive"]
+# transport -> the topology it is defined over (push-sum needs a
+# directed graph; the rest ride the symmetric ring)
+TRANSPORTS = [("dense", "ring"), ("ppermute", "ring"),
+              ("pushsum", "dring"), ("hier", "ring")]
+CODECS = ["identity", "int8", "fp8"]
+EXECUTIONS = ["sync", "async"]
+REGIMES = ["full", "masked", "cohort"]
+
+# what each solver owns, and what rides the gossip slot
+SOLVER_STATE_KEYS = {"scaffold": {"cv"},
+                     "dfedtrack": {"d_prev"},
+                     "dfedadmm_adaptive": {"dual", "lam_scale"}}
+TRACKING = {"scaffold", "dfedtrack"}
+
+
+def _params():
+    return {"w": jnp.zeros((3, 2), jnp.float32),
+            "b": jnp.zeros((2,), jnp.float32)}
+
+
+def _loss(p, batch, r):
+    x, y = batch
+    return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+
+def _sampler(m, seed=0):
+    def sample(t):
+        rng = np.random.default_rng((seed, t))
+        x = rng.standard_normal((m, K, 4, 3)).astype(np.float32)
+        y = np.tanh(x @ rng.standard_normal((3, 2)).astype(np.float32))
+        return (jnp.asarray(x), jnp.asarray(y.astype(np.float32)))
+    return sample
+
+
+def _config(algo, transport, topology, codec, execution, regime):
+    kw = dict(algorithm=algo, m=M, K=K, lr=0.05, topology=topology,
+              transport=transport, codec=codec)
+    if transport == "hier":
+        kw["clusters"] = 2
+    if execution == "async":
+        kw.update(network="wan-lan", execution="async", tick_s=0.02,
+                  max_staleness=3)
+    if regime == "masked":
+        kw["participation"] = ParticipationSpec(mode="fraction", p=0.5,
+                                                seed=3)
+    elif regime == "cohort":
+        kw["n_virtual"] = 2 * M
+    return DFLConfig(**kw)
+
+
+def _run(algo, transport, topology, codec, execution, regime, rounds=2):
+    cfg = _config(algo, transport, topology, codec, execution, regime)
+    state, hist = simulate(_loss, None, _params(), cfg, _sampler(M),
+                           rounds=rounds, seed=1)
+    return cfg, state, hist
+
+
+def _assert_invariants(cfg, state, hist, algo, transport, topology,
+                       execution, regime, rounds):
+    params = _params()
+    # --- state shapes ----------------------------------------------------
+    for name, leaf in params.items():
+        got = state.params[name]
+        assert got.shape == (M,) + leaf.shape, (name, got.shape)
+        assert got.dtype == leaf.dtype
+    assert set(state.solver) == SOLVER_STATE_KEYS[algo]
+    for key in SOLVER_STATE_KEYS[algo] - {"lam_scale"}:
+        for name, leaf in params.items():
+            assert state.solver[key][name].shape == (M,) + leaf.shape
+    if "lam_scale" in SOLVER_STATE_KEYS[algo]:
+        assert state.solver["lam_scale"].shape == (M,)
+
+    comm = state.comm or {}
+    if algo in TRACKING:
+        assert "track" in comm, "tracking solver lost its gossip slot"
+        for name, leaf in params.items():
+            t = comm["track"][name]
+            assert t.shape == (M,) + leaf.shape
+            assert bool(jnp.isfinite(t).all())
+    else:
+        assert "track" not in comm
+    if transport == "pushsum":
+        pi = np.asarray(comm["ps_weight"])
+        assert (pi > 0).all()
+        np.testing.assert_allclose(pi.sum(), 1.0, atol=1e-5)
+    if comm_lib.make_codec(cfg).stateful:
+        for leaf in jax.tree.leaves(comm["residual"]):
+            assert bool(jnp.isfinite(leaf).all())
+
+    # --- Definition-1 on the plan the run was built over -----------------
+    spec = gossip.make_gossip(topology, M)
+    if transport == "pushsum":
+        np.testing.assert_allclose(spec.matrix.sum(axis=0), 1.0,
+                                   atol=1e-6)  # column-stochastic
+    elif transport == "hier":
+        plan = comm_lib.make_transport(cfg).prepare(None)
+        for tier in ("intra", "inter"):
+            gossip.validate_gossip_matrix(np.asarray(plan[tier]))
+    else:
+        gossip.validate_gossip_matrix(spec.matrix)
+
+    # --- telemetry --------------------------------------------------------
+    assert len(hist["loss"]) == rounds
+    loss = np.asarray(hist["loss"])
+    if execution == "async" and regime == "cohort":
+        # a tick with no ready cohort measures nothing (NaN by contract)
+        ticked = np.asarray(hist["ticked"])
+        assert np.isfinite(loss[ticked > 0]).all()
+    else:
+        assert np.isfinite(loss).all()
+    assert (np.asarray(hist["lr"]) > 0).all()
+    assert len(hist["wire_bytes"]) == rounds
+    assert all(wb >= 0 for wb in hist["wire_bytes"])
+    assert any(wb > 0 for wb in hist["wire_bytes"])
+    if regime == "masked" and execution == "sync":
+        part = np.asarray(hist["participation"])
+        assert ((part >= 0.0) & (part <= 1.0)).all()
+    if execution == "async":
+        assert all(0.0 <= f <= 1.0 for f in hist["ticked"])
+        if regime != "cohort":
+            # the virtualized async loop paces by cohort readiness, not
+            # per-tick staleness — only the device-resident engine
+            # reports the staleness telemetry
+            assert all(0 <= s <= cfg.max_staleness
+                       for s in hist["staleness"])
+
+
+# representative diagonal: every axis value appears at least once per
+# invariant group, one cell per line
+FAST_CELLS = [
+    ("scaffold", "dense", "identity", "sync", "full"),
+    ("scaffold", "ppermute", "int8", "sync", "masked"),
+    ("scaffold", "pushsum", "identity", "async", "full"),
+    ("dfedtrack", "dense", "fp8", "async", "masked"),
+    ("dfedtrack", "hier", "identity", "sync", "cohort"),
+    ("dfedtrack", "pushsum", "int8", "sync", "full"),
+    ("dfedadmm_adaptive", "dense", "int8", "async", "cohort"),
+    ("dfedadmm_adaptive", "hier", "fp8", "sync", "masked"),
+    ("dfedadmm_adaptive", "ppermute", "identity", "sync", "full"),
+]
+
+_TOPO = dict(TRANSPORTS)
+
+
+@pytest.mark.parametrize("algo,transport,codec,execution,regime", FAST_CELLS)
+def test_matrix_fast(algo, transport, codec, execution, regime):
+    topology = _TOPO[transport]
+    cfg, state, hist = _run(algo, transport, topology, codec, execution,
+                            regime, rounds=2)
+    _assert_invariants(cfg, state, hist, algo, transport, topology,
+                       execution, regime, rounds=2)
+
+
+FULL_CELLS = [c for c in itertools.product(SOLVERS,
+                                           [t for t, _ in TRANSPORTS],
+                                           CODECS, EXECUTIONS, REGIMES)
+              if c not in FAST_CELLS]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algo,transport,codec,execution,regime", FULL_CELLS)
+def test_matrix_full(algo, transport, codec, execution, regime):
+    topology = _TOPO[transport]
+    cfg, state, hist = _run(algo, transport, topology, codec, execution,
+                            regime, rounds=1)
+    _assert_invariants(cfg, state, hist, algo, transport, topology,
+                       execution, regime, rounds=1)
+
+
+def test_matrix_covers_every_axis_value():
+    """The fast diagonal really touches every value of every axis."""
+    for i, values in enumerate([SOLVERS, [t for t, _ in TRANSPORTS],
+                                CODECS, EXECUTIONS, REGIMES]):
+        seen = {cell[i] for cell in FAST_CELLS}
+        assert seen == set(values), (i, seen)

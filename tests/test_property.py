@@ -368,3 +368,103 @@ def test_async_scheduler_invariants(m, seed, tick_s, max_staleness, mode):
         assert ev.sim_dt >= 0.0
         assert (ev.steps[~ev.active] == 0).all()
         assert (ev.steps[ev.active] == cfg.K).all()
+
+
+# ---------------------------------------------------------------------------
+# Variance-reduction solver invariants (scaffold / dfedtrack)
+# ---------------------------------------------------------------------------
+
+def _vr_run(algo, m, K, rounds, seed, topo="ring"):
+    """Run ``rounds`` full-participation gossip rounds; return final state."""
+    import jax
+    from repro.core import DFLConfig, make_gossip, make_train_round
+    from repro.core.dfl import init_state
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(6,)), jnp.float32)}
+
+    def loss(p, batch, r):
+        return jnp.mean((p["w"] - batch["t"]) ** 2)
+
+    cfg = DFLConfig(algorithm=algo, m=m, K=K, lr=0.1, weight_decay=0.0,
+                    topology=topo)
+    spec = make_gossip(topo, m, weights="metropolis")
+    plan = jnp.asarray(spec.matrix, jnp.float32)
+    state = init_state(params, cfg, seed=seed)
+    rf = jax.jit(make_train_round(loss, cfg, spec=spec))
+    for t in range(rounds):
+        r2 = np.random.default_rng(seed * 977 + t)
+        batches = {"t": jnp.asarray(r2.normal(size=(m, K, 6)), jnp.float32)}
+        state, _ = rf(state, batches, plan)
+    return state
+
+
+@settings(max_examples=10)
+@given(m=st.integers(2, 6), K=st.integers(1, 4), rounds=st.integers(1, 3),
+       topo=st.sampled_from(["ring", "full", "exp"]),
+       seed=st.integers(0, 1000))
+def test_scaffold_corrections_sum_to_zero_full_participation(m, K, rounds,
+                                                             topo, seed):
+    """SCAFFOLD's correction ĉ_i − c_i sums to zero over the population
+    at full participation: metropolis weights are doubly stochastic, so
+    gossip preserves Σc — the variate estimates never inject net drift
+    into the population mean, for any topology / K / round count."""
+    state = _vr_run("scaffold", m, K, rounds, seed, topo=topo)
+    cv = np.asarray(state.solver["cv"]["w"], np.float64)
+    ch = np.asarray(state.comm["track"]["w"], np.float64)
+    scale = max(1.0, np.abs(cv).max())
+    np.testing.assert_allclose((ch - cv).sum(axis=0), 0.0,
+                               atol=1e-5 * m * scale)
+
+
+@settings(max_examples=10)
+@given(m=st.integers(2, 6), K=st.integers(1, 4), rounds=st.integers(1, 4),
+       topo=st.sampled_from(["ring", "full", "exp"]),
+       seed=st.integers(0, 1000))
+def test_tracking_variable_conserved_under_row_stochastic_plans(m, K,
+                                                                rounds,
+                                                                topo, seed):
+    """Gradient tracking's defining invariant: Σ_i t_i == Σ_i d_i after
+    every round.  The message t + d_new − d_prev telescopes the local
+    descent directions, and doubly stochastic mixing preserves the sum —
+    so the population-mean tracker always equals the population-mean
+    descent direction."""
+    state = _vr_run("dfedtrack", m, K, rounds, seed, topo=topo)
+    t = np.asarray(state.comm["track"]["w"], np.float64)
+    d = np.asarray(state.solver["d_prev"]["w"], np.float64)
+    scale = max(1.0, np.abs(d).max())
+    np.testing.assert_allclose(t.sum(axis=0), d.sum(axis=0),
+                               atol=1e-5 * m * scale)
+
+
+@settings(max_examples=10)
+@given(m=st.integers(2, 6), seed=st.integers(0, 1000),
+       topo=st.sampled_from(["ring", "full"]))
+def test_scaffold_zero_variates_reduce_to_dpsgd_bitwise(m, seed, topo):
+    """With c_i = c = 0 (the init state) and K = 1, SCAFFOLD's corrected
+    step IS plain D-PSGD: the first round must match bitwise, params and
+    telemetry both.  The two algorithms compile to different XLA graphs
+    (scaffold's correction add changes what fuses into an FMA), so the
+    fixture keeps every product exact — lr = 0.125 and an 8-vector loss
+    (gradient scale 2/8 = 0.25) — making fusion differences invisible."""
+    import jax
+    from repro.core import DFLConfig, make_gossip, make_train_round
+    from repro.core.dfl import init_state
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    batches = {"t": jnp.asarray(rng.normal(size=(m, 1, 8)), jnp.float32)}
+
+    def loss(p, batch, r):
+        return jnp.mean((p["w"] - batch["t"]) ** 2)
+
+    spec = gossip.make_gossip(topo, m, weights="metropolis")
+    plan = jnp.asarray(spec.matrix, jnp.float32)
+    outs = {}
+    for algo in ("scaffold", "dpsgd"):
+        cfg = DFLConfig(algorithm=algo, m=m, K=1, lr=0.125,
+                        weight_decay=0.0, topology=topo)
+        state = init_state(params, cfg, seed=seed)
+        rf = jax.jit(make_train_round(loss, cfg, spec=spec))
+        st, met = rf(state, batches, plan)
+        outs[algo] = (np.asarray(st.params["w"]), float(met["loss"]))
+    np.testing.assert_array_equal(outs["scaffold"][0], outs["dpsgd"][0])
+    assert outs["scaffold"][1] == outs["dpsgd"][1]

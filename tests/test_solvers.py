@@ -221,6 +221,134 @@ def test_masked_round_bit_identical_to_seed(algo):
 
 
 # ---------------------------------------------------------------------------
+# SCAFFOLD: bit-checked NumPy reference for the control-variate round
+# ---------------------------------------------------------------------------
+#
+# One gossip round of ``scaffold`` is pinned against a from-scratch NumPy
+# transcription of SCAFFOLD option II (Karimireddy et al.) threaded
+# through Definition-1 mixing.  Bitwise equality against a straight-line
+# NumPy loop is only achievable when every product XLA may fuse into an
+# FMA is exact, so the fixture is engineered around powers of two:
+#
+#   * lr = 0.125 and K = 4, so K*lr = 0.5 and 1/(K*lr) = 2.0 exactly;
+#   * loss = mean((w - t)^2) over an 8-vector, so the gradient factor
+#     2/8 = 0.25 is exact (XLA fuses ``g + (c_hat - c_i)`` into
+#     fma(0.25, w - t, delta), which only equals the separately rounded
+#     NumPy expression when the product is exact);
+#   * the mixing plan is the two-term circulant W[i,i] = W[i,i+1] = 0.5,
+#     doubly stochastic with power-of-two weights, so each mixed entry
+#     is one exact-scaled addition regardless of contraction order.
+#
+# Any deviation in the update algebra — correction applied to the wrong
+# operand, variates mixed before the c_i+ update, a masked client leaking
+# a stale message — shows up as a bit difference, not an epsilon.
+
+_SC_M, _SC_K, _SC_N = 4, 4, 8
+
+
+def _scaffold_setup():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(_SC_N,)), jnp.float32)}
+
+    def batches_at(t):
+        r = np.random.default_rng(50 + t)
+        return {"t": jnp.asarray(r.normal(size=(_SC_M, _SC_K, _SC_N)),
+                                 jnp.float32)}
+
+    def loss(p, batch, r):
+        return jnp.mean((p["w"] - batch["t"]) ** 2)
+
+    W = np.zeros((_SC_M, _SC_M), np.float32)
+    for i in range(_SC_M):
+        W[i, i] = 0.5
+        W[i, (i + 1) % _SC_M] = 0.5
+    return params, batches_at, loss, W
+
+
+def _scaffold_np_round(P, cv, ch, b, Wm, active=None, steps=None):
+    """One NumPy SCAFFOLD round: (params, c_i, mixed track) -> same.
+
+    ``P``/``cv``/``ch`` are (m, n) params, control variates, and the
+    gossip-averaged variate estimate; ``b`` is (m, K, n) targets; ``Wm``
+    the (already masked-and-renormalized) plan.
+    """
+    m, K = b.shape[0], b.shape[1]
+    lr = np.float32(0.125)
+    grad_scale = np.float32(2.0 / _SC_N)
+    act = np.ones(m, bool) if active is None else np.asarray(active, bool)
+    stp = np.full(m, K) if steps is None else np.asarray(steps)
+    ys = P.copy()
+    newcv = cv.copy()
+    msg = ch.copy()       # an inactive client re-transmits nothing: the
+    for i in range(m):    # identity plan row holds its buffered variate
+        if not act[i]:
+            continue
+        y = P[i].copy()
+        for k in range(int(stp[i])):
+            g = grad_scale * (y - b[i, k])
+            corrected = g + (ch[i] - cv[i])
+            y = (y - lr * corrected).astype(np.float32)
+        inv = np.float32(1.0) / (np.float32(K) * lr)
+        d = ((P[i] - y) * inv).astype(np.float32)
+        newcv[i] = (cv[i] - ch[i] + d).astype(np.float32)
+        msg[i] = newcv[i]
+        ys[i] = y
+    mixedP = np.einsum("ij,jk->ik", Wm, ys).astype(np.float32)
+    mixedT = np.einsum("ij,jk->ik", Wm, msg).astype(np.float32)
+    return mixedP, newcv, mixedT
+
+
+def test_scaffold_matches_numpy_reference_full():
+    params, batches_at, loss, W = _scaffold_setup()
+    cfg = DFLConfig(algorithm="scaffold", m=_SC_M, K=_SC_K, lr=0.125,
+                    lr_decay=1.0, weight_decay=0.0, topology="ring")
+    state = init_state(params, cfg, seed=0)
+    rf = jax.jit(make_train_round(loss, cfg, spec=make_gossip("ring", _SC_M)))
+
+    P = np.broadcast_to(np.asarray(params["w"])[None],
+                        (_SC_M, _SC_N)).copy()
+    cv = np.zeros((_SC_M, _SC_N), np.float32)
+    ch = np.zeros((_SC_M, _SC_N), np.float32)
+    for t in range(3):
+        state, met = rf(state, batches_at(t), jnp.asarray(W))
+        P, cv, ch = _scaffold_np_round(
+            P, cv, ch, np.asarray(batches_at(t)["t"]), W)
+        assert np.isfinite(float(met["loss"]))
+    np.testing.assert_array_equal(np.asarray(state.params["w"]), P)
+    np.testing.assert_array_equal(np.asarray(state.solver["cv"]["w"]), cv)
+    np.testing.assert_array_equal(np.asarray(state.comm["track"]["w"]), ch)
+
+
+def test_scaffold_matches_numpy_reference_masked():
+    """Partial participation: one inactive client, one straggler.  The
+    inactive client's params, c_i, AND buffered variate estimate must
+    all hold bit-exactly; the straggler's K-step normalization
+    1/(K*lr) still uses the full K (option II), not its step count."""
+    params, batches_at, loss, W = _scaffold_setup()
+    cfg = DFLConfig(algorithm="scaffold", m=_SC_M, K=_SC_K, lr=0.125,
+                    lr_decay=1.0, weight_decay=0.0, topology="ring",
+                    participation=ParticipationSpec(mode="uniform", p=0.75))
+    state = init_state(params, cfg, seed=0)
+    rf = jax.jit(make_train_round(loss, cfg, spec=make_gossip("ring", _SC_M)))
+
+    active = np.array([True, False, True, True])
+    steps = np.array([_SC_K, 0, 2, _SC_K], np.int32)
+    Wm = mask_and_renormalize(W, active)
+    P = np.broadcast_to(np.asarray(params["w"])[None],
+                        (_SC_M, _SC_N)).copy()
+    cv = np.zeros((_SC_M, _SC_N), np.float32)
+    ch = np.zeros((_SC_M, _SC_N), np.float32)
+    for t in range(3):
+        state, _ = rf(state, batches_at(t), jnp.asarray(Wm),
+                      jnp.asarray(active), jnp.asarray(steps))
+        P, cv, ch = _scaffold_np_round(
+            P, cv, ch, np.asarray(batches_at(t)["t"]), Wm, active, steps)
+    np.testing.assert_array_equal(np.asarray(state.params["w"]), P)
+    np.testing.assert_array_equal(np.asarray(state.solver["cv"]["w"]), cv)
+    np.testing.assert_array_equal(np.asarray(state.comm["track"]["w"]), ch)
+
+
+# ---------------------------------------------------------------------------
 # Solver-owned state: no dead parameter-sized buffers
 # ---------------------------------------------------------------------------
 
@@ -244,6 +372,16 @@ def test_init_state_allocates_only_what_the_solver_uses():
                                       m=M, K=K))
     assert set(st.solver) == {"dual", "lam_scale"}
     assert st.solver["lam_scale"].shape == (M,)
+
+    # variance-reduction solvers: one param-shaped solver buffer each,
+    # plus the gossip-carried tracking slot in comm (NOT solver state)
+    st = init_state(params, DFLConfig(algorithm="scaffold", m=M, K=K))
+    assert set(st.solver) == {"cv"}
+    assert set(st.comm) == {"track"}
+
+    st = init_state(params, DFLConfig(algorithm="dfedtrack", m=M, K=K))
+    assert set(st.solver) == {"d_prev"}
+    assert set(st.comm) == {"track"}
 
 
 def test_deprecated_dual_momentum_properties_removed():
@@ -306,8 +444,10 @@ def test_registered_toy_solver_runs_through_simulate():
 def test_unknown_algorithm_lists_registry():
     with pytest.raises(ValueError, match="registered DFL solvers"):
         DFLConfig(algorithm="smoke-signals")
-    # CFL-scoped solvers are not silently runnable on the gossip round
-    with pytest.raises(ValueError):
+    # CFL-scoped solvers are not silently runnable on the gossip round —
+    # and the error must say which registry WAS searched, so a user who
+    # typo'd the scope sees the fix in the message
+    with pytest.raises(ValueError, match="registered DFL solvers"):
         DFLConfig(algorithm="fedavg")
 
 
